@@ -1,0 +1,85 @@
+//! Topology explorer: how the communication graph shapes convergence.
+//!
+//! Sweeps the standard families (ring, torus, complete, star, hypercube,
+//! barbell, Erdős–Rényi) at a fixed node count, printing the spectral
+//! quantities of Table 1 plus the *measured* CHOCO-Gossip rounds to reach
+//! a target consensus accuracy — making the δ²ω dependence of Theorem 2
+//! tangible.
+//!
+//! ```text
+//! cargo run --release --example topology_explorer -- [--nodes 16] [--dim 200]
+//! ```
+
+use choco::compress::RandK;
+use choco::consensus::{make_nodes, Scheme, SyncRunner};
+use choco::linalg::vecops;
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule, Spectrum};
+use choco::util::args::Args;
+use choco::util::rng::Rng;
+
+fn rounds_to_accuracy(graph: &Graph, d: usize, gamma: f64, tol: f64, max_rounds: usize) -> Option<usize> {
+    let n = graph.n();
+    let w = mixing_matrix(graph, MixingRule::Uniform);
+    let lw = local_weights(graph, &w);
+    let mut rng = Rng::new(99);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let target = vecops::mean_of(&x0);
+    let e0: f64 = x0.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / n as f64;
+    let scheme = Scheme::Choco { gamma, op: Box::new(RandK { k: (d / 10).max(1) }) };
+    let mut runner = SyncRunner::new(make_nodes(&scheme, &x0, &lw), graph, 5);
+    for round in 1..=max_rounds {
+        runner.step();
+        if runner.error_vs(&target) < tol * e0 {
+            return Some(round);
+        }
+    }
+    None
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("args");
+    let n = args.usize_or("nodes", 16).unwrap();
+    let d = args.usize_or("dim", 200).unwrap();
+    let mut rng = Rng::new(1);
+
+    let graphs: Vec<Graph> = vec![
+        Graph::ring(n),
+        Graph::torus_square(n),
+        Graph::complete(n),
+        Graph::star(n),
+        Graph::hypercube((n as f64).log2() as u32),
+        Graph::barbell(n / 2),
+        Graph::erdos_renyi(n, 0.3, &mut rng),
+    ];
+
+    println!(
+        "{:<14} {:>8} {:>9} {:>7} {:>6} {:>16}",
+        "topology", "δ", "1/δ", "β", "diam", "rounds→1e-6·e₀"
+    );
+    for g in &graphs {
+        let w = mixing_matrix(g, MixingRule::Uniform);
+        let s = Spectrum::of(&w);
+        // Practical γ: stability is governed by the compression quality
+        // (γ ≈ ω is the stable scale — cf. the paper's tuned γ = 0.011 for
+        // ω = 0.01 in Table 3); γ*(δ,β,ω) is far more conservative.
+        let gamma = 0.05; // ≈ ω/2 for ω = 0.1 (rand 10%) — stable everywhere
+        let rounds = rounds_to_accuracy(g, d, gamma, 1e-6, 60_000);
+        println!(
+            "{:<14} {:>8.4} {:>9.1} {:>7.3} {:>6} {:>16}",
+            g.name(),
+            s.delta,
+            1.0 / s.delta,
+            s.beta,
+            g.diameter().map(|x| x.to_string()).unwrap_or("∞".into()),
+            rounds.map(|r| r.to_string()).unwrap_or_else(|| ">60000".into())
+        );
+    }
+    println!("\nTable-1 scaling: ring 1/δ = O(n²), torus O(n), complete O(1) — and the");
+    println!("measured round counts track 1/(δ²ω) as Theorem 2 predicts.");
+}

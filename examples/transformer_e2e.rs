@@ -1,0 +1,37 @@
+//! End-to-end: decentralized transformer-LM training with CHOCO-SGD.
+//!
+//! All three layers compose: the Pallas matmul tiles (L1) inside the
+//! AOT-lowered jax train step (L2), executed by per-node PJRT engines and
+//! coordinated by the rust CHOCO-SGD actor runtime (L3), which exchanges
+//! top-k-compressed flat parameter deltas over real channels.
+//!
+//! ```text
+//! make artifacts
+//! cargo run --release --example transformer_e2e -- [--artifact transformer_step_small]
+//!     [--nodes 4] [--steps 60] [--lr 0.1] [--gamma 0.5] [--k-pct 10]
+//! ```
+//!
+//! The recorded EXPERIMENTS.md run uses `transformer_step_tiny`
+//! (117k params — CI-scale on this 1-core box); `transformer_step_small`
+//! (464k params) is the same code path at larger scale, and the artifact
+//! table in python/compile/aot.py scales to arbitrary model sizes.
+
+use choco::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("args");
+    let artifact = args.get_or("artifact", "transformer_step_tiny");
+    let nodes = args.usize_or("nodes", 4).unwrap();
+    let steps = args.usize_or("steps", 60).unwrap();
+    let gamma = args.f64_or("gamma", 0.5).unwrap();
+    let lr = args.f64_or("lr", 0.1).unwrap();
+    let k_pct = args.f64_or("k-pct", 10.0).unwrap();
+    let out = std::path::PathBuf::from(args.get_or("out", "results"));
+    if let Err(e) =
+        choco::experiments::e2e::run_transformer_e2e(artifact, nodes, steps, gamma, lr, k_pct, &out)
+    {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+    println!("OK");
+}

@@ -1,0 +1,169 @@
+"""AOT compile path: lower every L2 function to HLO *text* artifacts.
+
+HLO text (not `.serialize()` protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla_extension
+0.5.1 used by the rust `xla` crate rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Writes one `<name>.hlo.txt` per artifact plus `manifest.json` describing
+shapes/dtypes so the rust runtime can validate inputs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .transformer import TransformerConfig, init_params, param_count
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    jdt = {"f32": jnp.float32, "i32": jnp.int32}[dtype]
+    return jax.ShapeDtypeStruct(shape, jdt)
+
+
+def qsgd_tau(s: int, d: int) -> float:
+    return 1.0 + min(d / (s * s), (d ** 0.5) / s)
+
+
+def artifact_table():
+    """name -> (fn, [input ShapeDtypeStructs], meta dict)."""
+    arts = {}
+
+    def logreg(name, b, d, lam):
+        arts[name] = (
+            model.logreg_grad_fn(lam),
+            [_spec((d,)), _spec((b, d)), _spec((b,))],
+            {"kind": "logreg_grad", "batch": b, "dim": d, "lambda": lam},
+        )
+
+    # epsilon-scale (d=2000) and test-scale shapes.
+    logreg("logreg_grad_d2000_b32", 32, 2000, 1.0 / 4096.0)
+    logreg("logreg_grad_d64_b16", 16, 64, 1.0 / 256.0)
+
+    def qsgd(name, s, d):
+        tau = qsgd_tau(s, d)
+        arts[name] = (
+            model.qsgd_fn(s, tau),
+            [_spec((d,)), _spec((d,))],
+            {"kind": "qsgd", "s": s, "dim": d, "tau": tau},
+        )
+
+    qsgd("qsgd_s16_d2000", 16, 2000)
+    qsgd("qsgd_s16_d64", 16, 64)
+
+    def choco_round(name, n, d, gamma):
+        arts[name] = (
+            model.choco_round_fn(gamma),
+            [_spec((n, d)), _spec((n, d)), _spec((n, d)), _spec((n, n))],
+            {"kind": "choco_round", "n": n, "dim": d, "gamma": gamma},
+        )
+
+    choco_round("choco_round_n25_d2000", 25, 2000, 0.046)
+    choco_round("choco_round_n8_d64", 8, 64, 0.2)
+
+    def transformer(name, cfg):
+        nparams = param_count(cfg)
+        arts[name] = (
+            model.transformer_step_fn(cfg),
+            [
+                _spec((nparams,)),
+                _spec((cfg.batch, cfg.seq), "i32"),
+                _spec((cfg.batch, cfg.seq), "i32"),
+            ],
+            {
+                "kind": "transformer_step",
+                "vocab": cfg.vocab,
+                "seq": cfg.seq,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "batch": cfg.batch,
+                "n_params": nparams,
+            },
+        )
+
+    transformer("transformer_step_tiny", TransformerConfig())
+    transformer(
+        "transformer_step_small",
+        TransformerConfig(vocab=512, seq=32, d_model=128, n_layers=2, n_heads=4, batch=8),
+    )
+    return arts
+
+
+def lower_artifact(name, fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": 1, "artifacts": []}
+    for name, (fn, specs, meta) in artifact_table().items():
+        if only and name not in only:
+            continue
+        text = lower_artifact(name, fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+                ],
+                "meta": meta,
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    # transformer init vectors are produced here too (python owns init;
+    # rust owns training) — one per transformer artifact.
+    for name, (fn, specs, meta) in artifact_table().items():
+        if only and name not in only:
+            continue
+        if meta["kind"] != "transformer_step":
+            continue
+        cfg = TransformerConfig(
+            vocab=meta["vocab"],
+            seq=meta["seq"],
+            d_model=meta["d_model"],
+            n_layers=meta["n_layers"],
+            n_heads=meta["n_heads"],
+            batch=meta["batch"],
+        )
+        flat = init_params(cfg, jax.random.PRNGKey(0))
+        import numpy as np
+
+        np.asarray(flat, dtype=np.float32).tofile(
+            os.path.join(args.out_dir, f"{name}.init.f32")
+        )
+        print(f"init vector for {name}: {flat.shape[0]} params")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""L1: CHOCO gossip mixing step as a Pallas kernel.
+
+Computes `X <- X + gamma (W Xhat - Xhat)` for row-per-node matrices
+(n, d). The gossip matrix W (n, n) is tiny (n <= a few hundred) and stays
+resident in VMEM while (n, Td) tiles of X / Xhat stream through — the
+HBM<->VMEM schedule a TPU implementation would use, expressed via
+BlockSpecs (DESIGN.md §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _largest_divisor_tile
+
+
+def _mix_kernel(gamma: float, x_ref, xhat_ref, w_ref, o_ref):
+    xhat = xhat_ref[...]
+    mixed = jnp.dot(w_ref[...], xhat, preferred_element_type=jnp.float32)
+    o_ref[...] = x_ref[...] + gamma * (mixed - xhat)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def choco_mix(x, xhat, w, gamma: float):
+    """One mixing step. x, xhat: (n, d); w: (n, n)."""
+    n, d = x.shape
+    assert w.shape == (n, n)
+    td = _largest_divisor_tile(d, 256)
+    return pl.pallas_call(
+        functools.partial(_mix_kernel, float(gamma)),
+        grid=(d // td,),
+        in_specs=[
+            pl.BlockSpec((n, td), lambda i: (0, i)),
+            pl.BlockSpec((n, td), lambda i: (0, i)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, td), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(x, xhat, w)

@@ -1,0 +1,30 @@
+"""L1: logistic-regression gradient built from Pallas matmul tiles.
+
+The per-node gradient `a^T (-y sigma(-y a x))/b + lam x` is two tiled
+matvecs (MXU work) around a pointwise logistic (VPU work). Both matvecs
+reuse the shared Pallas matmul kernel; the pointwise part stays in jnp and
+fuses into the same HLO module at lowering time.
+"""
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def logreg_grad(x, a, y, lam: float):
+    """Loss + gradient of the L2-regularized logistic loss.
+
+    Args:
+      x: (d,) parameters; a: (b, d) batch; y: (b,) labels in {-1, +1};
+      lam: static regularizer.
+    Returns:
+      (loss scalar, grad (d,))
+    """
+    b, d = a.shape
+    # z = A x  via the Pallas kernel ((b,d) @ (d,1)).
+    z = matmul(a, x.reshape(d, 1)).reshape(b) * y
+    loss = jnp.mean(jnp.logaddexp(0.0, -z)) + 0.5 * lam * jnp.dot(x, x)
+    coeff = (-y * (1.0 / (1.0 + jnp.exp(z))) / b).reshape(1, b)
+    # grad = coeff A  via the Pallas kernel ((1,b) @ (b,d)).
+    grad = matmul(coeff, a).reshape(d) + lam * x
+    return loss, grad

@@ -1,0 +1,88 @@
+"""L1: tiled Pallas matmul kernel.
+
+The MXU-shaped workhorse shared by the logistic-regression gradient and
+the transformer MLP. Grid is (M/Tm, N/Tn, K/Tk) with accumulation over the
+k axis into the output block — the canonical TPU Pallas matmul schedule:
+A and B tiles stream HBM→VMEM once per (i, j, k) step, the (Tm, Tn)
+accumulator stays resident in VMEM across the k loop.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; lowered-to-HLO interpret kernels run on any backend.
+DESIGN.md §6 carries the real-TPU VMEM/MXU estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _largest_divisor_tile(dim: int, cap: int) -> int:
+    """Largest divisor of `dim` that is <= cap (>=1). Keeps BlockSpecs
+    exact so no masking is needed for the ragged shapes (e.g. d = 2000)."""
+    best = 1
+    for t in range(1, min(dim, cap) + 1):
+        if dim % t == 0:
+            best = t
+    return best
+
+
+def _matmul_pallas(a, b, tm: int, tn: int, tk: int):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul shape mismatch {a.shape} @ {b.shape}"
+    tm = _largest_divisor_tile(m, tm)
+    tn = _largest_divisor_tile(n, tn)
+    tk = _largest_divisor_tile(k, tk)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(a, b, tm: int = 128, tn: int = 128, tk: int = 128):
+    """C = A @ B via the Pallas kernel. Tile caps are clamped to exact
+    divisors of the corresponding dims.
+
+    pallas_call has no built-in transpose rule, so the VJP is supplied
+    explicitly — and the two backward products dA = dC Bᵀ and dB = Aᵀ dC
+    run through the same Pallas kernel, keeping the AOT-lowered training
+    step on the L1 path in both directions.
+    """
+    return _matmul_pallas(a, b, tm, tn, tk)
+
+
+def _matmul_fwd(a, b, tm, tn, tk):
+    return _matmul_pallas(a, b, tm, tn, tk), (a, b)
+
+
+def _matmul_bwd(tm, tn, tk, res, dc):
+    a, b = res
+    da = _matmul_pallas(dc, b.T, tm, tn, tk)
+    db = _matmul_pallas(a.T, dc, tm, tn, tk)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,53 @@
+"""L1: qsgd_s quantization as an elementwise Pallas (VPU) kernel.
+
+The compression operator is the paper's communication hot-spot: every
+gossip message passes through it. Randomness (the dithering noise xi) is
+supplied as an input so the kernel stays deterministic and matches the
+rust coordinator's RNG streams bit-for-bit in tests.
+
+Layout: vectors are processed as (1, d) tiles — TPU VPU lanes want a
+128-multiple minor dimension; tile size is clamped to an exact divisor.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _largest_divisor_tile
+
+
+def _qsgd_kernel(s: float, tau: float, x_ref, xi_ref, norm_ref, o_ref):
+    x = x_ref[...]
+    xi = xi_ref[...]
+    norm = norm_ref[0, 0]
+    safe = jnp.where(norm > 0, norm, 1.0)
+    levels = jnp.floor(s * jnp.abs(x) / safe + xi)
+    q = jnp.sign(x) * (safe / (s * tau)) * levels
+    o_ref[...] = jnp.where(norm > 0, q, jnp.zeros_like(q))
+
+
+@functools.partial(jax.jit, static_argnames=("s", "tau"))
+def qsgd(x, xi, s: int, tau: float):
+    """Quantize a (d,) vector with precomputed uniform noise xi (d,)."""
+    (d,) = x.shape
+    td = _largest_divisor_tile(d, 512)
+    x2 = x.reshape(1, d)
+    xi2 = xi.reshape(1, d)
+    # The norm is a global reduction — computed once in jnp (it fuses into
+    # the surrounding HLO), then broadcast to the kernel as a (1,1) input.
+    norm = jnp.sqrt(jnp.sum(x * x)).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_qsgd_kernel, float(s), float(tau)),
+        grid=(d // td,),
+        in_specs=[
+            pl.BlockSpec((1, td), lambda i: (0, i)),
+            pl.BlockSpec((1, td), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, td), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=True,
+    )(x2, xi2, norm)
+    return out.reshape(d)

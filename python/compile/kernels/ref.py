@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+pytest checks each kernel against these references over hypothesis-swept
+shapes; the rust runtime additionally cross-checks the compiled artifacts
+against its own native implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """C = A @ B."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def logreg_grad_ref(x, a, y, lam):
+    """L2-regularized logistic loss + gradient on one mini-batch.
+
+    Args:
+      x: (d,) parameters.
+      a: (b, d) features.
+      y: (b,) labels in {-1, +1}.
+      lam: scalar regularizer.
+    Returns:
+      (loss scalar, grad (d,))
+    """
+    z = a @ x * y  # (b,)
+    # stable log(1 + exp(-z))
+    loss = jnp.mean(jnp.logaddexp(0.0, -z)) + 0.5 * lam * jnp.dot(x, x)
+    # sigma(-z) = 1/(1+e^z)
+    coeff = -y * (1.0 / (1.0 + jnp.exp(z))) / y.shape[0]
+    grad = a.T @ coeff + lam * x
+    return loss, grad
+
+
+def qsgd_ref(x, xi, s, tau):
+    """qsgd_s quantization (paper §3.5), rescaled by 1/tau.
+
+    Args:
+      x: (d,) vector; xi: (d,) uniform [0,1) noise; s: levels; tau: scale.
+    """
+    norm = jnp.sqrt(jnp.sum(x * x))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    levels = jnp.floor(s * jnp.abs(x) / safe + xi)
+    q = jnp.sign(x) * safe / (s * tau) * levels
+    return jnp.where(norm > 0, q, jnp.zeros_like(x))
+
+
+def choco_mix_ref(x, xhat, w, gamma):
+    """CHOCO gossip mixing: X <- X + gamma (W Xhat - Xhat).
+
+    Row-per-node layout: x, xhat are (n, d); w is (n, n) symmetric
+    doubly-stochastic. Equivalent to the paper's X + gamma Xhat (W - I)
+    in column layout.
+    """
+    return x + gamma * (w @ xhat - xhat)
+
+
+def choco_round_ref(x, xhat, q, w, gamma):
+    """Full CHOCO-Gossip round in matrix form (Appendix B), given the
+    already-compressed updates q (n, d):
+      Xhat' = Xhat + q ;  X' = X + gamma (W Xhat' - Xhat').
+    """
+    xhat_new = xhat + q
+    return choco_mix_ref(x, xhat_new, w, gamma), xhat_new

@@ -1,0 +1,56 @@
+"""L2: the jitted functions that become PJRT artifacts.
+
+Each function here composes the L1 Pallas kernels with fused jnp glue and
+is lowered ONCE by aot.py to HLO text; the rust runtime loads and executes
+the artifacts. Python never runs on the experiment path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.choco_mix import choco_mix
+from .kernels.logreg import logreg_grad
+from .kernels.qsgd import qsgd
+
+
+def logreg_grad_fn(lam: float):
+    """(x (d,), a (b,d), y (b,)) -> (loss, grad). lam is baked in."""
+
+    def fn(x, a, y):
+        loss, grad = logreg_grad(x, a, y, lam)
+        return (loss.astype(jnp.float32), grad.astype(jnp.float32))
+
+    return fn
+
+
+def qsgd_fn(s: int, tau: float):
+    """(x (d,), xi (d,)) -> (q (d,)). s/tau baked in."""
+
+    def fn(x, xi):
+        return (qsgd(x, xi, s, tau).astype(jnp.float32),)
+
+    return fn
+
+
+def choco_round_fn(gamma: float):
+    """One matrix-form CHOCO-Gossip round (Appendix B) given compressed
+    updates q: (x (n,d), xhat (n,d), q (n,d), w (n,n)) ->
+    (x', xhat')."""
+
+    def fn(x, xhat, q, w):
+        xhat_new = xhat + q
+        x_new = choco_mix(x, xhat_new, w, gamma)
+        return (x_new.astype(jnp.float32), xhat_new.astype(jnp.float32))
+
+    return fn
+
+
+def transformer_step_fn(cfg):
+    """(flat params, tokens (b,s) i32, targets (b,s) i32) ->
+    (loss, flat grad)."""
+    from . import transformer
+
+    def fn(flat, tokens, targets):
+        loss, grad = transformer.train_step(cfg, flat, tokens, targets)
+        return (loss.astype(jnp.float32), grad.astype(jnp.float32))
+
+    return fn

@@ -1,0 +1,159 @@
+"""L2: decoder-only transformer language model over a flat parameter
+vector.
+
+The end-to-end example trains this model with CHOCO-SGD across simulated
+nodes: the rust coordinator owns one flat f32 parameter vector per node
+(that is what the gossip algorithms exchange and compress) and calls the
+AOT-compiled `transformer_step` artifact for loss + flat gradient.
+
+The MLP matmuls run through the shared Pallas matmul kernel (L1);
+attention and layernorm stay in jnp and fuse into the same HLO module.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 256
+    seq: int = 32
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    batch: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+# ---- flat parameter layout -------------------------------------------------
+
+def param_shapes(cfg: TransformerConfig):
+    """Ordered (name, shape) list defining the flat layout."""
+    shapes = [("embed", (cfg.vocab, cfg.d_model)), ("pos", (cfg.seq, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        shapes += [
+            (f"l{l}.ln1_g", (cfg.d_model,)),
+            (f"l{l}.ln1_b", (cfg.d_model,)),
+            (f"l{l}.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{l}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.ln2_g", (cfg.d_model,)),
+            (f"l{l}.ln2_b", (cfg.d_model,)),
+            (f"l{l}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    shapes += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    # lm head tied to the embedding.
+    return shapes
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(cfg))
+
+
+def unflatten(cfg: TransformerConfig, flat):
+    out = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    assert off == flat.shape[0], f"flat vector has {flat.shape[0]}, need {off}"
+    return out
+
+
+def init_params(cfg: TransformerConfig, key) -> jnp.ndarray:
+    """Flat f32 init vector (scaled gaussian / zeros for ln biases)."""
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        size = 1
+        for s in shape:
+            size *= s
+        if name.endswith("_g"):
+            chunks.append(jnp.ones(size, jnp.float32))
+        elif name.endswith("_b"):
+            chunks.append(jnp.zeros(size, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.02 if name in ("embed", "pos") else 1.0 / jnp.sqrt(fan_in)
+            chunks.append(
+                (jax.random.normal(sub, (size,), jnp.float32) * scale).astype(jnp.float32)
+            )
+    return jnp.concatenate(chunks)
+
+
+# ---- model -----------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _mlp(x2d, w1, w2):
+    """(tokens, d_model) MLP through the Pallas matmul kernel."""
+    h = matmul(x2d, w1)
+    h = jax.nn.gelu(h)
+    return matmul(h, w2)
+
+
+def _attention(x, wqkv, wo, cfg: TransformerConfig):
+    bsz, seq, dm = x.shape
+    qkv = (x.reshape(bsz * seq, dm) @ wqkv).reshape(bsz, seq, 3, cfg.n_heads, cfg.d_head)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (b, s, h, dh)
+    q = jnp.swapaxes(q, 1, 2)  # (b, h, s, dh)
+    k = jnp.swapaxes(k, 1, 2)
+    v = jnp.swapaxes(v, 1, 2)
+    scores = q @ jnp.swapaxes(k, -1, -2) / jnp.sqrt(cfg.d_head)  # (b,h,s,s)
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = probs @ v  # (b, h, s, dh)
+    ctx = jnp.swapaxes(ctx, 1, 2).reshape(bsz, seq, dm)
+    return ctx.reshape(bsz * seq, dm) @ wo
+
+
+def forward(cfg: TransformerConfig, flat, tokens):
+    """Logits (batch, seq, vocab) for int32 tokens (batch, seq)."""
+    p = unflatten(cfg, flat)
+    x = p["embed"][tokens] + p["pos"][None, :, :]
+    bsz, seq, dm = x.shape
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        att = _attention(h, p[f"l{l}.wqkv"], p[f"l{l}.wo"], cfg).reshape(bsz, seq, dm)
+        x = x + att
+        h = _layernorm(x, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        x = x + _mlp(h.reshape(bsz * seq, dm), p[f"l{l}.w1"], p[f"l{l}.w2"]).reshape(
+            bsz, seq, dm
+        )
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["embed"].T  # tied head
+
+
+def loss_fn(cfg: TransformerConfig, flat, tokens, targets):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, flat, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: TransformerConfig, flat, tokens, targets):
+    """(loss, flat gradient) — the function AOT-lowered for the rust
+    coordinator. SGD/gossip happen on the rust side."""
+    loss, grad = jax.value_and_grad(lambda f: loss_fn(cfg, f, tokens, targets))(flat)
+    return loss, grad

@@ -1,0 +1,57 @@
+"""AOT path: artifacts lower to valid HLO text and the manifest matches.
+
+Lowering every artifact is slow, so this test lowers the small ones and
+checks the full table only structurally.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import artifact_table, lower_artifact
+
+
+def test_table_structure():
+    arts = artifact_table()
+    names = set(arts.keys())
+    # every paper-relevant artifact present
+    for expected in [
+        "logreg_grad_d2000_b32",
+        "logreg_grad_d64_b16",
+        "qsgd_s16_d2000",
+        "choco_round_n25_d2000",
+        "choco_round_n8_d64",
+        "transformer_step_tiny",
+    ]:
+        assert expected in names
+    for name, (fn, specs, meta) in arts.items():
+        assert callable(fn), name
+        assert len(specs) >= 1, name
+        assert "kind" in meta, name
+
+
+@pytest.mark.parametrize("name", ["logreg_grad_d64_b16", "qsgd_s16_d64", "choco_round_n8_d64"])
+def test_small_artifacts_lower_to_hlo(name):
+    fn, specs, _meta = artifact_table()[name]
+    text = lower_artifact(name, fn, specs)
+    assert "HloModule" in text
+    # jax >= 0.5 id overflow guard: the text parser reassigns ids, but the
+    # text itself must be ASCII and non-trivial.
+    assert len(text) > 200
+
+
+def test_manifest_if_built():
+    """If `make artifacts` already ran, validate the manifest contents."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    for art in manifest["artifacts"]:
+        hlo = os.path.join(os.path.dirname(path), art["file"])
+        assert os.path.exists(hlo), art["file"]
+        assert art["inputs"], art["name"]

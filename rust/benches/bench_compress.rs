@@ -1,0 +1,68 @@
+//! Operator-level benchmarks: compression + wire encode/decode throughput.
+//! Perf targets from DESIGN.md §8; regenerates the operator-cost numbers
+//! quoted in EXPERIMENTS.md §Perf.
+
+use choco::benchlib::{black_box, Harness};
+use choco::compress::{wire, Compressor, QsgdS, RandK, ScaledSign, TopK};
+use choco::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("bench_compress");
+    let d = 2000;
+    let mut rng = Rng::new(1);
+    let mut x = vec![0.0; d];
+    rng.fill_gaussian(&mut x);
+
+    let items = d as f64;
+    h.bench_throughput("top_k 1% d=2000 (quickselect)", items, || {
+        let c = TopK { k: 20 }.compress(&x, &mut rng);
+        black_box(c);
+    });
+    h.bench_throughput("rand_k 1% d=2000", items, || {
+        let c = RandK { k: 20 }.compress(&x, &mut rng);
+        black_box(c);
+    });
+    h.bench_throughput("qsgd_16 d=2000", items, || {
+        let c = QsgdS { s: 16 }.compress(&x, &mut rng);
+        black_box(c);
+    });
+    h.bench_throughput("sign d=2000", items, || {
+        let c = ScaledSign.compress(&x, &mut rng);
+        black_box(c);
+    });
+
+    // wire encode/decode (bytes/s)
+    let msg_sparse = TopK { k: 20 }.compress(&x, &mut rng);
+    let bytes_sparse = wire::encode(&msg_sparse);
+    h.bench_throughput("wire encode sparse(20)", bytes_sparse.len() as f64, || {
+        black_box(wire::encode(&msg_sparse));
+    });
+    h.bench_throughput("wire decode sparse(20)", bytes_sparse.len() as f64, || {
+        black_box(wire::decode(&bytes_sparse).unwrap());
+    });
+    let msg_dense = QsgdS { s: 16 }.compress(&x, &mut rng);
+    let bytes_dense = wire::encode(&msg_dense);
+    h.bench_throughput("wire encode dense d=2000", bytes_dense.len() as f64, || {
+        black_box(wire::encode(&msg_dense));
+    });
+    h.bench_throughput("wire decode dense d=2000", bytes_dense.len() as f64, || {
+        black_box(wire::decode(&bytes_dense).unwrap());
+    });
+
+    // top_k scaling (quickselect O(d) vs sort O(d log d) reference)
+    for dd in [10_000usize, 100_000] {
+        let mut big = vec![0.0; dd];
+        rng.fill_gaussian(&mut big);
+        h.bench_throughput(&format!("top_k 1% d={dd}"), dd as f64, || {
+            let c = TopK { k: dd / 100 }.compress(&big, &mut rng);
+            black_box(c);
+        });
+        h.bench_throughput(&format!("top_k sort-baseline d={dd}"), dd as f64, || {
+            let mut idx: Vec<usize> = (0..dd).collect();
+            idx.sort_by(|&a, &b| big[b].abs().partial_cmp(&big[a].abs()).unwrap());
+            idx.truncate(dd / 100);
+            black_box(idx);
+        });
+    }
+    h.report();
+}

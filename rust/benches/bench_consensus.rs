@@ -1,0 +1,78 @@
+//! Consensus-layer benchmarks: per-round cost of each gossip scheme at
+//! the paper's Fig. 2/3 configuration (ring n=25, d=2000) — the
+//! end-to-end cost behind those figures' x-axes.
+
+use choco::benchlib::{black_box, Harness};
+use choco::compress::{QsgdS, RandK, Rescaled, TopK};
+use choco::consensus::{make_nodes, Scheme, SyncRunner};
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use choco::util::rng::Rng;
+
+fn bench_scheme(h: &mut Harness, name: &str, scheme: Scheme, n: usize, d: usize) {
+    let g = Graph::ring(n);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let mut rng = Rng::new(5);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let mut runner = SyncRunner::new(make_nodes(&scheme, &x0, &lw), &g, 3);
+    // node-values processed per round
+    h.bench_throughput(name, (n * d) as f64, || {
+        black_box(runner.step());
+    });
+}
+
+fn main() {
+    let mut h = Harness::new("bench_consensus (ring n=25, d=2000, per-round)");
+    let (n, d) = (25, 2000);
+    let tau = QsgdS { s: 256 }.tau(d);
+    bench_scheme(&mut h, "E-G exact", Scheme::Exact { gamma: 1.0 }, n, d);
+    bench_scheme(
+        &mut h,
+        "Q1-G qsgd256",
+        Scheme::Q1 { op: Box::new(Rescaled::new(QsgdS { s: 256 }, tau)) },
+        n,
+        d,
+    );
+    bench_scheme(
+        &mut h,
+        "Q2-G qsgd256",
+        Scheme::Q2 { op: Box::new(Rescaled::new(QsgdS { s: 256 }, tau)) },
+        n,
+        d,
+    );
+    bench_scheme(
+        &mut h,
+        "CHOCO qsgd256 (Alg 1)",
+        Scheme::Choco { gamma: 1.0, op: Box::new(QsgdS { s: 256 }) },
+        n,
+        d,
+    );
+    bench_scheme(
+        &mut h,
+        "CHOCO qsgd256 (Alg 5 mem-eff)",
+        Scheme::ChocoEfficient { gamma: 1.0, op: Box::new(QsgdS { s: 256 }) },
+        n,
+        d,
+    );
+    bench_scheme(
+        &mut h,
+        "CHOCO rand1%",
+        Scheme::Choco { gamma: 0.011, op: Box::new(RandK { k: 20 }) },
+        n,
+        d,
+    );
+    bench_scheme(
+        &mut h,
+        "CHOCO top1%",
+        Scheme::Choco { gamma: 0.046, op: Box::new(TopK { k: 20 }) },
+        n,
+        d,
+    );
+    h.report();
+}

@@ -1,0 +1,112 @@
+//! PJRT runtime benchmarks: artifact execution latency (gradient round
+//! trips that sit on the SGD hot path when the PJRT sources are used) vs
+//! the native implementations. Skipped when artifacts aren't built.
+
+use choco::benchlib::{black_box, Harness};
+use choco::models::Objective;
+use choco::runtime::{Manifest, PjrtEngine, Tensor};
+use choco::util::rng::Rng;
+
+fn main() {
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("bench_runtime: artifacts not built (run `make artifacts`) — skipping");
+        return;
+    };
+    let mut engine = PjrtEngine::new(manifest).expect("engine");
+    let mut h = Harness::new("bench_runtime (PJRT CPU)");
+    let mut rng = Rng::new(2);
+
+    // logreg grad d=2000 b=32: artifact vs native f64
+    let d = 2000;
+    let b = 32;
+    if engine.prepare("logreg_grad_d2000_b32").is_ok() {
+        let x = vec![0.01f32; d];
+        let a: Vec<f32> = (0..b * d).map(|_| rng.next_f64() as f32).collect();
+        let y: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        h.bench_throughput("logreg_grad_d2000_b32 (PJRT)", (b * d) as f64, || {
+            let out = engine
+                .execute(
+                    "logreg_grad_d2000_b32",
+                    &[Tensor::F32(x.clone()), Tensor::F32(a.clone()), Tensor::F32(y.clone())],
+                )
+                .unwrap();
+            black_box(out);
+        });
+        // native comparison
+        let ds = choco::data::epsilon_like(&choco::data::DenseSynthConfig {
+            n_samples: b,
+            dim: d,
+            ..Default::default()
+        });
+        let native = choco::models::LogisticRegression::new(ds, 1.0 / 4096.0, b);
+        let xf: Vec<f64> = vec![0.01; d];
+        let mut g = vec![0.0; d];
+        h.bench_throughput("logreg_grad d=2000 b=32 (native f64)", (b * d) as f64, || {
+            native.full_gradient(&xf, &mut g);
+            black_box(&g);
+        });
+    }
+
+    // choco_round n=25 d=2000
+    if engine.prepare("choco_round_n25_d2000").is_ok() {
+        let n = 25;
+        let x: Vec<f32> = (0..n * d).map(|_| rng.next_f64() as f32).collect();
+        let xh = vec![0.0f32; n * d];
+        let q: Vec<f32> = (0..n * d).map(|_| rng.next_f64() as f32).collect();
+        let mut w = vec![0.0f32; n * n];
+        for i in 0..n {
+            w[i * n + i] = 1.0 / 3.0;
+            w[i * n + (i + 1) % n] = 1.0 / 3.0;
+            w[i * n + (i + n - 1) % n] = 1.0 / 3.0;
+        }
+        h.bench_throughput("choco_round_n25_d2000 (PJRT)", (n * d) as f64, || {
+            let out = engine
+                .execute(
+                    "choco_round_n25_d2000",
+                    &[
+                        Tensor::F32(x.clone()),
+                        Tensor::F32(xh.clone()),
+                        Tensor::F32(q.clone()),
+                        Tensor::F32(w.clone()),
+                    ],
+                )
+                .unwrap();
+            black_box(out);
+        });
+    }
+
+    // qsgd d=2000
+    if engine.prepare("qsgd_s16_d2000").is_ok() {
+        let x: Vec<f32> = (0..d).map(|_| rng.next_f64() as f32).collect();
+        let xi: Vec<f32> = (0..d).map(|_| rng.next_f64() as f32).collect();
+        h.bench_throughput("qsgd_s16_d2000 (PJRT)", d as f64, || {
+            let out = engine
+                .execute("qsgd_s16_d2000", &[Tensor::F32(x.clone()), Tensor::F32(xi.clone())])
+                .unwrap();
+            black_box(out);
+        });
+    }
+
+    // transformer step
+    if engine.prepare("transformer_step_tiny").is_ok() {
+        let info = engine.artifact("transformer_step_tiny").unwrap().clone();
+        let np = info.meta_usize("n_params").unwrap();
+        let bt = info.meta_usize("batch").unwrap() * info.meta_usize("seq").unwrap();
+        let flat = vec![0.01f32; np];
+        let toks = vec![1i32; bt];
+        h.bench_throughput("transformer_step_tiny (PJRT)", np as f64, || {
+            let out = engine
+                .execute(
+                    "transformer_step_tiny",
+                    &[
+                        Tensor::F32(flat.clone()),
+                        Tensor::I32(toks.clone()),
+                        Tensor::I32(toks.clone()),
+                    ],
+                )
+                .unwrap();
+            black_box(out);
+        });
+    }
+    h.report();
+}

@@ -1,0 +1,67 @@
+//! Optimizer-layer benchmarks: per-round cost of each decentralized SGD
+//! algorithm on the Fig. 5/6 configuration (ring n=9, epsilon-like data).
+
+use choco::benchlib::{black_box, Harness};
+use choco::compress::{QsgdS, RandK, Rescaled, TopK};
+use choco::consensus::SyncRunner;
+use choco::data::{epsilon_like, partition, DenseSynthConfig, PartitionKind};
+use choco::models::LogisticRegression;
+use choco::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+fn runner_for(scheme: OptimScheme, n: usize, d: usize) -> (SyncRunner<'static>, usize) {
+    let ds = epsilon_like(&DenseSynthConfig { n_samples: 512, dim: d, ..Default::default() });
+    let m = ds.n_samples();
+    let lambda = 1.0 / m as f64;
+    let shards = partition(&ds, n, PartitionKind::Sorted, 3);
+    let sources = shards
+        .into_iter()
+        .map(|s| {
+            Box::new(NativeGrad { objective: Box::new(LogisticRegression::new(s, lambda, 1)) })
+                as Box<dyn choco::optim::GradientSource>
+        })
+        .collect();
+    let g = Box::leak(Box::new(Graph::ring(n)));
+    let w = mixing_matrix(g, MixingRule::Uniform);
+    let lw = local_weights(g, &w);
+    let nodes = make_optim_nodes(&scheme, sources, &vec![vec![0.0; d]; n], &lw);
+    (SyncRunner::new(nodes, g, 7), n * d)
+}
+
+fn main() {
+    let mut h = Harness::new("bench_sgd (ring n=9, d=2000, per-round)");
+    let (n, d) = (9, 2000);
+    let sched = || Schedule::paper(512, 0.1, d as f64);
+    let q16 = QsgdS { s: 16 };
+    let tau = q16.tau(d);
+    let cases: Vec<(&str, OptimScheme)> = vec![
+        ("plain DSGD (Alg 3)", OptimScheme::Plain { schedule: sched() }),
+        (
+            "CHOCO-SGD top1%",
+            OptimScheme::ChocoSgd { schedule: sched(), gamma: 0.04, op: Box::new(TopK { k: 20 }) },
+        ),
+        (
+            "CHOCO-SGD rand1%",
+            OptimScheme::ChocoSgd { schedule: sched(), gamma: 0.01, op: Box::new(RandK { k: 20 }) },
+        ),
+        (
+            "CHOCO-SGD qsgd16",
+            OptimScheme::ChocoSgd { schedule: sched(), gamma: 0.34, op: Box::new(q16) },
+        ),
+        (
+            "DCD-SGD qsgd16",
+            OptimScheme::Dcd { schedule: sched(), op: Box::new(Rescaled::new(q16, tau)) },
+        ),
+        (
+            "ECD-SGD qsgd16",
+            OptimScheme::Ecd { schedule: sched(), op: Box::new(Rescaled::new(q16, tau)) },
+        ),
+    ];
+    for (name, scheme) in cases {
+        let (mut runner, items) = runner_for(scheme, n, d);
+        h.bench_throughput(name, items as f64, || {
+            black_box(runner.step());
+        });
+    }
+    h.report();
+}

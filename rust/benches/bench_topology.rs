@@ -1,0 +1,25 @@
+//! Spectral machinery benchmarks: mixing-matrix construction + Jacobi
+//! eigensolve across sizes (backs Table 1 generation cost).
+
+use choco::benchlib::{black_box, Harness};
+use choco::topology::{mixing_matrix, Graph, MixingRule, Spectrum};
+
+fn main() {
+    let mut h = Harness::new("bench_topology");
+    for n in [16usize, 64, 144] {
+        let g = Graph::ring(n);
+        h.bench(&format!("mixing_matrix ring n={n}"), || {
+            black_box(mixing_matrix(&g, MixingRule::Uniform));
+        });
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        h.bench(&format!("spectrum (Jacobi) ring n={n}"), || {
+            black_box(Spectrum::of(&w));
+        });
+    }
+    let g = Graph::torus_square(64);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    h.bench("spectrum torus n=64", || {
+        black_box(Spectrum::of(&w));
+    });
+    h.report();
+}

@@ -1,0 +1,149 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//! ```ignore
+//! let mut h = Harness::new("bench_compress");
+//! h.bench("top_k d=2000", || { ...; black_box(out) });
+//! h.report();
+//! ```
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Prevents the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Seconds per iteration.
+    pub summary: Summary,
+    /// Optional items-per-second throughput (set via bench_throughput).
+    pub throughput: Option<f64>,
+}
+
+pub struct Harness {
+    pub group: String,
+    pub results: Vec<BenchResult>,
+    /// Target wall-time per benchmark (adaptive iteration count).
+    pub target_time_s: f64,
+    pub warmup_s: f64,
+}
+
+impl Harness {
+    pub fn new(group: &str) -> Self {
+        // CHOCO_BENCH_FAST=1 gives CI a quick pass.
+        let fast = std::env::var("CHOCO_BENCH_FAST").is_ok();
+        Self {
+            group: group.to_string(),
+            results: Vec::new(),
+            target_time_s: if fast { 0.1 } else { 1.0 },
+            warmup_s: if fast { 0.02 } else { 0.2 },
+        }
+    }
+
+    /// Measure `f`, adaptively choosing iteration count; returns secs/iter.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        // warmup + calibration
+        let start = Instant::now();
+        let mut calib_iters = 0usize;
+        while start.elapsed().as_secs_f64() < self.warmup_s || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = start.elapsed().as_secs_f64() / calib_iters as f64;
+        // samples: up to 30 batches within the target time
+        let batches = 10usize;
+        let iters_per_batch = ((self.target_time_s / batches as f64) / per_iter).max(1.0) as usize;
+        let mut samples = Vec::with_capacity(batches);
+        for _ in 0..batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_batch as f64);
+        }
+        let summary = Summary::of(&samples);
+        let med = summary.p50;
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: iters_per_batch * batches,
+            summary,
+            throughput: None,
+        });
+        med
+    }
+
+    /// Like `bench`, but also records items/second for `items` per call.
+    pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, items: f64, f: F) -> f64 {
+        let med = self.bench(name, f);
+        if let Some(last) = self.results.last_mut() {
+            last.throughput = Some(items / med);
+        }
+        med
+    }
+
+    /// Print a report table.
+    pub fn report(&self) {
+        println!("\n== {} ==", self.group);
+        println!(
+            "{:<44} {:>12} {:>12} {:>14}",
+            "benchmark", "median", "p95", "throughput"
+        );
+        for r in &self.results {
+            let tput = r
+                .throughput
+                .map(|t| {
+                    if t > 1e9 {
+                        format!("{:.2} G/s", t / 1e9)
+                    } else if t > 1e6 {
+                        format!("{:.2} M/s", t / 1e6)
+                    } else {
+                        format!("{:.2} /s", t)
+                    }
+                })
+                .unwrap_or_else(|| "-".to_string());
+            println!(
+                "{:<44} {:>12} {:>12} {:>14}",
+                r.name,
+                crate::util::human_secs(r.summary.p50),
+                crate::util::human_secs(r.summary.p95),
+                tput
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("CHOCO_BENCH_FAST", "1");
+        let mut h = Harness::new("test");
+        let mut acc = 0u64;
+        let med = h.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(med > 0.0 && med < 0.1);
+        assert_eq!(h.results.len(), 1);
+    }
+
+    #[test]
+    fn throughput_recorded() {
+        std::env::set_var("CHOCO_BENCH_FAST", "1");
+        let mut h = Harness::new("test");
+        h.bench_throughput("copy", 1000.0, || {
+            let v = vec![0u8; 1000];
+            black_box(v);
+        });
+        assert!(h.results[0].throughput.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Compression operators `Q: R^d → R^d` (paper §3.3–§3.5).
+//!
+//! All operators satisfy Assumption 1,
+//! `E‖Q(x) − x‖² ≤ (1 − ω)‖x‖²`, with the quality factor ω they expose via
+//! [`Compressor::omega`]:
+//!
+//! | operator | ω | biased? | paper reference |
+//! |---|---|---|---|
+//! | identity | 1 | no | exact gossip (E-G) |
+//! | rand_k | k/d | yes (not rescaled) | Stich et al. 2018, Lemma A.1 |
+//! | top_k | k/d | yes | Stich et al. 2018, Lemma A.1 |
+//! | qsgd_s (rescaled 1/τ) | 1/τ, τ = 1 + min(d/s², √d/s) | no* | Alistarh et al. 2017, Lemma 3.1 |
+//! | drop_p ("randomized gossip") | p | no | paper §3.5 |
+//! | scaled sign | ‖x‖₁²/(d‖x‖²) ≥ 1/d | yes | Karimireddy et al. |
+//!
+//! (*) the 1/τ-rescaled qsgd is *biased* as written but satisfies (7); the
+//! [`Rescaled`] wrapper converts it back to the unbiased τ·qsgd form the
+//! Q1-G/Q2-G baselines require (Carli et al. 2010b analyze unbiased Q).
+//!
+//! Wire-size accounting follows the paper's own counting (§5.1 reports
+//! "transmitted bits" as an architecture-independent cost): float32
+//! payloads, rand_k indices derived from a shared seed (free), top_k
+//! indices ⌈log₂ d⌉ bits, qsgd_s log₂(s) bits per coordinate plus one
+//! float32 norm. `wire.rs` provides an actual bit-packed encoder whose
+//! measured sizes are reported alongside in the benches.
+
+pub mod ops;
+pub mod wire;
+
+use crate::util::rng::Rng;
+
+/// Result of compressing a d-vector: a sparse/dense/quantized payload plus
+/// the number of bits this message costs on the wire.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    pub dim: usize,
+    pub payload: Payload,
+    pub wire_bits: u64,
+}
+
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Nothing transmitted (drop_p miss) — decodes to the zero vector.
+    Zero,
+    /// Full dense vector (identity).
+    Dense(Vec<f64>),
+    /// Sparse coordinates (rand_k / top_k), indices strictly increasing.
+    Sparse { indices: Vec<u32>, values: Vec<f64> },
+}
+
+impl Compressed {
+    /// Materialize as a dense vector.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim];
+        self.add_into(1.0, &mut out);
+        out
+    }
+
+    /// `out += alpha * decode(self)` — the only operation the gossip
+    /// algorithms need, so sparse payloads never materialize.
+    pub fn add_into(&self, alpha: f64, out: &mut [f64]) {
+        assert_eq!(out.len(), self.dim);
+        match &self.payload {
+            Payload::Zero => {}
+            Payload::Dense(v) => {
+                for i in 0..v.len() {
+                    out[i] += alpha * v[i];
+                }
+            }
+            Payload::Sparse { indices, values } => {
+                for (&i, &v) in indices.iter().zip(values.iter()) {
+                    out[i as usize] += alpha * v;
+                }
+            }
+        }
+    }
+
+    /// Number of explicitly-stored (nonzero) coordinates.
+    pub fn nnz(&self) -> usize {
+        match &self.payload {
+            Payload::Zero => 0,
+            Payload::Dense(v) => v.len(),
+            Payload::Sparse { indices, .. } => indices.len(),
+        }
+    }
+}
+
+/// A (possibly randomized) compression operator.
+pub trait Compressor: Send + Sync {
+    /// Short name used in figure legends / CSV columns, e.g. `top_1%`.
+    fn name(&self) -> String;
+
+    /// Quality factor ω ∈ (0, 1] of Assumption 1 for dimension d.
+    fn omega(&self, d: usize) -> f64;
+
+    /// Compress `x`. Randomized operators draw from `rng`.
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed;
+
+    /// True if `E Q(x) = x` (needed by the Q1-G / Q2-G baselines).
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    /// Clone into a boxed trait object (operators are small value types;
+    /// nodes keep their own copy).
+    fn clone_box(&self) -> Box<dyn Compressor>;
+}
+
+pub use ops::{
+    parse_compressor, DropP, Identity, QsgdS, RandK, Rescaled, ScaledSign, TopK,
+};

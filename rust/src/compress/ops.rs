@@ -1,0 +1,611 @@
+//! Concrete compression operators (paper §3.5 "Example operators").
+
+use super::{Compressed, Compressor, Payload};
+use crate::util::rng::Rng;
+
+const F32_BITS: u64 = 32;
+/// Shared-seed handshake cost charged to every randomized sparse message.
+const SEED_BITS: u64 = 64;
+
+/// Exact communication: Q(x) = x, ω = 1. Used by E-G and plain DSGD.
+#[derive(Debug, Clone, Copy)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
+
+    fn name(&self) -> String {
+        "exact".into()
+    }
+
+    fn omega(&self, _d: usize) -> f64 {
+        1.0
+    }
+
+    fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
+        Compressed {
+            dim: x.len(),
+            payload: Payload::Dense(x.to_vec()),
+            wire_bits: F32_BITS * x.len() as u64,
+        }
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// `rand_k`: keep k uniformly random coordinates, zero the rest.
+/// Biased, ω = k/d. Indices come from a shared PRNG seed, so the wire
+/// carries only k float32 values + the seed.
+#[derive(Debug, Clone, Copy)]
+pub struct RandK {
+    pub k: usize,
+}
+
+impl RandK {
+    /// The paper's `rand_{p%}` notation: k = ceil(p · d).
+    pub fn fraction(frac: f64, d: usize) -> Self {
+        Self { k: ((frac * d as f64).ceil() as usize).clamp(1, d) }
+    }
+}
+
+impl Compressor for RandK {
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
+
+    fn name(&self) -> String {
+        format!("rand_{}", self.k)
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        (self.k.min(d)) as f64 / d as f64
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        let k = self.k.min(d);
+        let mut idx = rng.sample_indices(d, k);
+        idx.sort_unstable();
+        let values: Vec<f64> = idx.iter().map(|&i| x[i]).collect();
+        Compressed {
+            dim: d,
+            payload: Payload::Sparse {
+                indices: idx.into_iter().map(|i| i as u32).collect(),
+                values,
+            },
+            wire_bits: F32_BITS * k as u64 + SEED_BITS,
+        }
+    }
+}
+
+/// `top_k`: keep the k coordinates of largest magnitude. Deterministic
+/// and biased, ω = k/d. Indices must travel: ⌈log₂ d⌉ bits each.
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn fraction(frac: f64, d: usize) -> Self {
+        Self { k: ((frac * d as f64).ceil() as usize).clamp(1, d) }
+    }
+}
+
+impl Compressor for TopK {
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
+
+    fn name(&self) -> String {
+        format!("top_{}", self.k)
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        (self.k.min(d)) as f64 / d as f64
+    }
+
+    fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        let k = self.k.min(d);
+        let idx = top_k_indices(x, k);
+        let values: Vec<f64> = idx.iter().map(|&i| x[i]).collect();
+        let index_bits = (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64;
+        Compressed {
+            dim: d,
+            payload: Payload::Sparse {
+                indices: idx.into_iter().map(|i| i as u32).collect(),
+                values,
+            },
+            wire_bits: (F32_BITS + index_bits) * k as u64,
+        }
+    }
+}
+
+/// Indices of the k largest-|x| entries, returned sorted ascending.
+///
+/// O(d) average via quickselect on a scratch copy (the perf pass replaced
+/// an initial O(d log d) full sort; see EXPERIMENTS.md §Perf).
+pub fn top_k_indices(x: &[f64], k: usize) -> Vec<usize> {
+    let d = x.len();
+    let k = k.min(d);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == d {
+        return (0..d).collect();
+    }
+    // Find the magnitude threshold via quickselect over |x|.
+    let mut mags: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+    let threshold = quickselect_desc(&mut mags, k - 1);
+    // Collect indices with |x| > threshold, then fill ties at == threshold.
+    let mut out: Vec<usize> = Vec::with_capacity(k);
+    for (i, v) in x.iter().enumerate() {
+        if v.abs() > threshold {
+            out.push(i);
+        }
+    }
+    for (i, v) in x.iter().enumerate() {
+        if out.len() == k {
+            break;
+        }
+        if v.abs() == threshold {
+            out.push(i);
+        }
+    }
+    out.sort_unstable();
+    out.truncate(k);
+    out
+}
+
+/// k-th largest element (0-based) of `v` in descending order; O(n) average.
+fn quickselect_desc(v: &mut [f64], k: usize) -> f64 {
+    let (mut lo, mut hi) = (0usize, v.len());
+    let mut rank = k;
+    let mut state = 0x9E3779B97F4A7C15u64; // deterministic pivot stream
+    loop {
+        if hi - lo <= 1 {
+            return v[lo];
+        }
+        // median-of-3-ish random pivot
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+        let pivot = v[lo + (state >> 33) as usize % (hi - lo)];
+        // 3-way partition descending: [> pivot | == pivot | < pivot]
+        let (mut i, mut j, mut p) = (lo, lo, hi);
+        while j < p {
+            if v[j] > pivot {
+                v.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if v[j] < pivot {
+                p -= 1;
+                v.swap(j, p);
+            } else {
+                j += 1;
+            }
+        }
+        // ranks [lo, i) are > pivot; [i, p) equal pivot; [p, hi) smaller.
+        if lo + rank < i {
+            hi = i;
+        } else if lo + rank < p {
+            return pivot;
+        } else {
+            rank -= p - lo;
+            lo = p;
+        }
+    }
+}
+
+/// `qsgd_s` random quantization (Alistarh et al. 2017), pre-scaled by 1/τ
+/// so that Assumption 1 holds with ω = 1/τ, τ = 1 + min(d/s², √d/s):
+///
+/// `qsgd_s(x) = sign(x)·‖x‖/(s·τ) · ⌊ s·|x|/‖x‖ + ξ ⌋`, ξ ~ U[0,1]^d.
+///
+/// Wire cost follows the paper's counting: log₂(s) bits per coordinate
+/// (s = 2⁴ → "4 bits per coordinate", §5.1) plus one float32 for ‖x‖.
+#[derive(Debug, Clone, Copy)]
+pub struct QsgdS {
+    pub s: u32,
+}
+
+impl QsgdS {
+    pub fn tau(&self, d: usize) -> f64 {
+        let s = self.s as f64;
+        let d = d as f64;
+        1.0 + (d / (s * s)).min(d.sqrt() / s)
+    }
+}
+
+impl Compressor for QsgdS {
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
+
+    fn name(&self) -> String {
+        format!("qsgd_{}", self.s)
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        1.0 / self.tau(d)
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        let norm = crate::linalg::vecops::norm2(x);
+        let bits_per_coord = (32 - (self.s.max(2) - 1).leading_zeros()) as u64; // log2(s)
+        if norm == 0.0 {
+            return Compressed {
+                dim: d,
+                payload: Payload::Zero,
+                wire_bits: F32_BITS, // still sends the (zero) norm
+            };
+        }
+        let s = self.s as f64;
+        let tau = self.tau(d);
+        let scale = norm / (s * tau);
+        // Hot path (perf pass, EXPERIMENTS.md §Perf): hoist the 1/norm
+        // division out of the loop and use copysign instead of
+        // signum·multiply — ~1.9× on the d=2000 benchmark.
+        let inv_norm_s = s / norm;
+        let mut out = vec![0.0; d];
+        for i in 0..d {
+            // the argument is nonnegative, so integer truncation == floor
+            let level = (x[i].abs() * inv_norm_s + rng.next_f64()) as u32 as f64;
+            out[i] = (scale * level).copysign(x[i]);
+        }
+        Compressed {
+            dim: d,
+            payload: Payload::Dense(out),
+            wire_bits: bits_per_coord * d as u64 + F32_BITS,
+        }
+    }
+}
+
+/// Randomized gossip: transmit the full vector with probability p, nothing
+/// otherwise. Unbiased? No — E Q(x) = p·x; but satisfies (7) with ω = p.
+#[derive(Debug, Clone, Copy)]
+pub struct DropP {
+    pub p: f64,
+}
+
+impl Compressor for DropP {
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
+
+    fn name(&self) -> String {
+        format!("drop_{}", self.p)
+    }
+
+    fn omega(&self, _d: usize) -> f64 {
+        self.p
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        if rng.bernoulli(self.p) {
+            Compressed {
+                dim: d,
+                payload: Payload::Dense(x.to_vec()),
+                wire_bits: F32_BITS * d as u64,
+            }
+        } else {
+            Compressed { dim: d, payload: Payload::Zero, wire_bits: 1 }
+        }
+    }
+}
+
+/// Scaled sign compression: `Q(x) = (‖x‖₁/d)·sign(x)`.
+/// Biased; ω(x) = ‖x‖₁²/(d‖x‖²) — we report the worst case 1/d.
+/// One bit per coordinate + one float32 scale on the wire.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaledSign;
+
+impl Compressor for ScaledSign {
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(*self)
+    }
+
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        1.0 / d as f64
+    }
+
+    fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        let l1: f64 = x.iter().map(|v| v.abs()).sum();
+        let scale = l1 / d as f64;
+        let out: Vec<f64> =
+            x.iter().map(|&v| if v == 0.0 { 0.0 } else { scale * v.signum() }).collect();
+        Compressed {
+            dim: d,
+            payload: Payload::Dense(out),
+            wire_bits: d as u64 + F32_BITS,
+        }
+    }
+}
+
+/// Unbiased rescaling wrapper: `Q'(x) = factor · Q(x)`.
+///
+/// The Q1-G / Q2-G baselines (Carli et al. 2010b) require unbiased
+/// operators; the paper runs them with `(d/k)·rand_k` and `τ·qsgd_s`
+/// (§5.1). The rescaled operator violates Assumption 1's contraction for
+/// small k (variance blows up by d/k) — exactly the effect the paper
+/// observes when Q2-G diverges under rand_1%.
+pub struct Rescaled {
+    pub inner: Box<dyn Compressor>,
+    pub factor: f64,
+}
+
+impl Rescaled {
+    pub fn new<C: Compressor + 'static>(inner: C, factor: f64) -> Self {
+        Self { inner: Box::new(inner), factor }
+    }
+}
+
+impl Compressor for Rescaled {
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(Rescaled { inner: self.inner.clone_box(), factor: self.factor })
+    }
+
+    fn name(&self) -> String {
+        format!("unbiased_{}", self.inner.name())
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        // For Q'(x) = τ·Q(x) with E Q' = x and E‖Q'(x)‖² ≤ τ‖x‖²:
+        // E‖Q'(x) − x‖² ≤ (τ − 1)‖x‖² → satisfies (7) only if τ ≤ 2.
+        // We report the rescaled-estimator ω = 1/factor from §3.5.
+        let _ = d;
+        1.0 / self.factor
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let mut c = self.inner.compress(x, rng);
+        match &mut c.payload {
+            Payload::Zero => {}
+            Payload::Dense(v) => v.iter_mut().for_each(|v| *v *= self.factor),
+            Payload::Sparse { values, .. } => values.iter_mut().for_each(|v| *v *= self.factor),
+        }
+        c
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Parse a compressor spec string used across the CLI and configs:
+/// `exact`, `rand_k:20`, `rand_pct:1`, `top_k:20`, `top_pct:1`,
+/// `qsgd:16`, `drop:0.5`, `sign`.
+pub fn parse_compressor(spec: &str, d: usize) -> Result<Box<dyn Compressor>, String> {
+    let (head, arg) = match spec.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (spec, None),
+    };
+    let num = |a: Option<&str>| -> Result<f64, String> {
+        a.ok_or_else(|| format!("'{spec}' needs an argument"))?
+            .parse::<f64>()
+            .map_err(|_| format!("bad numeric argument in '{spec}'"))
+    };
+    match head {
+        "exact" | "identity" => Ok(Box::new(Identity)),
+        "rand_k" => Ok(Box::new(RandK { k: num(arg)? as usize })),
+        "rand_pct" => Ok(Box::new(RandK::fraction(num(arg)? / 100.0, d))),
+        "top_k" => Ok(Box::new(TopK { k: num(arg)? as usize })),
+        "top_pct" => Ok(Box::new(TopK::fraction(num(arg)? / 100.0, d))),
+        "qsgd" => Ok(Box::new(QsgdS { s: num(arg)? as u32 })),
+        "drop" => Ok(Box::new(DropP { p: num(arg)? })),
+        "sign" => Ok(Box::new(ScaledSign)),
+        other => Err(format!("unknown compressor '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist_sq, norm2_sq};
+
+    fn rng() -> Rng {
+        Rng::new(12345)
+    }
+
+    #[test]
+    fn identity_roundtrip() {
+        let x = vec![1.0, -2.0, 3.0];
+        let c = Identity.compress(&x, &mut rng());
+        assert_eq!(c.to_dense(), x);
+        assert_eq!(c.wire_bits, 96);
+        assert_eq!(Identity.omega(3), 1.0);
+    }
+
+    #[test]
+    fn randk_keeps_k_coords() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let op = RandK { k: 10 };
+        let c = op.compress(&x, &mut rng());
+        assert_eq!(c.nnz(), 10);
+        let dense = c.to_dense();
+        // kept coordinates match the original
+        for (i, v) in dense.iter().enumerate() {
+            assert!(*v == 0.0 || *v == x[i]);
+        }
+        assert_eq!(op.omega(100), 0.1);
+        assert_eq!(c.wire_bits, 10 * 32 + 64);
+    }
+
+    #[test]
+    fn randk_fraction_of_paper() {
+        // rand_1% at d=2000 → k=20
+        let op = RandK::fraction(0.01, 2000);
+        assert_eq!(op.k, 20);
+    }
+
+    #[test]
+    fn topk_picks_largest() {
+        let x = vec![0.1, -5.0, 3.0, 0.0, -0.2, 4.0];
+        let c = TopK { k: 3 }.compress(&x, &mut rng());
+        let dense = c.to_dense();
+        assert_eq!(dense, vec![0.0, -5.0, 3.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn topk_indices_handles_ties_and_bounds() {
+        let x = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(top_k_indices(&x, 2).len(), 2);
+        assert_eq!(top_k_indices(&x, 0).len(), 0);
+        assert_eq!(top_k_indices(&x, 4), vec![0, 1, 2, 3]);
+        assert_eq!(top_k_indices(&x, 9), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn topk_matches_sort_baseline() {
+        let mut r = rng();
+        for _ in 0..50 {
+            let mut x = vec![0.0; 57];
+            r.fill_gaussian(&mut x);
+            let k = 1 + r.index(56);
+            let fast = top_k_indices(&x, k);
+            let mut by_sort: Vec<usize> = (0..x.len()).collect();
+            by_sort.sort_by(|&a, &b| x[b].abs().partial_cmp(&x[a].abs()).unwrap());
+            by_sort.truncate(k);
+            let fast_mag: f64 = fast.iter().map(|&i| x[i].abs()).sum();
+            let sort_mag: f64 = by_sort.iter().map(|&i| x[i].abs()).sum();
+            assert!((fast_mag - sort_mag).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn qsgd_contraction() {
+        // E‖Q(x) − x‖² ≤ (1 − ω)‖x‖², checked empirically.
+        let mut r = rng();
+        let d = 200;
+        let op = QsgdS { s: 16 };
+        let omega = op.omega(d);
+        let mut x = vec![0.0; d];
+        r.fill_gaussian(&mut x);
+        let n2 = norm2_sq(&x);
+        let trials = 200;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let c = op.compress(&x, &mut r);
+            acc += dist_sq(&c.to_dense(), &x);
+        }
+        let mean_err = acc / trials as f64;
+        assert!(
+            mean_err <= (1.0 - omega) * n2 * 1.05,
+            "qsgd contraction violated: {mean_err} vs {}",
+            (1.0 - omega) * n2
+        );
+    }
+
+    #[test]
+    fn qsgd_zero_vector() {
+        let c = QsgdS { s: 16 }.compress(&[0.0; 8], &mut rng());
+        assert_eq!(c.to_dense(), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn qsgd_paper_bit_counting() {
+        // s = 2^4 → 4 bits per coordinate (§5.1) + 32-bit norm.
+        let c = QsgdS { s: 16 }.compress(&[1.0; 100], &mut rng());
+        assert_eq!(c.wire_bits, 4 * 100 + 32);
+        let c = QsgdS { s: 256 }.compress(&[1.0; 100], &mut rng());
+        assert_eq!(c.wire_bits, 8 * 100 + 32);
+    }
+
+    #[test]
+    fn rescaled_qsgd_unbiased() {
+        // mean of τ·qsgd(x) over many draws ≈ x
+        let mut r = rng();
+        let d = 50;
+        let op = QsgdS { s: 4 };
+        let tau = op.tau(d);
+        let resc = Rescaled::new(op, tau);
+        let mut x = vec![0.0; d];
+        r.fill_gaussian(&mut x);
+        let trials = 3000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            let c = resc.compress(&x, &mut r);
+            c.add_into(1.0 / trials as f64, &mut acc);
+        }
+        let err = dist_sq(&acc, &x).sqrt() / norm2_sq(&x).sqrt();
+        assert!(err < 0.05, "bias {err}");
+    }
+
+    #[test]
+    fn rescaled_randk_unbiased() {
+        let mut r = rng();
+        let d = 40;
+        let op = RandK { k: 4 };
+        let resc = Rescaled::new(op, d as f64 / 4.0);
+        let x: Vec<f64> = (0..d).map(|i| (i as f64) - 20.0).collect();
+        let trials = 4000;
+        let mut acc = vec![0.0; d];
+        for _ in 0..trials {
+            resc.compress(&x, &mut r).add_into(1.0 / trials as f64, &mut acc);
+        }
+        let err = dist_sq(&acc, &x).sqrt() / norm2_sq(&x).sqrt();
+        assert!(err < 0.08, "bias {err}");
+    }
+
+    #[test]
+    fn drop_p_all_or_nothing() {
+        let mut r = rng();
+        let x = vec![1.0, 2.0];
+        let op = DropP { p: 0.5 };
+        let mut hits = 0;
+        for _ in 0..1000 {
+            let c = op.compress(&x, &mut r);
+            let d = c.to_dense();
+            if d == x {
+                hits += 1;
+            } else {
+                assert_eq!(d, vec![0.0, 0.0]);
+            }
+        }
+        assert!((400..600).contains(&hits), "hits {hits}");
+    }
+
+    #[test]
+    fn sign_compression() {
+        let x = vec![3.0, -1.0, 0.0, 2.0];
+        let c = ScaledSign.compress(&x, &mut rng());
+        let scale = 6.0 / 4.0;
+        assert_eq!(c.to_dense(), vec![scale, -scale, 0.0, scale]);
+        assert_eq!(c.wire_bits, 4 + 32);
+    }
+
+    #[test]
+    fn assumption1_contraction_all_biased_ops() {
+        // Deterministic/biased ops must satisfy (7) per draw in expectation;
+        // top_k satisfies it deterministically.
+        let mut r = rng();
+        for _ in 0..20 {
+            let mut x = vec![0.0; 64];
+            r.fill_gaussian(&mut x);
+            let n2 = norm2_sq(&x);
+            let c = TopK { k: 16 }.compress(&x, &mut r);
+            assert!(dist_sq(&c.to_dense(), &x) <= (1.0 - 16.0 / 64.0) * n2 + 1e-9);
+            let c = ScaledSign.compress(&x, &mut r);
+            assert!(dist_sq(&c.to_dense(), &x) <= n2 * (1.0 - 1.0 / 64.0) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse_compressor("exact", 100).unwrap().name(), "exact");
+        assert_eq!(parse_compressor("rand_pct:1", 2000).unwrap().name(), "rand_20");
+        assert_eq!(parse_compressor("top_k:5", 100).unwrap().name(), "top_5");
+        assert_eq!(parse_compressor("qsgd:256", 100).unwrap().name(), "qsgd_256");
+        assert!(parse_compressor("nope", 10).is_err());
+        assert!(parse_compressor("qsgd", 10).is_err());
+    }
+}

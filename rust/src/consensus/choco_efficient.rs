@@ -1,0 +1,151 @@
+//! CHOCO-Gossip, memory-efficient variant (Algorithm 5, Appendix E).
+//!
+//! Algebraically identical to Algorithm 1, but each node stores only
+//! *three* vectors regardless of its degree:
+//!
+//! ```text
+//! xᵢ   — local iterate
+//! x̂ᵢ  — own public estimate
+//! sᵢ = Σⱼ w_ij x̂ⱼ  — weighted sum of all public estimates (incl. self)
+//! ```
+//!
+//! Round: `qᵢ = Q(xᵢ − x̂ᵢ)`; after receiving the qⱼ:
+//! `sᵢ += Σⱼ w_ij qⱼ` (j over N(i) ∪ {i}), `x̂ᵢ += qᵢ`,
+//! `xᵢ += γ (sᵢ − x̂ᵢ)` — using Σⱼ w_ij = 1.
+
+use super::GossipNode;
+use crate::compress::{Compressed, Compressor};
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+pub struct ChocoEfficientNode {
+    x: Vec<f64>,
+    xhat: Vec<f64>,
+    s: Vec<f64>,
+    weights: LocalWeights,
+    gamma: f64,
+    op: Box<dyn Compressor>,
+    pending_own: Option<Compressed>,
+    /// Reusable scratch (perf pass).
+    diff_buf: Vec<f64>,
+}
+
+impl ChocoEfficientNode {
+    pub fn new(x0: Vec<f64>, weights: LocalWeights, gamma: f64, op: &dyn Compressor) -> Self {
+        assert!(gamma > 0.0 && gamma <= 1.0, "consensus stepsize must be in (0,1]");
+        let d = x0.len();
+        Self {
+            x: x0,
+            xhat: vec![0.0; d],
+            s: vec![0.0; d],
+            weights,
+            gamma,
+            op: op.clone_box(),
+            pending_own: None,
+            diff_buf: vec![0.0; d],
+        }
+    }
+
+    /// Bytes of state per node: 3 d-vectors — O(d), independent of degree
+    /// (Algorithm 1 stores deg(i) + 2 vectors).
+    pub fn state_vectors(&self) -> usize {
+        3
+    }
+
+    fn weight_of(&self, j: usize) -> f64 {
+        self.weights
+            .neighbors
+            .iter()
+            .find(|(nid, _)| *nid == j)
+            .map(|(_, w)| *w)
+            .unwrap_or_else(|| panic!("message from non-neighbor {j}"))
+    }
+}
+
+impl GossipNode for ChocoEfficientNode {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, _t: usize, rng: &mut Rng) -> Compressed {
+        self.diff_buf.copy_from_slice(&self.x);
+        crate::linalg::vecops::axpy(-1.0, &self.xhat, &mut self.diff_buf);
+        let msg = self.op.compress(&self.diff_buf, rng);
+        self.pending_own = Some(msg.clone());
+        msg
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let w = self.weight_of(from);
+        msg.add_into(w, &mut self.s);
+    }
+
+    fn end_round(&mut self, _t: usize) {
+        let own = self.pending_own.take().expect("end_round before begin_round");
+        // self term of sᵢ += Σⱼ w_ij qⱼ
+        own.add_into(self.weights.self_weight, &mut self.s);
+        // x̂ᵢ += qᵢ
+        own.add_into(1.0, &mut self.xhat);
+        // xᵢ += γ (sᵢ − x̂ᵢ)
+        for i in 0..self.x.len() {
+            self.x[i] += self.gamma * (self.s[i] - self.xhat[i]);
+        }
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::QsgdS;
+    use crate::consensus::{make_nodes, Scheme, SyncRunner};
+    use crate::linalg::vecops;
+    use crate::topology::{
+        choco_gamma_star, local_weights, mixing_matrix, Graph, MixingRule, Spectrum,
+    };
+
+    #[test]
+    fn converges_on_irregular_graph() {
+        // Algorithm 5's s-vector bookkeeping must be correct for nodes of
+        // different degree — use a star (hub degree n−1, leaves degree 1).
+        let g = Graph::star(7);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let spec = Spectrum::of(&w);
+        let lw = local_weights(&g, &w);
+        let d = 10;
+        let mut rng = Rng::new(4);
+        let x0: Vec<Vec<f64>> = (0..7)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect();
+        let target = vecops::mean_of(&x0);
+        let op = QsgdS { s: 16 };
+        // Practical γ, well above the conservative γ*(δ, β, ω).
+        let gamma = choco_gamma_star(spec.delta, spec.beta, op.omega(d)).max(0.3);
+        let nodes = make_nodes(
+            &Scheme::ChocoEfficient { gamma, op: Box::new(op) },
+            &x0,
+            &lw,
+        );
+        let mut runner = SyncRunner::new(nodes, &g, 8);
+        let e0 = runner.error_vs(&target);
+        for _ in 0..3000 {
+            runner.step();
+        }
+        let e = runner.error_vs(&target);
+        assert!(e < e0 * 1e-8, "e0={e0}, e={e}");
+    }
+
+    #[test]
+    fn state_is_three_vectors() {
+        let lw = LocalWeights { self_weight: 0.5, neighbors: vec![(1, 0.5)] };
+        let node = ChocoEfficientNode::new(vec![0.0; 4], lw, 0.5, &QsgdS { s: 4 });
+        assert_eq!(node.state_vectors(), 3);
+    }
+}

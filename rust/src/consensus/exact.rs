@@ -1,0 +1,126 @@
+//! (E-G) exact gossip: `Δ_ij = xⱼ − xᵢ`, full-precision broadcasts.
+//!
+//! Theorem 1: converges linearly at rate `(1 − γδ)` per round.
+
+use super::GossipNode;
+use crate::compress::{Compressed, Payload};
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+pub struct ExactNode {
+    x: Vec<f64>,
+    weights: LocalWeights,
+    gamma: f64,
+    /// Accumulated Σⱼ w_ij (xⱼ − xᵢ) for this round.
+    accum: Vec<f64>,
+}
+
+impl ExactNode {
+    pub fn new(x0: Vec<f64>, weights: LocalWeights, gamma: f64) -> Self {
+        assert!(gamma > 0.0 && gamma <= 1.0, "E-G stepsize must be in (0,1]");
+        let d = x0.len();
+        Self { x: x0, weights, gamma, accum: vec![0.0; d] }
+    }
+
+    fn weight_of(&self, j: usize) -> f64 {
+        self.weights
+            .neighbors
+            .iter()
+            .find(|(nid, _)| *nid == j)
+            .map(|(_, w)| *w)
+            .unwrap_or_else(|| panic!("message from non-neighbor {j}"))
+    }
+}
+
+impl GossipNode for ExactNode {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, _t: usize, _rng: &mut Rng) -> Compressed {
+        Compressed {
+            dim: self.x.len(),
+            payload: Payload::Dense(self.x.clone()),
+            wire_bits: 32 * self.x.len() as u64,
+        }
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let w = self.weight_of(from);
+        // accum += w (xⱼ − xᵢ)
+        msg.add_into(w, &mut self.accum);
+        crate::linalg::vecops::axpy(-w, &self.x, &mut self.accum);
+    }
+
+    fn end_round(&mut self, _t: usize) {
+        crate::linalg::vecops::axpy(self.gamma, &self.accum, &mut self.x);
+        crate::linalg::vecops::zero(&mut self.accum);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::{make_nodes, Scheme, SyncRunner};
+    use crate::linalg::vecops;
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule, Spectrum};
+    use crate::util::stats;
+
+    /// Theorem 1: error contracts at exactly (1−γδ)² per round in the
+    /// worst case; the measured factor must not exceed the bound.
+    #[test]
+    fn thm1_rate_bound_holds() {
+        for gamma in [1.0, 0.5] {
+            let g = Graph::ring(10);
+            let w = mixing_matrix(&g, MixingRule::Uniform);
+            let spec = Spectrum::of(&w);
+            let lw = local_weights(&g, &w);
+            let mut rng = crate::util::rng::Rng::new(99);
+            let x0: Vec<Vec<f64>> = (0..10)
+                .map(|_| {
+                    let mut v = vec![0.0; 4];
+                    rng.fill_gaussian(&mut v);
+                    v
+                })
+                .collect();
+            let target = vecops::mean_of(&x0);
+            let nodes = make_nodes(&Scheme::Exact { gamma }, &x0, &lw);
+            let mut runner = SyncRunner::new(nodes, &g, 1);
+            let mut errs = vec![runner.error_vs(&target)];
+            for _ in 0..80 {
+                runner.step();
+                errs.push(runner.error_vs(&target));
+            }
+            let measured = stats::contraction_factor(&errs);
+            let bound = (1.0 - gamma * spec.delta).powi(2);
+            assert!(
+                measured <= bound + 1e-6,
+                "γ={gamma}: measured {measured} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-neighbor")]
+    fn rejects_non_neighbor() {
+        let lw = LocalWeights { self_weight: 0.5, neighbors: vec![(1, 0.5)] };
+        let mut node = ExactNode::new(vec![0.0; 3], lw, 1.0);
+        let msg = Compressed {
+            dim: 3,
+            payload: Payload::Dense(vec![1.0; 3]),
+            wire_bits: 96,
+        };
+        node.receive(7, &msg);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_gamma() {
+        let lw = LocalWeights { self_weight: 1.0, neighbors: vec![] };
+        let _ = ExactNode::new(vec![0.0], lw, 1.5);
+    }
+}

@@ -1,0 +1,159 @@
+//! Matrix-notation reference implementation of CHOCO-Gossip
+//! (Appendix B, "Algorithm 1 in matrix notation"):
+//!
+//! ```text
+//! Q⁽ᵗ⁾     = Q(X⁽ᵗ⁾ − X̂⁽ᵗ⁾)            (column-wise)
+//! X̂⁽ᵗ⁺¹⁾  = X̂⁽ᵗ⁾ + Q⁽ᵗ⁾
+//! X⁽ᵗ⁺¹⁾  = X⁽ᵗ⁾ + γ X̂⁽ᵗ⁺¹⁾ (W − I)
+//! ```
+//!
+//! This is the form the proofs use. The test suite checks the distributed
+//! node implementations agree with it column-for-column under identical
+//! randomness — a strong end-to-end correctness anchor — and the PJRT
+//! runtime cross-checks its `choco_round` artifact against this module.
+
+use crate::compress::Compressor;
+use crate::linalg::{vecops, DenseMatrix};
+use crate::util::rng::Rng;
+
+/// Dense matrix-form CHOCO-Gossip state. Columns are nodes; stored as an
+/// n×d row-per-node matrix for cache friendliness (transposed relative to
+/// the paper's d×n notation).
+pub struct MatrixChoco {
+    /// Row i = xᵢ.
+    pub x: DenseMatrix,
+    /// Row i = x̂ᵢ.
+    pub xhat: DenseMatrix,
+    pub w: DenseMatrix,
+    pub gamma: f64,
+    op: Box<dyn Compressor>,
+    rngs: Vec<Rng>,
+}
+
+impl MatrixChoco {
+    pub fn new(
+        x0: &[Vec<f64>],
+        w: DenseMatrix,
+        gamma: f64,
+        op: &dyn Compressor,
+        seed: u64,
+    ) -> Self {
+        let n = x0.len();
+        assert_eq!(w.rows, n);
+        let d = x0[0].len();
+        let x = DenseMatrix::from_rows(x0);
+        Self {
+            x,
+            xhat: DenseMatrix::zeros(n, d),
+            w,
+            gamma,
+            op: op.clone_box(),
+            rngs: (0..n).map(|i| Rng::for_stream(seed, i as u64)).collect(),
+        }
+    }
+
+    /// One matrix-form round. Node i's compression consumes the same RNG
+    /// stream as the distributed implementations, so trajectories match.
+    pub fn step(&mut self) {
+        let n = self.x.rows;
+        let d = self.x.cols;
+        // Q = Q(X − X̂), per node.
+        let mut q = DenseMatrix::zeros(n, d);
+        for i in 0..n {
+            let mut diff = self.x.row(i).to_vec();
+            vecops::axpy(-1.0, self.xhat.row(i), &mut diff);
+            let msg = self.op.compress(&diff, &mut self.rngs[i]);
+            msg.add_into(1.0, q.row_mut(i));
+        }
+        // X̂ ← X̂ + Q
+        for i in 0..n {
+            vecops::axpy(1.0, &q.row(i).to_vec(), self.xhat.row_mut(i));
+        }
+        // X ← X + γ (W − I) X̂  (rows-as-nodes ⇒ W multiplies from the left;
+        // W is symmetric so this matches the paper's X̂(W−I)).
+        let mut mixed = DenseMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..n {
+                let wij = self.w.get(i, j);
+                if wij != 0.0 {
+                    vecops::axpy(wij, self.xhat.row(j), mixed.row_mut(i));
+                }
+            }
+            vecops::axpy(-1.0, &self.xhat.row(i).to_vec(), mixed.row_mut(i));
+        }
+        for i in 0..n {
+            vecops::axpy(self.gamma, &mixed.row(i).to_vec(), self.x.row_mut(i));
+        }
+    }
+
+    pub fn iterates(&self) -> Vec<Vec<f64>> {
+        (0..self.x.rows).map(|i| self.x.row(i).to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{RandK, TopK};
+    use crate::consensus::{make_nodes, Scheme, SyncRunner};
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+    /// The distributed Algorithm 1 must match the matrix form exactly
+    /// (same RNG streams, same update order ⇒ bitwise-comparable modulo
+    /// floating-point reassociation).
+    #[test]
+    fn distributed_matches_matrix_form() {
+        let g = Graph::ring(6);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let d = 9;
+        let mut rng = Rng::new(14);
+        let x0: Vec<Vec<f64>> = (0..6)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect();
+        let seed = 1234;
+        let op = RandK { k: 3 };
+        let gamma = 0.1;
+
+        let mut mat = MatrixChoco::new(&x0, w, gamma, &op, seed);
+        let nodes = make_nodes(&Scheme::Choco { gamma, op: Box::new(op) }, &x0, &lw);
+        let mut dist = SyncRunner::new(nodes, &g, seed);
+
+        for _ in 0..60 {
+            mat.step();
+            dist.step();
+        }
+        for (a, b) in mat.iterates().iter().zip(dist.iterates().iter()) {
+            assert!(
+                vecops::max_abs_diff(a, b) < 1e-10,
+                "matrix form and distributed implementation diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn matrix_form_preserves_average_topk() {
+        let g = Graph::ring(5);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let d = 7;
+        let mut rng = Rng::new(3);
+        let x0: Vec<Vec<f64>> = (0..5)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect();
+        let target = vecops::mean_of(&x0);
+        let mut mat = MatrixChoco::new(&x0, w, 0.05, &TopK { k: 2 }, 10);
+        for _ in 0..40 {
+            mat.step();
+        }
+        let mean = vecops::mean_of(&mat.iterates());
+        assert!(vecops::max_abs_diff(&mean, &target) < 1e-12);
+    }
+}

@@ -1,0 +1,344 @@
+//! Average-consensus gossip algorithms (paper §3).
+//!
+//! Four schemes, all instances of iteration (3)
+//! `xᵢ ← xᵢ + γ Σⱼ w_ij Δ_ij`:
+//!
+//! * [`exact::ExactNode`] — (E-G), Δ_ij = xⱼ − xᵢ (Xiao & Boyd 2004; Thm 1)
+//! * [`quantized::Q1Node`] — (Q1-G), Δ_ij = Q(xⱼ) − xᵢ (Aysal et al. 2008):
+//!   does **not** preserve the average, converges only to a neighborhood
+//! * [`quantized::Q2Node`] — (Q2-G), Δ_ij = Q(xⱼ) − Q(xᵢ) (Carli et al.
+//!   2007): preserves the average but the injected noise does not vanish
+//! * [`choco::ChocoNode`] / [`choco_efficient::ChocoEfficientNode`] —
+//!   (CHOCO-G), Algorithm 1 and its 3-vector variant Algorithm 5: preserves
+//!   the average **and** converges linearly for arbitrary ω > 0 (Thm 2)
+//!
+//! Every scheme is expressed through the message-level [`GossipNode`]
+//! interface so the same code runs under the synchronous round engine and
+//! the threaded actor runtime in [`crate::coordinator`].
+
+pub mod choco;
+pub mod choco_efficient;
+pub mod exact;
+pub mod matrix_ref;
+pub mod quantized;
+
+use crate::compress::{Compressed, Compressor};
+use crate::topology::{Graph, LocalWeights};
+use crate::util::rng::Rng;
+
+/// Node-level interface of one gossip round: every node broadcasts one
+/// message to all its neighbors, receives theirs, then updates.
+pub trait GossipNode: Send {
+    fn dim(&self) -> usize;
+
+    /// Compute the message this node broadcasts in round `t`.
+    fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed;
+
+    /// Deliver neighbor `from`'s round-`t` broadcast.
+    fn receive(&mut self, from: usize, msg: &Compressed);
+
+    /// All neighbor messages delivered — apply the local update.
+    fn end_round(&mut self, t: usize);
+
+    /// Current local iterate xᵢ.
+    fn x(&self) -> &[f64];
+}
+
+/// Per-round communication accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundStats {
+    /// Total bits placed on all directed links this round
+    /// (a broadcast to `deg` neighbors costs `deg × wire_bits`).
+    pub bits: u64,
+    /// Number of point-to-point messages.
+    pub messages: u64,
+}
+
+/// Gossip scheme selector used by drivers and the CLI.
+pub enum Scheme {
+    /// Exact gossip with stepsize γ (γ = 1 reproduces Xiao & Boyd).
+    Exact { gamma: f64 },
+    /// (Q1-G) with the given (should-be-unbiased) compressor.
+    Q1 { op: Box<dyn Compressor> },
+    /// (Q2-G) with the given (should-be-unbiased) compressor.
+    Q2 { op: Box<dyn Compressor> },
+    /// CHOCO-Gossip, Algorithm 1 (neighbor-copy bookkeeping).
+    Choco { gamma: f64, op: Box<dyn Compressor> },
+    /// CHOCO-Gossip, Algorithm 5 (memory-efficient, three vectors).
+    ChocoEfficient { gamma: f64, op: Box<dyn Compressor> },
+}
+
+impl Scheme {
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Exact { .. } => "exact".into(),
+            Scheme::Q1 { op } => format!("q1_{}", op.name()),
+            Scheme::Q2 { op } => format!("q2_{}", op.name()),
+            Scheme::Choco { op, .. } => format!("choco_{}", op.name()),
+            Scheme::ChocoEfficient { op, .. } => format!("choco_eff_{}", op.name()),
+        }
+    }
+}
+
+/// Build one [`GossipNode`] per worker for `scheme`, with initial values
+/// `x0` and per-node weights extracted from the gossip matrix.
+pub fn make_nodes(
+    scheme: &Scheme,
+    x0: &[Vec<f64>],
+    weights: &[LocalWeights],
+) -> Vec<Box<dyn GossipNode>> {
+    assert_eq!(x0.len(), weights.len());
+    x0.iter()
+        .enumerate()
+        .map(|(i, x)| -> Box<dyn GossipNode> {
+            match scheme {
+                Scheme::Exact { gamma } => {
+                    Box::new(exact::ExactNode::new(x.clone(), weights[i].clone(), *gamma))
+                }
+                Scheme::Q1 { op } => {
+                    Box::new(quantized::Q1Node::new(x.clone(), weights[i].clone(), op.as_ref()))
+                }
+                Scheme::Q2 { op } => {
+                    Box::new(quantized::Q2Node::new(x.clone(), weights[i].clone(), op.as_ref()))
+                }
+                Scheme::Choco { gamma, op } => {
+                    Box::new(choco::ChocoNode::new(x.clone(), weights[i].clone(), *gamma, op.as_ref()))
+                }
+                Scheme::ChocoEfficient { gamma, op } => Box::new(
+                    choco_efficient::ChocoEfficientNode::new(
+                        x.clone(),
+                        weights[i].clone(),
+                        *gamma,
+                        op.as_ref(),
+                    ),
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Minimal synchronous runner used by unit tests and the consensus
+/// experiment drivers (the full-featured engine with metrics/tracing lives
+/// in [`crate::coordinator::round`]).
+pub struct SyncRunner<'g> {
+    pub nodes: Vec<Box<dyn GossipNode>>,
+    pub graph: &'g Graph,
+    rngs: Vec<Rng>,
+    t: usize,
+}
+
+impl<'g> SyncRunner<'g> {
+    pub fn new(nodes: Vec<Box<dyn GossipNode>>, graph: &'g Graph, seed: u64) -> Self {
+        let rngs = (0..nodes.len()).map(|i| Rng::for_stream(seed, i as u64)).collect();
+        Self { nodes, graph, rngs, t: 0 }
+    }
+
+    /// One synchronous gossip round across all nodes.
+    pub fn step(&mut self) -> RoundStats {
+        let n = self.nodes.len();
+        let t = self.t;
+        let msgs: Vec<Compressed> = self
+            .nodes
+            .iter_mut()
+            .zip(self.rngs.iter_mut())
+            .map(|(node, rng)| node.begin_round(t, rng))
+            .collect();
+        let mut stats = RoundStats::default();
+        for i in 0..n {
+            let deg = self.graph.degree(i) as u64;
+            stats.bits += deg * msgs[i].wire_bits;
+            stats.messages += deg;
+        }
+        for i in 0..n {
+            // Deliver neighbor broadcasts; self-contributions are handled
+            // inside each node using its own cached message.
+            for &j in self.graph.neighbors(i) {
+                self.nodes[i].receive(j, &msgs[j]);
+            }
+        }
+        for node in self.nodes.iter_mut() {
+            node.end_round(t);
+        }
+        self.t += 1;
+        stats
+    }
+
+    /// Current iterates (one row per node).
+    pub fn iterates(&self) -> Vec<Vec<f64>> {
+        self.nodes.iter().map(|n| n.x().to_vec()).collect()
+    }
+
+    /// Consensus error `(1/n)·Σᵢ ‖xᵢ − x̄*‖²` against a fixed target
+    /// average (the paper's Fig. 2/3 y-axis).
+    pub fn error_vs(&self, target: &[f64]) -> f64 {
+        let n = self.nodes.len() as f64;
+        self.nodes.iter().map(|node| crate::linalg::vecops::dist_sq(node.x(), target)).sum::<f64>()
+            / n
+    }
+
+    /// Current average of the iterates.
+    pub fn current_mean(&self) -> Vec<f64> {
+        crate::linalg::vecops::mean_of(&self.iterates())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, QsgdS, RandK, Rescaled, TopK};
+    use crate::linalg::vecops;
+    use crate::topology::{mixing_matrix, MixingRule};
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Graph, Vec<LocalWeights>, Vec<Vec<f64>>, Vec<f64>) {
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = crate::topology::local_weights(&g, &w);
+        let mut rng = Rng::new(seed);
+        let x0: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect();
+        let target = vecops::mean_of(&x0);
+        (g, lw, x0, target)
+    }
+
+    #[test]
+    fn exact_gossip_converges_linearly() {
+        let (g, lw, x0, target) = setup(8, 5, 1);
+        let nodes = make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw);
+        let mut runner = SyncRunner::new(nodes, &g, 7);
+        let e0 = runner.error_vs(&target);
+        for _ in 0..200 {
+            runner.step();
+        }
+        let e = runner.error_vs(&target);
+        assert!(e < e0 * 1e-10, "e0={e0} e={e}");
+    }
+
+    #[test]
+    fn choco_converges_with_heavy_compression() {
+        let (g, lw, x0, target) = setup(8, 20, 2);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let spec = crate::topology::Spectrum::of(&w);
+        let op = TopK { k: 2 };
+        let _ = spec;
+        // Practically tuned γ (the paper tunes γ per configuration,
+        // Table 3); the theoretical γ* is far more conservative.
+        let gamma = 0.1;
+        let nodes = make_nodes(&Scheme::Choco { gamma, op: Box::new(op) }, &x0, &lw);
+        let mut runner = SyncRunner::new(nodes, &g, 7);
+        let e0 = runner.error_vs(&target);
+        for _ in 0..4000 {
+            runner.step();
+        }
+        let e = runner.error_vs(&target);
+        assert!(e < e0 * 1e-6, "e0={e0} e={e}");
+    }
+
+    #[test]
+    fn average_preservation() {
+        // E-G, Q2-G and CHOCO preserve the average; Q1-G does not (paper §3.3).
+        let (g, lw, x0, target) = setup(6, 10, 3);
+        let d = 10;
+        let cases: Vec<(Scheme, bool)> = vec![
+            (Scheme::Exact { gamma: 1.0 }, true),
+            (
+                Scheme::Q2 {
+                    op: Box::new(Rescaled::new(QsgdS { s: 4 }, QsgdS { s: 4 }.tau(d))),
+                },
+                true,
+            ),
+            (
+                Scheme::Choco { gamma: 0.05, op: Box::new(RandK { k: 2 }) },
+                true,
+            ),
+            (
+                Scheme::ChocoEfficient { gamma: 0.05, op: Box::new(TopK { k: 2 }) },
+                true,
+            ),
+        ];
+        for (scheme, preserves) in cases {
+            let name = scheme.name();
+            let nodes = make_nodes(&scheme, &x0, &lw);
+            let mut runner = SyncRunner::new(nodes, &g, 11);
+            for _ in 0..25 {
+                runner.step();
+            }
+            let drift = vecops::dist_sq(&runner.current_mean(), &target).sqrt();
+            if preserves {
+                assert!(drift < 1e-9, "{name}: average drifted by {drift}");
+            }
+        }
+    }
+
+    #[test]
+    fn q1_does_not_preserve_average() {
+        let (g, lw, x0, target) = setup(6, 10, 4);
+        let op = Rescaled::new(QsgdS { s: 2 }, QsgdS { s: 2 }.tau(10));
+        let nodes = make_nodes(&Scheme::Q1 { op: Box::new(op) }, &x0, &lw);
+        let mut runner = SyncRunner::new(nodes, &g, 11);
+        for _ in 0..30 {
+            runner.step();
+        }
+        let drift = vecops::dist_sq(&runner.current_mean(), &target).sqrt();
+        assert!(drift > 1e-6, "expected Q1-G average drift, got {drift}");
+    }
+
+    #[test]
+    fn alg1_and_alg5_agree() {
+        // Algorithm 5 is an algebraic rewrite of Algorithm 1 — identical
+        // trajectories (up to fp reassociation) under the same seeds.
+        let (g, lw, x0, _) = setup(7, 12, 5);
+        let mk = |eff: bool| -> SyncRunner<'_> {
+            let op = Box::new(RandK { k: 3 });
+            let scheme = if eff {
+                Scheme::ChocoEfficient { gamma: 0.07, op }
+            } else {
+                Scheme::Choco { gamma: 0.07, op }
+            };
+            SyncRunner::new(make_nodes(&scheme, &x0, &lw), &g, 13)
+        };
+        let mut a = mk(false);
+        let mut b = mk(true);
+        for _ in 0..50 {
+            a.step();
+            b.step();
+        }
+        for (xa, xb) in a.iterates().iter().zip(b.iterates().iter()) {
+            assert!(vecops::max_abs_diff(xa, xb) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn exact_with_identity_equals_choco_omega1_gamma1() {
+        // Remark 3: CHOCO with no compression and γ=1 reduces to exact gossip.
+        let (g, lw, x0, _) = setup(5, 6, 6);
+        let mut a = SyncRunner::new(make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw), &g, 17);
+        let mut b = SyncRunner::new(
+            make_nodes(&Scheme::Choco { gamma: 1.0, op: Box::new(Identity) }, &x0, &lw),
+            &g,
+            17,
+        );
+        for _ in 0..20 {
+            a.step();
+            b.step();
+        }
+        for (xa, xb) in a.iterates().iter().zip(b.iterates().iter()) {
+            assert!(vecops::max_abs_diff(xa, xb) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let (g, lw, x0, _) = setup(6, 10, 8);
+        let nodes = make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw);
+        let mut runner = SyncRunner::new(nodes, &g, 3);
+        let stats = runner.step();
+        // ring of 6: each node broadcasts d×32 bits to 2 neighbors.
+        assert_eq!(stats.bits, 6 * 2 * 10 * 32);
+        assert_eq!(stats.messages, 12);
+    }
+}

@@ -1,0 +1,229 @@
+//! Baseline quantized gossip schemes (paper §3.3).
+//!
+//! * (Q1-G), Aysal et al. 2008: `Δ_ij = Q(xⱼ) − xᵢ`. Does not preserve
+//!   the average; quantization noise eventually dominates and the scheme
+//!   stalls (or diverges — Fig. 2).
+//! * (Q2-G), Carli et al. 2007: `Δ_ij = Q(xⱼ) − Q(xᵢ)`. Preserves the
+//!   average, but `‖Q(xⱼ)‖` does not vanish at the (non-zero) consensus
+//!   point, so the iterates oscillate around x̄ (Fig. 2) and can diverge
+//!   under aggressive sparsification (Fig. 3).
+//!
+//! Both are analyzed for unbiased Q (Carli et al. 2010b); drivers pair
+//! them with the rescaled operators `(d/k)·rand_k` / `τ·qsgd_s` (§5.1).
+
+use super::GossipNode;
+use crate::compress::{Compressed, Compressor};
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+/// (Q1-G) node. γ = 1 per the paper.
+pub struct Q1Node {
+    x: Vec<f64>,
+    weights: LocalWeights,
+    op: Box<dyn Compressor>,
+    /// Σⱼ w_ij Q(xⱼ) accumulated over received messages + own broadcast.
+    accum: Vec<f64>,
+    accum_w: f64,
+}
+
+impl Q1Node {
+    pub fn new(x0: Vec<f64>, weights: LocalWeights, op: &dyn Compressor) -> Self {
+        let d = x0.len();
+        Self {
+            x: x0,
+            weights,
+            op: clone_op(op),
+            accum: vec![0.0; d],
+            accum_w: 0.0,
+        }
+    }
+}
+
+impl GossipNode for Q1Node {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, _t: usize, rng: &mut Rng) -> Compressed {
+        let msg = self.op.compress(&self.x, rng);
+        // Self term of Σⱼ w_ij (Q(xⱼ) − xᵢ) uses the node's own broadcast
+        // realization.
+        msg.add_into(self.weights.self_weight, &mut self.accum);
+        self.accum_w += self.weights.self_weight;
+        msg
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let w = weight_of(&self.weights, from);
+        msg.add_into(w, &mut self.accum);
+        self.accum_w += w;
+    }
+
+    fn end_round(&mut self, _t: usize) {
+        // x ← x + γ (Σⱼ w_ij Q(xⱼ) − Σⱼ w_ij xᵢ), γ = 1.
+        crate::linalg::vecops::axpy(-self.accum_w, &self.x.clone(), &mut self.accum);
+        crate::linalg::vecops::axpy(1.0, &self.accum.clone(), &mut self.x);
+        crate::linalg::vecops::zero(&mut self.accum);
+        self.accum_w = 0.0;
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+/// (Q2-G) node. γ = 1 per the paper.
+pub struct Q2Node {
+    x: Vec<f64>,
+    weights: LocalWeights,
+    op: Box<dyn Compressor>,
+    /// Σⱼ w_ij (Q(xⱼ) − Q(xᵢ)); the own-broadcast part is subtracted at
+    /// round end using the cached realization.
+    accum: Vec<f64>,
+    own: Vec<f64>,
+    accum_w: f64,
+}
+
+impl Q2Node {
+    pub fn new(x0: Vec<f64>, weights: LocalWeights, op: &dyn Compressor) -> Self {
+        let d = x0.len();
+        Self {
+            x: x0,
+            weights,
+            op: clone_op(op),
+            accum: vec![0.0; d],
+            own: vec![0.0; d],
+            accum_w: 0.0,
+        }
+    }
+}
+
+impl GossipNode for Q2Node {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, _t: usize, rng: &mut Rng) -> Compressed {
+        let msg = self.op.compress(&self.x, rng);
+        crate::linalg::vecops::zero(&mut self.own);
+        msg.add_into(1.0, &mut self.own);
+        msg
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let w = weight_of(&self.weights, from);
+        msg.add_into(w, &mut self.accum);
+        self.accum_w += w;
+    }
+
+    fn end_round(&mut self, _t: usize) {
+        // x ← x + Σ_{j≠i} w_ij (Q(xⱼ) − Q(xᵢ))
+        let own = self.own.clone();
+        crate::linalg::vecops::axpy(-self.accum_w, &own, &mut self.accum);
+        let accum = self.accum.clone();
+        crate::linalg::vecops::axpy(1.0, &accum, &mut self.x);
+        crate::linalg::vecops::zero(&mut self.accum);
+        self.accum_w = 0.0;
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+fn weight_of(weights: &LocalWeights, j: usize) -> f64 {
+    weights
+        .neighbors
+        .iter()
+        .find(|(nid, _)| *nid == j)
+        .map(|(_, w)| *w)
+        .unwrap_or_else(|| panic!("message from non-neighbor {j}"))
+}
+
+fn clone_op(op: &dyn Compressor) -> Box<dyn Compressor> {
+    op.clone_box()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::compress::{QsgdS, Rescaled};
+    use crate::consensus::{make_nodes, Scheme, SyncRunner};
+    use crate::linalg::vecops;
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+    fn setup(
+        n: usize,
+        d: usize,
+    ) -> (Graph, Vec<crate::topology::LocalWeights>, Vec<Vec<f64>>, Vec<f64>) {
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let mut rng = crate::util::rng::Rng::new(42);
+        let x0: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_uniform(&mut v, -5.0, 5.0);
+                v
+            })
+            .collect();
+        let target = vecops::mean_of(&x0);
+        (g, lw, x0, target)
+    }
+
+    /// Q1/Q2 with high-precision unbiased quantization reach a small
+    /// neighborhood of x̄ but do NOT keep contracting to machine zero —
+    /// the qualitative behavior of Fig. 2.
+    #[test]
+    fn q_schemes_stall_at_noise_floor() {
+        let (g, lw, x0, target) = setup(8, 16);
+        let d = 16;
+        for scheme in [
+            Scheme::Q1 {
+                op: Box::new(Rescaled::new(QsgdS { s: 256 }, QsgdS { s: 256 }.tau(d))),
+            },
+            Scheme::Q2 {
+                op: Box::new(Rescaled::new(QsgdS { s: 256 }, QsgdS { s: 256 }.tau(d))),
+            },
+        ] {
+            let name = scheme.name();
+            let nodes = make_nodes(&scheme, &x0, &lw);
+            let mut runner = SyncRunner::new(nodes, &g, 5);
+            let e0 = runner.error_vs(&target);
+            for _ in 0..400 {
+                runner.step();
+            }
+            let e = runner.error_vs(&target);
+            // improves a lot ...
+            assert!(e < e0 * 1e-2, "{name}: e0={e0} e={e}");
+            // ... but stalls well above exact-gossip accuracy.
+            assert!(e > e0 * 1e-12, "{name}: unexpectedly exact ({e})");
+        }
+    }
+
+    #[test]
+    fn q2_preserves_average_q1_not() {
+        let (g, lw, x0, target) = setup(6, 8);
+        let d = 8;
+        let mk = |q2: bool| {
+            let op = Box::new(Rescaled::new(QsgdS { s: 4 }, QsgdS { s: 4 }.tau(d)));
+            if q2 {
+                Scheme::Q2 { op }
+            } else {
+                Scheme::Q1 { op }
+            }
+        };
+        let mut r2 = SyncRunner::new(make_nodes(&mk(true), &x0, &lw), &g, 9);
+        for _ in 0..40 {
+            r2.step();
+        }
+        let drift2 = vecops::dist_sq(&r2.current_mean(), &target).sqrt();
+        assert!(drift2 < 1e-9, "Q2 drift {drift2}");
+
+        let mut r1 = SyncRunner::new(make_nodes(&mk(false), &x0, &lw), &g, 9);
+        for _ in 0..40 {
+            r1.step();
+        }
+        let drift1 = vecops::dist_sq(&r1.current_mean(), &target).sqrt();
+        assert!(drift1 > 1e-6, "Q1 drift unexpectedly small: {drift1}");
+    }
+}

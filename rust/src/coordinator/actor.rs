@@ -1,0 +1,241 @@
+//! Threaded actor runtime: one OS thread per node, real message passing.
+//!
+//! The round engine proves algorithmic correctness; this runtime proves
+//! the same node objects work as genuinely distributed actors exchanging
+//! *serialized* messages over channels (std::sync::mpsc — tokio is not
+//! available offline; semantics are the same for this BSP workload).
+//!
+//! Wiring: one dedicated FIFO channel per directed edge, so round-t
+//! messages can never be confused with round-(t+1) messages without any
+//! sequencing protocol (each node reads exactly one message per in-edge
+//! per round). A leader thread is not needed: the main thread joins the
+//! workers and collects their final node states; periodic snapshots flow
+//! over a metrics channel.
+
+use crate::compress::{wire, Compressed};
+use crate::consensus::GossipNode;
+use crate::topology::Graph;
+use crate::util::rng::Rng;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// What travels between node threads.
+enum Packet {
+    /// Fully-serialized message (exercises the wire format end-to-end;
+    /// f32 narrowing applies, exactly like a real deployment).
+    Bytes(Vec<u8>),
+    /// In-memory message (bit-exact vs. the round engine; used to verify
+    /// trajectory equality between the two runtimes).
+    Value(Compressed),
+}
+
+/// Snapshot sent to the metrics collector.
+pub struct Snapshot {
+    pub node: usize,
+    pub round: usize,
+    pub x: Vec<f64>,
+}
+
+pub struct ActorConfig {
+    pub rounds: usize,
+    /// Snapshot cadence (0 = only final states).
+    pub snapshot_every: usize,
+    pub seed: u64,
+    /// Ship encoded bytes (true) or in-memory values (false).
+    pub serialize: bool,
+}
+
+impl Default for ActorConfig {
+    fn default() -> Self {
+        Self { rounds: 100, snapshot_every: 0, seed: 1, serialize: true }
+    }
+}
+
+/// Result of an actor-runtime run.
+pub struct ActorResult {
+    /// Final iterate of each node.
+    pub iterates: Vec<Vec<f64>>,
+    /// Periodic snapshots (unordered across nodes, ordered per node).
+    pub snapshots: Vec<Snapshot>,
+    /// Total bits shipped (sum over directed edges and rounds).
+    pub bits: u64,
+}
+
+/// Run `nodes` for `cfg.rounds` BSP rounds over `graph` with one thread
+/// per node. Panics propagate from worker threads.
+pub fn run_actors(
+    nodes: Vec<Box<dyn GossipNode>>,
+    graph: &Graph,
+    cfg: &ActorConfig,
+) -> ActorResult {
+    let n = nodes.len();
+    assert_eq!(n, graph.n());
+
+    // Channel per directed edge (j → i): senders held by j, receiver by i.
+    let mut edge_tx: Vec<Vec<(usize, Sender<Packet>)>> = (0..n).map(|_| Vec::new()).collect();
+    let mut edge_rx: Vec<Vec<(usize, Receiver<Packet>)>> = (0..n).map(|_| Vec::new()).collect();
+    for i in 0..n {
+        for &j in graph.neighbors(i) {
+            // channel for j → i
+            let (tx, rx) = channel::<Packet>();
+            edge_tx[j].push((i, tx));
+            edge_rx[i].push((j, rx));
+        }
+    }
+
+    let (snap_tx, snap_rx) = channel::<Snapshot>();
+    let (bits_tx, bits_rx) = channel::<u64>();
+
+    let rounds = cfg.rounds;
+    let snapshot_every = cfg.snapshot_every;
+    let seed = cfg.seed;
+    let serialize = cfg.serialize;
+
+    let mut handles = Vec::with_capacity(n);
+    for (i, mut node) in nodes.into_iter().enumerate() {
+        let my_tx = std::mem::take(&mut edge_tx[i]);
+        let my_rx = std::mem::take(&mut edge_rx[i]);
+        let snap_tx = snap_tx.clone();
+        let bits_tx = bits_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("choco-node-{i}"))
+            .spawn(move || {
+                let mut rng = Rng::for_stream(seed, i as u64);
+                let mut sent_bits = 0u64;
+                for t in 0..rounds {
+                    let msg = node.begin_round(t, &mut rng);
+                    for (_, tx) in &my_tx {
+                        sent_bits += msg.wire_bits;
+                        let pkt = if serialize {
+                            Packet::Bytes(wire::encode(&msg))
+                        } else {
+                            Packet::Value(msg.clone())
+                        };
+                        tx.send(pkt).expect("peer hung up");
+                    }
+                    for (j, rx) in &my_rx {
+                        let pkt = rx.recv().expect("peer died mid-round");
+                        let incoming = match pkt {
+                            Packet::Bytes(b) => {
+                                wire::decode(&b).expect("corrupt wire message")
+                            }
+                            Packet::Value(v) => v,
+                        };
+                        node.receive(*j, &incoming);
+                    }
+                    node.end_round(t);
+                    if snapshot_every > 0 && (t + 1) % snapshot_every == 0 {
+                        let _ = snap_tx.send(Snapshot {
+                            node: i,
+                            round: t + 1,
+                            x: node.x().to_vec(),
+                        });
+                    }
+                }
+                bits_tx.send(sent_bits).ok();
+                (i, node.x().to_vec())
+            })
+            .expect("spawn node thread");
+        handles.push(handle);
+    }
+    drop(snap_tx);
+    drop(bits_tx);
+
+    let mut iterates = vec![Vec::new(); n];
+    for h in handles {
+        let (i, x) = h.join().expect("node thread panicked");
+        iterates[i] = x;
+    }
+    let snapshots: Vec<Snapshot> = snap_rx.into_iter().collect();
+    let bits = bits_rx.into_iter().sum();
+    ActorResult { iterates, snapshots, bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{QsgdS, TopK};
+    use crate::consensus::{make_nodes, Scheme, SyncRunner};
+    use crate::linalg::vecops;
+    use crate::topology::{local_weights, mixing_matrix, MixingRule};
+
+    fn setup(n: usize, d: usize) -> (Graph, Vec<crate::topology::LocalWeights>, Vec<Vec<f64>>) {
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let mut rng = Rng::new(123);
+        let x0 = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect();
+        (g, lw, x0)
+    }
+
+    #[test]
+    fn actor_matches_round_engine_exactly_in_value_mode() {
+        let (g, lw, x0) = setup(6, 8);
+        let scheme = Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 2 }) };
+        let cfg = ActorConfig { rounds: 40, snapshot_every: 0, seed: 55, serialize: false };
+        let actor = run_actors(make_nodes(&scheme, &x0, &lw), &g, &cfg);
+        let mut sync = SyncRunner::new(make_nodes(&scheme, &x0, &lw), &g, 55);
+        for _ in 0..40 {
+            sync.step();
+        }
+        for (a, b) in actor.iterates.iter().zip(sync.iterates().iter()) {
+            assert_eq!(vecops::max_abs_diff(a, b), 0.0, "actor ≠ round engine");
+        }
+    }
+
+    #[test]
+    fn serialized_mode_close_to_value_mode() {
+        // f32 narrowing on the wire perturbs trajectories only slightly.
+        let (g, lw, x0) = setup(5, 10);
+        let scheme = Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 64 }) };
+        let a = run_actors(
+            make_nodes(&scheme, &x0, &lw),
+            &g,
+            &ActorConfig { rounds: 30, snapshot_every: 0, seed: 9, serialize: true },
+        );
+        let b = run_actors(
+            make_nodes(&scheme, &x0, &lw),
+            &g,
+            &ActorConfig { rounds: 30, snapshot_every: 0, seed: 9, serialize: false },
+        );
+        for (xa, xb) in a.iterates.iter().zip(b.iterates.iter()) {
+            assert!(vecops::max_abs_diff(xa, xb) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn snapshots_collected() {
+        let (g, lw, x0) = setup(4, 4);
+        let scheme = Scheme::Exact { gamma: 1.0 };
+        let r = run_actors(
+            make_nodes(&scheme, &x0, &lw),
+            &g,
+            &ActorConfig { rounds: 20, snapshot_every: 5, seed: 2, serialize: true },
+        );
+        // 4 nodes × 4 snapshot points
+        assert_eq!(r.snapshots.len(), 16);
+        assert!(r.snapshots.iter().all(|s| s.round % 5 == 0));
+        assert!(r.bits > 0);
+    }
+
+    #[test]
+    fn consensus_reached_through_real_channels() {
+        let (g, lw, x0) = setup(6, 6);
+        let target = vecops::mean_of(&x0);
+        let scheme = Scheme::Exact { gamma: 1.0 };
+        let r = run_actors(
+            make_nodes(&scheme, &x0, &lw),
+            &g,
+            &ActorConfig { rounds: 300, snapshot_every: 0, seed: 3, serialize: true },
+        );
+        for x in &r.iterates {
+            // f32 wire narrowing bounds the final accuracy
+            assert!(vecops::dist_sq(x, &target) < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Experiment traces: the (iteration, transmitted-bits, metric) series
+//! that every paper figure plots.
+
+use crate::util::csv::CsvWriter;
+use std::path::Path;
+
+/// One experiment curve (e.g. "choco_rand_20 on ring25").
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Legend label.
+    pub name: String,
+    /// Column names; `rows[i].len() == columns.len()`.
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Trace {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "trace arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn column_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Extract one column.
+    pub fn column(&self, name: &str) -> Vec<f64> {
+        let idx = self
+            .column_index(name)
+            .unwrap_or_else(|| panic!("no column '{name}' in trace '{}'", self.name));
+        self.rows.iter().map(|r| r[idx]).collect()
+    }
+
+    pub fn last(&self, name: &str) -> f64 {
+        *self.column(name).last().expect("empty trace")
+    }
+
+    /// Write to CSV with a leading `series` label column.
+    pub fn write_csv<P: AsRef<Path>>(traces: &[Trace], path: P) -> std::io::Result<()> {
+        assert!(!traces.is_empty());
+        let mut header = vec!["series"];
+        let cols: Vec<String> = traces[0].columns.clone();
+        header.extend(cols.iter().map(|s| s.as_str()));
+        let mut w = CsvWriter::create(path, &header)?;
+        for t in traces {
+            assert_eq!(t.columns, cols, "traces with mismatched columns");
+            for r in &t.rows {
+                w.row_labeled(&t.name, r)?;
+            }
+        }
+        w.flush()
+    }
+
+    /// Render a crude log-scale ASCII sparkline of `metric` vs row index —
+    /// lets `choco repro figN` show curve shape directly in the terminal.
+    pub fn sparkline(&self, metric: &str, width: usize) -> String {
+        let ys = self.column(metric);
+        if ys.is_empty() {
+            return String::new();
+        }
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let logs: Vec<f64> = ys.iter().map(|&y| if y > 0.0 { y.log10() } else { -18.0 }).collect();
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &logs {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let span = (hi - lo).max(1e-9);
+        let step = (logs.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < logs.len() && out.chars().count() < width {
+            let v = logs[i as usize];
+            let level = (((v - lo) / span) * 7.0).round() as usize;
+            out.push(GLYPHS[level.min(7)]);
+            i += step;
+        }
+        out
+    }
+}
+
+/// Running communication/time accounting for an experiment.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Accounting {
+    pub rounds: usize,
+    pub bits: u64,
+    pub messages: u64,
+    /// Simulated wall-clock (per the network latency/bandwidth model).
+    pub sim_time_s: f64,
+    /// Real wall-clock spent inside node computation + delivery.
+    pub cpu_time_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_column() {
+        let mut t = Trace::new("x", &["iter", "err"]);
+        t.push(vec![0.0, 1.0]);
+        t.push(vec![1.0, 0.5]);
+        assert_eq!(t.column("err"), vec![1.0, 0.5]);
+        assert_eq!(t.last("err"), 0.5);
+        assert_eq!(t.column_index("iter"), Some(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Trace::new("x", &["a"]);
+        t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t1 = Trace::new("alg1", &["iter", "err"]);
+        t1.push(vec![0.0, 1.0]);
+        let mut t2 = Trace::new("alg2", &["iter", "err"]);
+        t2.push(vec![0.0, 2.0]);
+        let path = std::env::temp_dir().join("choco_trace_test.csv");
+        Trace::write_csv(&[t1, t2], &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("series,iter,err\n"));
+        assert!(body.contains("alg1,0,"));
+        assert!(body.contains("alg2,0,"));
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let mut t = Trace::new("x", &["err"]);
+        for i in 0..100 {
+            t.push(vec![10f64.powi(-i)]);
+        }
+        let s = t.sparkline("err", 20);
+        assert_eq!(s.chars().count(), 20);
+        // decreasing curve: first glyph is the max level
+        assert_eq!(s.chars().next().unwrap(), '█');
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: drives nodes (consensus schemes or optimizers) over a
+//! communication graph, accounting every transmitted bit.
+//!
+//! Two runtimes over the same [`crate::consensus::GossipNode`] objects:
+//! * [`round::RoundEngine`] — deterministic synchronous BSP rounds with a
+//!   pluggable link model (latency/bandwidth/loss); used by the figure
+//!   drivers;
+//! * [`actor`] — one thread per node with per-edge FIFO channels and real
+//!   serialized messages; proves the node implementations work as actual
+//!   distributed actors. Trajectory-equal to the round engine (tested).
+
+pub mod actor;
+pub mod metrics;
+pub mod network;
+pub mod round;
+
+pub use actor::{run_actors, ActorConfig, ActorResult};
+pub use metrics::{Accounting, Trace};
+pub use network::{LinkModel, NetworkSim};
+pub use round::{RoundConfig, RoundEngine};

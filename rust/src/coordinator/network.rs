@@ -1,0 +1,147 @@
+//! Simulated network model.
+//!
+//! The paper reports iterations and transmitted bits precisely because
+//! they are architecture-independent (§5.1); this module adds an optional
+//! *link model* on top so experiments can also report simulated wall-clock
+//! time and inject failures:
+//!
+//! * per-link latency + bandwidth → round time = max over links of
+//!   `latency + bits/bandwidth` (BSP rounds);
+//! * per-link i.i.d. message drop probability — a dropped gossip message
+//!   is modeled as a zero update (the receiver simply misses this round's
+//!   delta), letting us study robustness of the schemes to loss.
+
+use crate::compress::{Compressed, Payload};
+use crate::topology::Graph;
+use crate::util::rng::Rng;
+
+/// Link-level simulation parameters (uniform across links).
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// One-way latency per message, seconds.
+    pub latency_s: f64,
+    /// Bandwidth, bits per second.
+    pub bandwidth_bps: f64,
+    /// Probability a message is lost.
+    pub drop_prob: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // 10 GbE-ish datacenter link.
+        Self { latency_s: 50e-6, bandwidth_bps: 10e9, drop_prob: 0.0 }
+    }
+}
+
+impl LinkModel {
+    /// Transfer time of one message of `bits` over this link.
+    pub fn transfer_time(&self, bits: u64) -> f64 {
+        self.latency_s + bits as f64 / self.bandwidth_bps
+    }
+}
+
+/// Per-round delivery plan over a graph: which messages arrive, and how
+/// long the slowest link takes (BSP round duration).
+pub struct NetworkSim {
+    pub model: LinkModel,
+    rng: Rng,
+}
+
+impl NetworkSim {
+    pub fn new(model: LinkModel, seed: u64) -> Self {
+        Self { model, rng: Rng::for_stream(seed, 0x4E4554) } // "NET"
+    }
+
+    /// Deliver round-`t` broadcasts: for each directed edge (j → i),
+    /// decide drop/deliver and account time. Returns
+    /// (delivered messages as (from, to, msg), round_time_s, bits, msgs).
+    pub fn deliver<'m>(
+        &mut self,
+        graph: &Graph,
+        msgs: &'m [Compressed],
+    ) -> (Vec<(usize, usize, Compressed)>, f64, u64, u64) {
+        let mut out = Vec::new();
+        let mut round_time: f64 = 0.0;
+        let mut bits = 0u64;
+        let mut count = 0u64;
+        for i in 0..graph.n() {
+            for &j in graph.neighbors(i) {
+                // j's broadcast traveling to i
+                let msg = &msgs[j];
+                bits += msg.wire_bits;
+                count += 1;
+                round_time = round_time.max(self.model.transfer_time(msg.wire_bits));
+                if self.model.drop_prob > 0.0 && self.rng.bernoulli(self.model.drop_prob) {
+                    // dropped: deliver a zero update so protocol state
+                    // machines stay in lockstep (see module docs).
+                    out.push((
+                        j,
+                        i,
+                        Compressed { dim: msg.dim, payload: Payload::Zero, wire_bits: 0 },
+                    ));
+                } else {
+                    out.push((j, i, msg.clone()));
+                }
+            }
+        }
+        (out, round_time, bits, count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Payload;
+
+    fn msg(bits: u64) -> Compressed {
+        Compressed { dim: 4, payload: Payload::Dense(vec![1.0; 4]), wire_bits: bits }
+    }
+
+    #[test]
+    fn transfer_time_model() {
+        let m = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6, drop_prob: 0.0 };
+        assert!((m.transfer_time(1_000_000) - 1.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delivers_all_without_drops() {
+        let g = Graph::ring(4);
+        let msgs: Vec<Compressed> = (0..4).map(|_| msg(100)).collect();
+        let mut sim = NetworkSim::new(LinkModel::default(), 1);
+        let (delivered, time, bits, count) = sim.deliver(&g, &msgs);
+        assert_eq!(delivered.len(), 8); // 4 nodes × 2 neighbors
+        assert_eq!(bits, 800);
+        assert_eq!(count, 8);
+        assert!(time > 0.0);
+    }
+
+    #[test]
+    fn drops_become_zero_messages() {
+        let g = Graph::complete(4);
+        let msgs: Vec<Compressed> = (0..4).map(|_| msg(64)).collect();
+        let mut sim = NetworkSim::new(
+            LinkModel { drop_prob: 0.5, ..Default::default() },
+            3,
+        );
+        let (delivered, _, _, _) = sim.deliver(&g, &msgs);
+        let zeros = delivered
+            .iter()
+            .filter(|(_, _, m)| matches!(m.payload, Payload::Zero))
+            .count();
+        assert!(zeros > 0 && zeros < delivered.len(), "zeros = {zeros}");
+    }
+
+    #[test]
+    fn deterministic_drops() {
+        let g = Graph::ring(6);
+        let msgs: Vec<Compressed> = (0..6).map(|_| msg(64)).collect();
+        let run = |seed| {
+            let mut sim =
+                NetworkSim::new(LinkModel { drop_prob: 0.3, ..Default::default() }, seed);
+            let (d, _, _, _) = sim.deliver(&g, &msgs);
+            d.iter().map(|(_, _, m)| matches!(m.payload, Payload::Zero)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

@@ -1,0 +1,158 @@
+//! Binary-classification dataset container (dense or sparse features).
+//!
+//! The paper's experiments use *epsilon* (dense, d = 2000) and *rcv1*
+//! (sparse, d = 47236, 0.15% density) with labels in {−1, +1}.
+
+use crate::linalg::{CsrMatrix, SparseRow};
+
+/// Feature storage: dense rows or CSR.
+#[derive(Debug, Clone)]
+pub enum Features {
+    Dense { rows: Vec<Vec<f64>>, dim: usize },
+    Sparse(CsrMatrix),
+}
+
+/// A labeled binary-classification dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub features: Features,
+    /// Labels in {−1.0, +1.0}.
+    pub labels: Vec<f64>,
+    pub name: String,
+}
+
+/// Borrowed view of a single sample.
+pub enum Sample<'a> {
+    Dense(&'a [f64]),
+    Sparse(SparseRow<'a>),
+}
+
+impl<'a> Sample<'a> {
+    /// ⟨a, x⟩ for parameter vector x.
+    #[inline]
+    pub fn dot(&self, x: &[f64]) -> f64 {
+        match self {
+            Sample::Dense(row) => crate::linalg::vecops::dot(row, x),
+            Sample::Sparse(row) => row.dot(x),
+        }
+    }
+
+    /// `out += alpha · a`.
+    #[inline]
+    pub fn axpy_into(&self, alpha: f64, out: &mut [f64]) {
+        match self {
+            Sample::Dense(row) => crate::linalg::vecops::axpy(alpha, row, out),
+            Sample::Sparse(row) => row.axpy_into(alpha, out),
+        }
+    }
+}
+
+impl Dataset {
+    pub fn n_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        match &self.features {
+            Features::Dense { dim, .. } => *dim,
+            Features::Sparse(m) => m.cols,
+        }
+    }
+
+    pub fn density(&self) -> f64 {
+        match &self.features {
+            Features::Dense { .. } => 1.0,
+            Features::Sparse(m) => m.density(),
+        }
+    }
+
+    pub fn sample(&self, i: usize) -> Sample<'_> {
+        match &self.features {
+            Features::Dense { rows, .. } => Sample::Dense(&rows[i]),
+            Features::Sparse(m) => Sample::Sparse(m.row(i)),
+        }
+    }
+
+    pub fn label(&self, i: usize) -> f64 {
+        self.labels[i]
+    }
+
+    /// Restrict to a subset of sample indices (copies).
+    pub fn subset(&self, idx: &[usize], name: &str) -> Dataset {
+        let labels: Vec<f64> = idx.iter().map(|&i| self.labels[i]).collect();
+        let features = match &self.features {
+            Features::Dense { rows, dim } => Features::Dense {
+                rows: idx.iter().map(|&i| rows[i].clone()).collect(),
+                dim: *dim,
+            },
+            Features::Sparse(m) => {
+                let mut out = CsrMatrix::new(0, m.cols);
+                for &i in idx {
+                    let r = m.row(i);
+                    let entries: Vec<(u32, f64)> =
+                        r.indices.iter().zip(r.values.iter()).map(|(&a, &b)| (a, b)).collect();
+                    out.push_row(&entries);
+                }
+                Features::Sparse(out)
+            }
+        };
+        Dataset { features, labels, name: name.to_string() }
+    }
+
+    /// Fraction of positive labels — used to verify the sorted/shuffled
+    /// partitioning logic.
+    pub fn positive_fraction(&self) -> f64 {
+        if self.labels.is_empty() {
+            return 0.0;
+        }
+        self.labels.iter().filter(|&&l| l > 0.0).count() as f64 / self.labels.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dense() -> Dataset {
+        Dataset {
+            features: Features::Dense {
+                rows: vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]],
+                dim: 2,
+            },
+            labels: vec![1.0, -1.0, 1.0],
+            name: "tiny".into(),
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let ds = tiny_dense();
+        assert_eq!(ds.n_samples(), 3);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.density(), 1.0);
+        assert_eq!(ds.sample(2).dot(&[2.0, 3.0]), 5.0);
+        assert!((ds.positive_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_copies() {
+        let ds = tiny_dense();
+        let sub = ds.subset(&[2, 0], "sub");
+        assert_eq!(sub.n_samples(), 2);
+        assert_eq!(sub.labels, vec![1.0, 1.0]);
+        assert_eq!(sub.sample(0).dot(&[1.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn sparse_dataset() {
+        let m = CsrMatrix::from_dense_rows(&[vec![0.0, 3.0, 0.0], vec![1.0, 0.0, 0.0]], 3);
+        let ds = Dataset { features: Features::Sparse(m), labels: vec![1.0, -1.0], name: "s".into() };
+        assert_eq!(ds.dim(), 3);
+        assert!((ds.density() - 2.0 / 6.0).abs() < 1e-12);
+        let mut out = vec![0.0; 3];
+        ds.sample(0).axpy_into(2.0, &mut out);
+        assert_eq!(out, vec![0.0, 6.0, 0.0]);
+        let sub = ds.subset(&[1], "s1");
+        assert_eq!(sub.labels, vec![-1.0]);
+    }
+}

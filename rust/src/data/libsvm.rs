@@ -1,0 +1,128 @@
+//! LIBSVM-format parser.
+//!
+//! The paper's datasets (*epsilon*, *rcv1*) are distributed in libsvm
+//! format (`label idx:val idx:val ...`, 1-based indices). If the user
+//! places the files under `data/`, the experiment drivers load them via
+//! [`super::load_or_generate`] instead of the synthetic generators.
+
+use super::dataset::{Dataset, Features};
+use crate::linalg::CsrMatrix;
+use std::io::BufRead;
+use std::path::Path;
+
+/// Parse a libsvm file. `dim` of the dataset is the max feature index
+/// observed (or `min_dim` if larger). Labels are mapped to {−1, +1}:
+/// values > 0 → +1, otherwise −1 (rcv1 uses {−1,1}; epsilon uses {−1,1}).
+pub fn load<P: AsRef<Path>>(path: P, min_dim: usize) -> Result<Dataset, String> {
+    let file = std::fs::File::open(&path)
+        .map_err(|e| format!("open {}: {e}", path.as_ref().display()))?;
+    let reader = std::io::BufReader::new(file);
+    let mut raw_rows: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut labels = Vec::new();
+    let mut max_idx = 0u32;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("read error: {e}"))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| format!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|_| format!("line {}: bad label", lineno + 1))?;
+        let mut entries = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: bad token '{tok}'", lineno + 1))?;
+            let idx: u32 = idx
+                .parse()
+                .map_err(|_| format!("line {}: bad index '{idx}'", lineno + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: libsvm indices are 1-based", lineno + 1));
+            }
+            let val: f64 = val
+                .parse()
+                .map_err(|_| format!("line {}: bad value '{val}'", lineno + 1))?;
+            entries.push((idx - 1, val));
+            max_idx = max_idx.max(idx - 1);
+        }
+        entries.sort_unstable_by_key(|e| e.0);
+        // reject duplicate indices
+        for w in entries.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(format!("line {}: duplicate index {}", lineno + 1, w[0].0 + 1));
+            }
+        }
+        raw_rows.push(entries);
+        labels.push(if label > 0.0 { 1.0 } else { -1.0 });
+    }
+    if raw_rows.is_empty() {
+        return Err("empty libsvm file".into());
+    }
+    let dim = (max_idx as usize + 1).max(min_dim);
+    let mut m = CsrMatrix::new(0, dim);
+    for r in &raw_rows {
+        m.push_row(r);
+    }
+    let name = path.as_ref().file_name().and_then(|s| s.to_str()).unwrap_or("libsvm").to_string();
+    Ok(Dataset { features: Features::Sparse(m), labels, name })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("choco_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("t{}.svm", content.len()));
+        std::fs::write(&path, content).unwrap();
+        path
+    }
+
+    #[test]
+    fn parses_basic_file() {
+        let p = write_tmp("+1 1:0.5 3:1.5\n-1 2:2.0\n");
+        let ds = load(&p, 0).unwrap();
+        assert_eq!(ds.n_samples(), 2);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.labels, vec![1.0, -1.0]);
+        assert_eq!(ds.sample(0).dot(&[1.0, 1.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn respects_min_dim() {
+        let p = write_tmp("1 1:1\n");
+        let ds = load(&p, 10).unwrap();
+        assert_eq!(ds.dim(), 10);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let p = write_tmp("1 0:1\n");
+        assert!(load(&p, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(load(write_tmp("1 a:b\n"), 0).is_err());
+        assert!(load(write_tmp("x 1:1\n"), 0).is_err());
+        assert!(load(write_tmp(""), 0).is_err());
+        assert!(load(write_tmp("1 2:1 2:3\n"), 0).is_err());
+    }
+
+    #[test]
+    fn unsorted_indices_ok() {
+        let p = write_tmp("1 3:1 1:2\n");
+        let ds = load(&p, 0).unwrap();
+        assert_eq!(ds.sample(0).dot(&[1.0, 0.0, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn missing_file() {
+        assert!(load("/nonexistent/file.svm", 0).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Data partitioning across workers (paper §5.3).
+//!
+//! Two regimes:
+//! * **randomly shuffled** — datapoints assigned to workers uniformly at
+//!   random (the easy, near-iid case; Figs. 7–9);
+//! * **sorted** — samples sorted by label so each worker holds (almost)
+//!   only one class, *and* same-label workers are placed contiguously on
+//!   the ring so the two label clusters are maximally separated in the
+//!   communication graph ("we try to make the setting as difficult as
+//!   possible", §5.3; Figs. 4–6).
+
+use super::dataset::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    Shuffled,
+    Sorted,
+}
+
+impl PartitionKind {
+    pub fn by_name(name: &str) -> Result<Self, String> {
+        match name {
+            "shuffled" | "random" => Ok(Self::Shuffled),
+            "sorted" => Ok(Self::Sorted),
+            other => Err(format!("unknown partition '{other}'")),
+        }
+    }
+}
+
+/// Assign sample indices to `n_workers` partitions of (near-)equal size.
+/// Returns `n_workers` index lists. Deterministic given the seed.
+pub fn partition_indices(
+    ds: &Dataset,
+    n_workers: usize,
+    kind: PartitionKind,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(n_workers >= 1);
+    let m = ds.n_samples();
+    assert!(m >= n_workers, "fewer samples ({m}) than workers ({n_workers})");
+    let mut order: Vec<usize> = (0..m).collect();
+    let mut rng = Rng::new(seed);
+    match kind {
+        PartitionKind::Shuffled => {
+            rng.shuffle(&mut order);
+        }
+        PartitionKind::Sorted => {
+            // Sort by label: all −1 first, then all +1 (stable w.r.t.
+            // original order). Workers then receive contiguous chunks, so
+            // each worker sees (almost) one label; on a ring topology,
+            // consecutive worker ids are adjacent, which produces exactly
+            // the paper's two connected label clusters.
+            order.sort_by(|&a, &b| {
+                ds.label(a).partial_cmp(&ds.label(b)).unwrap().then(a.cmp(&b))
+            });
+        }
+    }
+    // contiguous chunks, sizes differing by ≤ 1
+    let base = m / n_workers;
+    let extra = m % n_workers;
+    let mut out = Vec::with_capacity(n_workers);
+    let mut cursor = 0;
+    for w in 0..n_workers {
+        let len = base + usize::from(w < extra);
+        out.push(order[cursor..cursor + len].to_vec());
+        cursor += len;
+    }
+    out
+}
+
+/// Build per-worker datasets.
+pub fn partition(
+    ds: &Dataset,
+    n_workers: usize,
+    kind: PartitionKind,
+    seed: u64,
+) -> Vec<Dataset> {
+    partition_indices(ds, n_workers, kind, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(w, idx)| ds.subset(&idx, &format!("{}#w{w}", ds.name)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Features;
+
+    fn mk(labels: Vec<f64>) -> Dataset {
+        let rows: Vec<Vec<f64>> = (0..labels.len()).map(|i| vec![i as f64]).collect();
+        Dataset { features: Features::Dense { rows, dim: 1 }, labels, name: "t".into() }
+    }
+
+    #[test]
+    fn sizes_balanced() {
+        let ds = mk(vec![1.0; 10]);
+        let parts = partition_indices(&ds, 3, PartitionKind::Shuffled, 1);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        // all indices used exactly once
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sorted_separates_classes() {
+        // 6 samples: labels -1,-1,-1,+1,+1,+1 shuffled in the input order.
+        let ds = mk(vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0]);
+        let parts = partition(&ds, 2, PartitionKind::Sorted, 3);
+        // worker 0 gets all −1, worker 1 all +1.
+        assert_eq!(parts[0].positive_fraction(), 0.0);
+        assert_eq!(parts[1].positive_fraction(), 1.0);
+    }
+
+    #[test]
+    fn sorted_odd_split_single_mixed_worker() {
+        // Paper: "with the possible exception of one worker that gets two
+        // labels assigned".
+        let ds = mk(vec![-1.0, -1.0, -1.0, 1.0, 1.0, 1.0, 1.0]);
+        let parts = partition(&ds, 3, PartitionKind::Sorted, 3);
+        let mixed = parts
+            .iter()
+            .filter(|p| {
+                let f = p.positive_fraction();
+                f > 0.0 && f < 1.0
+            })
+            .count();
+        assert!(mixed <= 1, "more than one mixed worker");
+    }
+
+    #[test]
+    fn shuffled_mixes_classes() {
+        let labels: Vec<f64> =
+            (0..200).map(|i| if i < 100 { -1.0 } else { 1.0 }).collect();
+        let ds = mk(labels);
+        let parts = partition(&ds, 4, PartitionKind::Shuffled, 7);
+        for p in &parts {
+            let f = p.positive_fraction();
+            assert!((0.3..0.7).contains(&f), "shuffled worker too pure: {f}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = mk((0..50).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect());
+        let a = partition_indices(&ds, 5, PartitionKind::Shuffled, 9);
+        let b = partition_indices(&ds, 5, PartitionKind::Shuffled, 9);
+        assert_eq!(a, b);
+        let c = partition_indices(&ds, 5, PartitionKind::Shuffled, 10);
+        assert_ne!(a, c);
+    }
+}

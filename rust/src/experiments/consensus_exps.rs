@@ -1,0 +1,323 @@
+//! Figures 2 & 3 and Table 3: average consensus on the ring, n = 25,
+//! d = 2000, epsilon-like initial vectors.
+//!
+//! * Fig. 2 — (qsgd₂₅₆): E-G converges; CHOCO(qsgd₂₅₆, γ=1) matches its
+//!   *rate* while shipping 8-bit coordinates; Q1-G/Q2-G stall at 1e-4–1e-5.
+//! * Fig. 3 — (rand₁% / top₁%): CHOCO still converges linearly (~100×
+//!   slower per iteration, equal per bit); Q1-G zeroes out, Q2-G diverges.
+//! * Table 3 — tuned γ per operator via grid search.
+
+use super::{consensus_metric, run_curve, summarize, write_traces, ExpOptions};
+use crate::compress::{Compressor, QsgdS, RandK, Rescaled, TopK};
+use crate::consensus::{make_nodes, Scheme};
+use crate::coordinator::Trace;
+use crate::data::{epsilon_like, DenseSynthConfig, Features};
+use crate::linalg::vecops;
+use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+/// Paper configuration: ring n=25, d=2000, x⁽⁰⁾ = first n epsilon vectors.
+pub struct ConsensusSetup {
+    pub graph: Graph,
+    pub weights: Vec<crate::topology::LocalWeights>,
+    pub x0: Vec<Vec<f64>>,
+    pub target: Vec<f64>,
+}
+
+pub fn setup(n: usize, d: usize, seed: u64) -> ConsensusSetup {
+    let graph = Graph::ring(n);
+    let w = mixing_matrix(&graph, MixingRule::Uniform);
+    let weights = local_weights(&graph, &w);
+    // x_i^(0) := i-th vector of the (synthetic) epsilon dataset (§5.2).
+    let ds = epsilon_like(&DenseSynthConfig {
+        n_samples: n,
+        dim: d,
+        margin: 2.0,
+        label_noise: 0.0,
+        seed,
+    });
+    let x0: Vec<Vec<f64>> = match &ds.features {
+        Features::Dense { rows, .. } => rows.clone(),
+        _ => unreachable!(),
+    };
+    let target = vecops::mean_of(&x0);
+    ConsensusSetup { graph, weights, x0, target }
+}
+
+/// The paper's tuned consensus stepsizes (Table 3).
+pub const GAMMA_QSGD256: f64 = 1.0;
+pub const GAMMA_RAND1PCT: f64 = 0.011;
+pub const GAMMA_TOP1PCT: f64 = 0.046;
+
+fn curve(
+    s: &ConsensusSetup,
+    scheme: Scheme,
+    rounds: usize,
+    log_every: usize,
+    seed: u64,
+) -> Trace {
+    let name = scheme.name();
+    let nodes = make_nodes(&scheme, &s.x0, &s.weights);
+    run_curve(
+        &name,
+        nodes,
+        &s.graph,
+        rounds,
+        log_every,
+        seed,
+        consensus_metric(s.target.clone()),
+    )
+}
+
+/// Figure 2: qsgd₂₅₆ quantization.
+pub fn fig2(opts: &ExpOptions) -> Result<Vec<Trace>, String> {
+    let (n, d) = (25, 2000);
+    let s = setup(n, d, opts.seed);
+    let rounds = opts.iters(800, 4000);
+    let log = (rounds / 80).max(1);
+    opts.say(&format!("fig2: consensus, ring n={n}, d={d}, qsgd_256 ({rounds} rounds)"));
+
+    let q256 = || QsgdS { s: 256 };
+    let tau = q256().tau(d);
+    let mut traces = vec![
+        curve(&s, Scheme::Exact { gamma: 1.0 }, rounds, log, opts.seed),
+        curve(
+            &s,
+            Scheme::Q1 { op: Box::new(Rescaled::new(q256(), tau)) },
+            rounds,
+            log,
+            opts.seed,
+        ),
+        curve(
+            &s,
+            Scheme::Q2 { op: Box::new(Rescaled::new(q256(), tau)) },
+            rounds,
+            log,
+            opts.seed,
+        ),
+        curve(
+            &s,
+            Scheme::Choco { gamma: GAMMA_QSGD256, op: Box::new(q256()) },
+            rounds,
+            log,
+            opts.seed,
+        ),
+    ];
+    // PJRT cross-check curve: the same CHOCO rounds executed through the
+    // AOT-compiled choco_round + qsgd artifacts (L1/L2 on the experiment
+    // path), when artifacts are present.
+    if let Ok(t) = pjrt_choco_curve(&s, rounds.min(400), log, opts.seed) {
+        traces.push(t);
+    }
+    summarize(opts, "fig2", &traces);
+    write_traces(opts, "fig2_consensus_qsgd256", &traces)?;
+    Ok(traces)
+}
+
+/// Figure 3: rand₁% and top₁% sparsification.
+pub fn fig3(opts: &ExpOptions) -> Result<Vec<Trace>, String> {
+    let (n, d) = (25, 2000);
+    let s = setup(n, d, opts.seed);
+    let rounds = opts.iters(4000, 60000);
+    let log = (rounds / 100).max(1);
+    opts.say(&format!("fig3: consensus, ring n={n}, d={d}, rand/top 1% ({rounds} rounds)"));
+
+    let k = (d as f64 * 0.01).ceil() as usize; // 20
+    let traces = vec![
+        curve(&s, Scheme::Exact { gamma: 1.0 }, opts.iters(800, 4000), log, opts.seed),
+        curve(
+            &s,
+            Scheme::Q1 { op: Box::new(Rescaled::new(RandK { k }, d as f64 / k as f64)) },
+            rounds,
+            log,
+            opts.seed,
+        ),
+        curve(
+            &s,
+            Scheme::Q2 { op: Box::new(Rescaled::new(RandK { k }, d as f64 / k as f64)) },
+            rounds,
+            log,
+            opts.seed,
+        ),
+        curve(
+            &s,
+            Scheme::Choco { gamma: GAMMA_RAND1PCT, op: Box::new(RandK { k }) },
+            rounds,
+            log,
+            opts.seed,
+        ),
+        curve(
+            &s,
+            Scheme::Choco { gamma: GAMMA_TOP1PCT, op: Box::new(TopK { k }) },
+            rounds,
+            log,
+            opts.seed,
+        ),
+    ];
+    summarize(opts, "fig3", &traces);
+    write_traces(opts, "fig3_consensus_sparse", &traces)?;
+    Ok(traces)
+}
+
+/// CHOCO consensus via the PJRT artifacts (matrix form, Appendix B).
+fn pjrt_choco_curve(
+    s: &ConsensusSetup,
+    rounds: usize,
+    log_every: usize,
+    seed: u64,
+) -> Result<Trace, String> {
+    use crate::runtime::{Manifest, PjrtEngine, Tensor};
+    let mut engine = PjrtEngine::new(Manifest::load_default()?)?;
+    let n = s.x0.len();
+    let d = s.x0[0].len();
+    let art_round = format!("choco_round_n{n}_d{d}");
+    let art_q = format!("qsgd_s16_d{d}");
+    engine.artifact(&art_round)?;
+    engine.artifact(&art_q)?;
+    let tau = engine.artifact(&art_q)?.meta_f64("tau").ok_or("missing tau")?;
+    let _ = tau;
+
+    let mut x: Vec<f32> = s.x0.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect();
+    let mut xhat = vec![0.0f32; n * d];
+    let wmat = mixing_matrix(&s.graph, MixingRule::Uniform);
+    let wflat: Vec<f32> = wmat.data.iter().map(|&v| v as f32).collect();
+    let mut rng = crate::util::rng::Rng::for_stream(seed, 0x504A5254); // "PJRT"
+
+    let mut trace = Trace::new("choco_qsgd16_pjrt", &["iter", "bits", "time_s", "metric"]);
+    let bits_per_round = (n * 2) as u64 * (4 * d as u64 + 32); // ring: deg 2, log2(16) bits + norm
+    let mut bits = 0u64;
+    let metric = |x: &[f32]| -> f64 {
+        let mut acc = 0.0;
+        for i in 0..n {
+            for j in 0..d {
+                let diff = x[i * d + j] as f64 - s.target[j];
+                acc += diff * diff;
+            }
+        }
+        acc / n as f64
+    };
+    trace.push(vec![0.0, 0.0, 0.0, metric(&x)]);
+    for t in 0..rounds {
+        // q_i = qsgd16(x_i − x̂_i) per node, via the qsgd artifact.
+        let mut q = vec![0.0f32; n * d];
+        for i in 0..n {
+            let diff: Vec<f32> =
+                (0..d).map(|j| x[i * d + j] - xhat[i * d + j]).collect();
+            let xi: Vec<f32> = (0..d).map(|_| rng.next_f64() as f32).collect();
+            let out = engine.execute(&art_q, &[Tensor::F32(diff), Tensor::F32(xi)])?;
+            q[i * d..(i + 1) * d].copy_from_slice(&out[0]);
+        }
+        // (x, x̂) ← choco_round(x, x̂, q, W) via the round artifact.
+        let out = engine.execute(
+            &art_round,
+            &[
+                Tensor::F32(x.clone()),
+                Tensor::F32(xhat.clone()),
+                Tensor::F32(q),
+                Tensor::F32(wflat.clone()),
+            ],
+        )?;
+        x = out[0].clone();
+        xhat = out[1].clone();
+        bits += bits_per_round;
+        if (t + 1) % log_every == 0 || t + 1 == rounds {
+            trace.push(vec![(t + 1) as f64, bits as f64, 0.0, metric(&x)]);
+        }
+    }
+    Ok(trace)
+}
+
+/// Table 3: γ grid search per compression operator.
+pub fn table3(opts: &ExpOptions) -> Result<Vec<(String, f64, f64)>, String> {
+    let (n, d) = if opts.full { (25, 2000) } else { (12, 400) };
+    let s = setup(n, d, opts.seed);
+    let rounds = opts.iters(600, 3000);
+    let k = (d as f64 * 0.01).ceil() as usize;
+    let grid = [1.0, 0.6, 0.3, 0.1, 0.046, 0.02, 0.011, 0.005];
+    opts.say(&format!("table3: tuning γ on ring n={n}, d={d} over {grid:?}"));
+
+    let mut rows = Vec::new();
+    let ops: Vec<(String, Box<dyn Fn() -> Box<dyn Compressor>>)> = vec![
+        ("qsgd_256".into(), Box::new(|| Box::new(QsgdS { s: 256 }))),
+        ("rand_1%".into(), Box::new(move || Box::new(RandK { k }))),
+        ("top_1%".into(), Box::new(move || Box::new(TopK { k }))),
+    ];
+    for (opname, mk) in &ops {
+        let mut best = (f64::INFINITY, 0.0);
+        for &gamma in &grid {
+            let t = curve(
+                &s,
+                Scheme::Choco { gamma, op: mk() },
+                rounds,
+                rounds / 4,
+                opts.seed,
+            );
+            let fin = t.last("metric");
+            let fin = if fin.is_finite() { fin } else { f64::INFINITY };
+            if fin < best.0 {
+                best = (fin, gamma);
+            }
+        }
+        opts.say(&format!("  {opname:<10} γ* = {:<6} (err {:.3e})", best.1, best.0));
+        rows.push((opname.clone(), best.1, best.0));
+    }
+    // CSV
+    let mut tr = Trace::new("table3", &["gamma", "final_err"]);
+    for (_, g, e) in &rows {
+        tr.push(vec![*g, *e]);
+    }
+    write_traces(opts, "table3_tuned_gamma", &[tr])?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_opts() -> ExpOptions {
+        ExpOptions {
+            out_dir: std::env::temp_dir().join("choco_exp_test"),
+            quiet: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn setup_shapes() {
+        let s = setup(5, 40, 1);
+        assert_eq!(s.x0.len(), 5);
+        assert_eq!(s.x0[0].len(), 40);
+        assert_eq!(s.graph.n(), 5);
+    }
+
+    #[test]
+    fn small_fig2_shape_holds() {
+        // Scaled-down fig2: CHOCO + E-G converge well; Q1/Q2 stall higher.
+        let opts = quiet_opts();
+        let s = setup(8, 64, 3);
+        let rounds = 400;
+        let q = QsgdS { s: 256 };
+        let tau = q.tau(64);
+        let eg = curve(&s, Scheme::Exact { gamma: 1.0 }, rounds, 40, 1);
+        let choco = curve(
+            &s,
+            Scheme::Choco { gamma: 1.0, op: Box::new(q) },
+            rounds,
+            40,
+            1,
+        );
+        let q1 = curve(
+            &s,
+            Scheme::Q1 { op: Box::new(Rescaled::new(q, tau)) },
+            rounds,
+            40,
+            1,
+        );
+        let e_eg = eg.last("metric");
+        let e_choco = choco.last("metric");
+        let e_q1 = q1.last("metric");
+        assert!(e_eg < 1e-12);
+        assert!(e_choco < 1e-8, "choco {e_choco}");
+        assert!(e_q1 > e_choco * 10.0, "q1 {e_q1} vs choco {e_choco}");
+        let _ = opts;
+    }
+}

@@ -1,0 +1,131 @@
+//! End-to-end driver: decentralized transformer-LM training with
+//! CHOCO-SGD, gradients through the AOT-compiled PJRT artifacts,
+//! executed on the threaded actor runtime — all three layers composing:
+//!
+//! L1 Pallas matmul tiles (inside the lowered step) → L2 jax transformer
+//! fwd/bwd (the `transformer_step_*` artifact) → L3 rust CHOCO-SGD nodes
+//! exchanging top-k-compressed parameter deltas over per-edge channels.
+//!
+//! Each node thread owns its own PJRT engine (the client is not shareable
+//! across threads); the flat parameter vector is what the gossip layer
+//! compresses and ships.
+
+use crate::compress::TopK;
+use crate::coordinator::{ActorConfig, Trace};
+use crate::optim::{make_optim_nodes, GradientSource, OptimScheme, Schedule};
+use crate::runtime::{synthetic_corpus, Manifest, PjrtEngine, PjrtTransformer};
+use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use std::path::Path;
+
+/// Run the e2e experiment; writes `results/e2e_loss.csv` and prints the
+/// loss curve. Returns Err if artifacts are missing.
+pub fn run_transformer_e2e(
+    artifact: &str,
+    n: usize,
+    steps: usize,
+    gamma: f64,
+    lr: f64,
+    k_pct: f64,
+    out_dir: &Path,
+) -> Result<(), String> {
+    let graph = Graph::ring(n);
+    let w = mixing_matrix(&graph, MixingRule::Uniform);
+    let lw = local_weights(&graph, &w);
+
+    // Build one PJRT source per node; disjoint corpus shards emulate
+    // decentralized data ownership.
+    let mut sources: Vec<Box<dyn GradientSource>> = Vec::with_capacity(n);
+    let mut n_params = 0;
+    let mut x_init = Vec::new();
+    for i in 0..n {
+        let engine = PjrtEngine::new(Manifest::load_default()?)?;
+        let info = engine
+            .manifest()
+            .find(artifact)
+            .ok_or_else(|| format!("artifact '{artifact}' not built (run `make artifacts`)"))?;
+        let vocab = info.meta_usize("vocab").ok_or("missing vocab")?;
+        let corpus = synthetic_corpus(8192, vocab, 1000 + i as u64);
+        let src = PjrtTransformer::new(engine, artifact, corpus)?;
+        if i == 0 {
+            n_params = src.n_params;
+            x_init = src.load_init()?;
+        }
+        sources.push(Box::new(src));
+    }
+    println!(
+        "e2e: {artifact} ({n_params} params) on ring n={n}, CHOCO-SGD top_{:.0}% γ={gamma} lr={lr}, {steps} steps",
+        k_pct
+    );
+
+    let k = ((n_params as f64) * k_pct / 100.0).ceil() as usize;
+    let scheme = OptimScheme::ChocoSgd {
+        schedule: Schedule::Const(lr),
+        gamma,
+        op: Box::new(TopK { k }),
+    };
+    let x0 = vec![x_init; n];
+    let nodes = make_optim_nodes(&scheme, sources, &x0, &lw);
+
+    // Threaded actor runtime with value-mode messages (n_params-length
+    // deltas; serialization mode is exercised by the integration tests).
+    let snapshot_every = (steps / 20).max(1);
+    let cfg = ActorConfig { rounds: steps, snapshot_every, seed: 7, serialize: false };
+    let start = std::time::Instant::now();
+    let result = crate::coordinator::run_actors(nodes, &graph, &cfg);
+    let wall = start.elapsed().as_secs_f64();
+
+    // Loss curve: consensus distance between node snapshots + final
+    // training-loss measurement on node 0's iterate via a fresh engine.
+    let mut trace = Trace::new("e2e", &["round", "consensus_spread"]);
+    let mut rounds: Vec<usize> = result.snapshots.iter().map(|s| s.round).collect();
+    rounds.sort_unstable();
+    rounds.dedup();
+    for r in rounds {
+        let xs: Vec<Vec<f64>> = result
+            .snapshots
+            .iter()
+            .filter(|s| s.round == r)
+            .map(|s| s.x.clone())
+            .collect();
+        if xs.len() == n {
+            let mean = crate::linalg::vecops::mean_of(&xs);
+            let spread = crate::linalg::vecops::consensus_error(&xs, &mean) / n as f64;
+            trace.push(vec![r as f64, spread]);
+        }
+    }
+
+    // Final loss on the averaged model (fresh engine, held-out shard).
+    let engine = PjrtEngine::new(Manifest::load_default()?)?;
+    let info = engine.manifest().find(artifact).unwrap();
+    let vocab = info.meta_usize("vocab").unwrap();
+    let mut eval = PjrtTransformer::new(engine, artifact, synthetic_corpus(8192, vocab, 999))?;
+    let xbar = crate::linalg::vecops::mean_of(&result.iterates);
+    let mut rng = crate::util::rng::Rng::new(1);
+    let mut g = vec![0.0; n_params];
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        eval.grad(&xbar, 0, &mut rng, &mut g);
+        losses.push(eval.last_loss);
+    }
+    let final_loss = crate::util::stats::mean(&losses);
+    let init_vocab_loss = (vocab as f64).ln();
+    println!(
+        "  finished in {wall:.1}s: eval loss {final_loss:.4} (random-init ≈ {init_vocab_loss:.4}), \
+         bits shipped {}",
+        crate::util::human_bytes(result.bits as f64 / 8.0)
+    );
+    println!("  consensus spread {}", trace.sparkline("consensus_spread", 40));
+
+    std::fs::create_dir_all(out_dir).ok();
+    let mut summary = Trace::new("e2e_summary", &["final_loss", "random_init_loss", "bits", "wall_s"]);
+    summary.push(vec![final_loss, init_vocab_loss, result.bits as f64, wall]);
+    Trace::write_csv(&[summary], out_dir.join("e2e_summary.csv")).map_err(|e| e.to_string())?;
+    Trace::write_csv(&[trace], out_dir.join("e2e_consensus.csv")).map_err(|e| e.to_string())?;
+
+    if final_loss >= init_vocab_loss {
+        return Err(format!(
+            "e2e training did not reduce loss ({final_loss:.4} ≥ {init_vocab_loss:.4})"
+        ));
+    }
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Figure/table reproduction drivers (paper §5; index in DESIGN.md §5).
+//!
+//! Every driver writes `results/<id>_*.csv` (one row per logged point,
+//! `series` column = algorithm) and prints a terminal summary with ASCII
+//! sparklines. Defaults are CI-scale (one core, minutes); `--full` runs
+//! paper-scale iteration counts.
+
+pub mod consensus_exps;
+pub mod sgd_exps;
+pub mod e2e;
+pub mod speedup;
+pub mod tables;
+
+use crate::consensus::GossipNode;
+use crate::coordinator::{LinkModel, RoundConfig, RoundEngine, Trace};
+use crate::models::Objective;
+use crate::topology::Graph;
+use std::path::PathBuf;
+
+/// Options shared by all drivers (from the CLI).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub out_dir: PathBuf,
+    /// Paper-scale iteration counts instead of CI-scale.
+    pub full: bool,
+    pub seed: u64,
+    /// Dataset-size multiplier for the synthetic generators.
+    pub scale: f64,
+    pub quiet: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            out_dir: PathBuf::from("results"),
+            full: false,
+            seed: 42,
+            scale: 1.0,
+            quiet: false,
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn say(&self, msg: &str) {
+        if !self.quiet {
+            println!("{msg}");
+        }
+    }
+
+    /// CI-scale vs paper-scale iteration budget.
+    pub fn iters(&self, ci: usize, full: usize) -> usize {
+        if self.full {
+            full
+        } else {
+            ci
+        }
+    }
+}
+
+/// Run one algorithm's nodes for `rounds`, logging `metric`, and return
+/// the trace.
+pub fn run_curve(
+    name: &str,
+    nodes: Vec<Box<dyn GossipNode>>,
+    graph: &Graph,
+    rounds: usize,
+    log_every: usize,
+    seed: u64,
+    metric: crate::coordinator::round::MetricFn<'_>,
+) -> Trace {
+    let mut engine = RoundEngine::new(nodes, graph, seed, LinkModel::default());
+    let cfg = RoundConfig { rounds, log_every, seed, ..Default::default() };
+    engine.run(name, &cfg, metric)
+}
+
+/// Global-suboptimality metric closure `f(x̄) − f*` over worker objectives.
+pub fn suboptimality_metric<'a>(
+    objectives: &'a [Box<dyn Objective>],
+    fstar: f64,
+) -> crate::coordinator::round::MetricFn<'a> {
+    Box::new(move |nodes: &[Box<dyn GossipNode>]| {
+        let xbar = crate::linalg::vecops::mean_of(
+            &nodes.iter().map(|n| n.x().to_vec()).collect::<Vec<_>>(),
+        );
+        crate::models::global_loss(objectives, &xbar) - fstar
+    })
+}
+
+/// Consensus-error metric closure `(1/n)Σ‖xᵢ − x̄₀‖²` against the fixed
+/// initial average.
+pub fn consensus_metric(target: Vec<f64>) -> crate::coordinator::round::MetricFn<'static> {
+    Box::new(move |nodes: &[Box<dyn GossipNode>]| {
+        nodes.iter().map(|n| crate::linalg::vecops::dist_sq(n.x(), &target)).sum::<f64>()
+            / nodes.len() as f64
+    })
+}
+
+/// Print a per-curve summary block.
+pub fn summarize(opts: &ExpOptions, id: &str, traces: &[Trace]) {
+    if opts.quiet {
+        return;
+    }
+    println!("── {id} ──");
+    for t in traces {
+        let final_metric = t.last("metric");
+        let bits = t.last("bits");
+        println!(
+            "  {:<28} {}  final={:.3e}  bits={}",
+            t.name,
+            t.sparkline("metric", 40),
+            final_metric,
+            crate::util::human_bytes(bits / 8.0),
+        );
+    }
+}
+
+/// Write traces to `<out>/<id>.csv`.
+pub fn write_traces(opts: &ExpOptions, id: &str, traces: &[Trace]) -> Result<(), String> {
+    let path = opts.out_dir.join(format!("{id}.csv"));
+    Trace::write_csv(traces, &path).map_err(|e| format!("write {}: {e}", path.display()))?;
+    opts.say(&format!("  wrote {}", path.display()));
+    Ok(())
+}

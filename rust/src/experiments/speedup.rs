@@ -1,0 +1,104 @@
+//! Theorem 4 speedup check: the leading term of CHOCO-SGD's rate is
+//! O(σ̄²/(μ n T)) — doubling the number of workers halves the
+//! suboptimality at a fixed iteration count (for noise-dominated
+//! problems). We verify on noisy quadratic consensus objectives, where
+//! f* is known in closed form.
+
+use super::{suboptimality_metric, write_traces, ExpOptions};
+use crate::coordinator::Trace;
+use crate::models::{Objective, QuadraticConsensus};
+use crate::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
+use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use crate::util::rng::Rng;
+
+/// Run CHOCO-SGD on n workers; return final E[f(x̄) − f*].
+fn final_gap(n: usize, rounds: usize, opts: &ExpOptions, rep: u64) -> f64 {
+    let d = 20;
+    let noise = 2.0;
+    let mut rng = Rng::new(opts.seed + rep);
+    let workers: Vec<QuadraticConsensus> = (0..n)
+        .map(|_| {
+            let mut c = vec![0.0; d];
+            rng.fill_gaussian(&mut c);
+            QuadraticConsensus::new(c, noise)
+        })
+        .collect();
+    let objectives: Vec<Box<dyn Objective>> =
+        workers.iter().map(|w| Box::new(w.clone()) as Box<dyn Objective>).collect();
+    let (_, fstar) = QuadraticConsensus::global_optimum(&workers);
+    let sources = workers
+        .iter()
+        .map(|w| {
+            Box::new(NativeGrad { objective: Box::new(w.clone()) })
+                as Box<dyn crate::optim::GradientSource>
+        })
+        .collect();
+    let graph = Graph::ring(n);
+    let w = mixing_matrix(&graph, MixingRule::Uniform);
+    let lw = local_weights(&graph, &w);
+    let x0 = vec![vec![0.0; d]; n];
+    let scheme = OptimScheme::ChocoSgd {
+        schedule: Schedule::Thm4 { mu: 1.0, a: 50.0 },
+        gamma: 0.4,
+        op: Box::new(crate::compress::RandK { k: d / 4 }),
+    };
+    let nodes = make_optim_nodes(&scheme, sources, &x0, &lw);
+    let t = super::run_curve(
+        "choco",
+        nodes,
+        &graph,
+        rounds,
+        rounds,
+        opts.seed + 1000 * rep,
+        suboptimality_metric(&objectives, fstar),
+    );
+    t.last("metric")
+}
+
+/// The n-speedup experiment: fixed T, growing n.
+pub fn speedup(opts: &ExpOptions) -> Result<Vec<(usize, f64)>, String> {
+    let rounds = opts.iters(2000, 10000);
+    let reps = if opts.full { 10 } else { 4 };
+    opts.say(&format!("speedup (Thm 4): CHOCO-SGD, fixed T={rounds}, n ∈ {{4,8,16}} × {reps} reps"));
+    let mut rows = Vec::new();
+    for n in [4usize, 8, 16] {
+        let mut acc = 0.0;
+        for rep in 0..reps {
+            acc += final_gap(n, rounds, opts, rep as u64);
+        }
+        let gap = acc / reps as f64;
+        opts.say(&format!("  n={n:<3} E[f(x̄)−f*] = {gap:.4e}"));
+        rows.push((n, gap));
+    }
+    // check: gap(n) should shrink roughly like 1/n.
+    let ratio = rows[0].1 / rows[2].1; // n=4 vs n=16 → expect ≈ 4
+    opts.say(&format!("  gap(4)/gap(16) = {ratio:.2} (theory: ≈4 when noise-dominated)"));
+    let mut tr = Trace::new("speedup", &["n", "gap"]);
+    for (n, g) in &rows {
+        tr.push(vec![*n as f64, *g]);
+    }
+    write_traces(opts, "speedup_thm4", &[tr])?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_workers_reduce_variance() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir().join("choco_speedup_test"),
+            quiet: true,
+            ..Default::default()
+        };
+        let rows = speedup(&opts).unwrap();
+        // monotone improvement n=4 → n=16 with generous slack
+        assert!(
+            rows[2].1 < rows[0].1 * 0.7,
+            "no speedup: gap(4)={}, gap(16)={}",
+            rows[0].1,
+            rows[2].1
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Tables 1 & 2: topology spectral gaps and dataset statistics.
+
+use super::{ExpOptions};
+use crate::coordinator::Trace;
+use crate::topology::{mixing_matrix, Graph, MixingRule, Spectrum};
+use crate::util::stats;
+
+/// Table 1: δ⁻¹ scaling per topology (ring O(n²), torus O(n),
+/// complete O(1)) with uniform averaging W. Returns
+/// (topology, n, δ, δ⁻¹, max degree) rows and verifies the scaling
+/// exponents by log-log fit.
+pub fn table1(opts: &ExpOptions) -> Result<Vec<(String, usize, f64, f64, usize)>, String> {
+    let ns = [9usize, 16, 25, 36, 49, 64];
+    let mut rows = Vec::new();
+    opts.say("table1: spectral gaps (uniform W)");
+    opts.say(&format!("  {:<10} {:>4} {:>12} {:>12} {:>7}", "topology", "n", "delta", "1/delta", "degree"));
+    let mut fits = Vec::new();
+    for topo in ["ring", "torus", "complete"] {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &n in &ns {
+            let g = Graph::by_name(topo, n)?;
+            let w = mixing_matrix(&g, MixingRule::Uniform);
+            let s = Spectrum::of(&w);
+            opts.say(&format!(
+                "  {:<10} {:>4} {:>12.6} {:>12.2} {:>7}",
+                topo,
+                n,
+                s.delta,
+                1.0 / s.delta,
+                g.max_degree()
+            ));
+            rows.push((topo.to_string(), n, s.delta, 1.0 / s.delta, g.max_degree()));
+            if s.delta < 1.0 - 1e-9 {
+                xs.push((n as f64).ln());
+                ys.push((1.0 / s.delta).ln());
+            }
+        }
+        if xs.len() >= 2 {
+            let (_, slope) = stats::linear_fit(&xs, &ys);
+            fits.push((topo, slope));
+            opts.say(&format!("  {topo}: δ⁻¹ ~ n^{slope:.2}"));
+        } else {
+            fits.push((topo, 0.0));
+            opts.say(&format!("  {topo}: δ⁻¹ = O(1)"));
+        }
+    }
+    let mut tr = Trace::new("table1", &["n", "delta", "inv_delta", "degree"]);
+    for (_, n, d, inv, deg) in &rows {
+        tr.push(vec![*n as f64, *d, *inv, *deg as f64]);
+    }
+    super::write_traces(opts, "table1_spectral_gaps", &[tr])?;
+    Ok(rows)
+}
+
+/// Table 2: dataset shapes/densities (synthetic stand-ins at the current
+/// scale; real libsvm files take precedence if placed in data/).
+pub fn table2(opts: &ExpOptions) -> Result<Vec<(String, usize, usize, f64)>, String> {
+    let mut rows = Vec::new();
+    opts.say("table2: datasets");
+    opts.say(&format!("  {:<28} {:>8} {:>8} {:>9}", "dataset", "m", "d", "density"));
+    for name in ["epsilon", "rcv1"] {
+        let ds = crate::data::load_or_generate(name, opts.scale, opts.seed)?;
+        opts.say(&format!(
+            "  {:<28} {:>8} {:>8} {:>8.2}%",
+            ds.name,
+            ds.n_samples(),
+            ds.dim(),
+            ds.density() * 100.0
+        ));
+        rows.push((ds.name.clone(), ds.n_samples(), ds.dim(), ds.density()));
+    }
+    let mut tr = Trace::new("table2", &["m", "d", "density"]);
+    for (_, m, d, dens) in &rows {
+        tr.push(vec![*m as f64, *d as f64, *dens]);
+    }
+    super::write_traces(opts, "table2_datasets", &[tr])?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_scaling_exponents() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir().join("choco_tables_test"),
+            quiet: true,
+            ..Default::default()
+        };
+        let rows = table1(&opts).unwrap();
+        // ring at n=64 must have much smaller δ than torus at n=64
+        let ring64 = rows.iter().find(|r| r.0 == "ring" && r.1 == 64).unwrap().2;
+        let torus64 = rows.iter().find(|r| r.0 == "torus" && r.1 == 64).unwrap().2;
+        let complete64 = rows.iter().find(|r| r.0 == "complete" && r.1 == 64).unwrap().2;
+        assert!(ring64 < torus64 && torus64 < complete64);
+        assert!((complete64 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_densities() {
+        let opts = ExpOptions {
+            out_dir: std::env::temp_dir().join("choco_tables_test2"),
+            quiet: true,
+            scale: 0.05,
+            ..Default::default()
+        };
+        let rows = table2(&opts).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].3 - 1.0).abs() < 1e-9); // epsilon dense
+        assert!(rows[1].3 < 0.01); // rcv1 sparse
+    }
+}

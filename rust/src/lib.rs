@@ -1,0 +1,31 @@
+//! # CHOCO — decentralized stochastic optimization with compressed communication
+//!
+//! A reproduction of *"Decentralized Stochastic Optimization and Gossip
+//! Algorithms with Compressed Communication"* (Koloskova, Stich, Jaggi —
+//! ICML 2019) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the decentralized coordinator: communication
+//!   graphs and gossip matrices, compression operators with exact wire
+//!   accounting, the CHOCO-Gossip consensus algorithm and the CHOCO-SGD
+//!   optimizer plus every baseline the paper compares against, a network
+//!   simulator and a threaded actor runtime, and drivers reproducing every
+//!   figure/table of the paper's evaluation.
+//! * **L2/L1 (python/compile)** — JAX models + Pallas kernels, AOT-lowered
+//!   once to HLO text artifacts that this crate executes through the
+//!   [`runtime`] module's PJRT client. Python never runs at experiment time.
+//!
+//! Quickstart: see `examples/quickstart.rs`, or run
+//! `cargo run --release -- repro fig2`.
+
+pub mod benchlib;
+pub mod compress;
+pub mod consensus;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod linalg;
+pub mod topology;
+pub mod util;

@@ -1,0 +1,194 @@
+//! Row-major dense matrix. Used for mixing matrices `W ∈ R^{n×n}`, the
+//! matrix-form consensus reference implementation (`X ∈ R^{d×n}` stored as
+//! n rows of length d for cache-friendly per-node access), and small
+//! dataset blocks.
+
+use crate::linalg::vecops;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major storage, `data[r * cols + c]`.
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self { rows: rows.len(), cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.get(r, c);
+            }
+        }
+        t
+    }
+
+    /// `self · other`
+    pub fn matmul(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = DenseMatrix::zeros(self.rows, other.cols);
+        // ikj loop order: stream other's rows.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                vecops::axpy(a, orow, out_row);
+            }
+        }
+        out
+    }
+
+    /// `y = self · x` for a vector x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|r| vecops::dot(self.row(r), x)).collect()
+    }
+
+    /// `y = selfᵀ · x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            vecops::axpy(x[r], self.row(r), &mut y);
+        }
+        y
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        vecops::norm2(&self.data)
+    }
+
+    /// Max |a_ij − b_ij|.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        vecops::max_abs_diff(&self.data, &other.data)
+    }
+
+    /// Is this matrix symmetric to within `tol`?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for r in 0..self.rows {
+            for c in (r + 1)..self.cols {
+                if (self.get(r, c) - self.get(c, r)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Is this matrix doubly stochastic (rows and columns sum to 1,
+    /// entries ≥ −tol) to within `tol`?
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        let n = self.rows;
+        for r in 0..n {
+            let s: f64 = self.row(r).iter().sum();
+            if (s - 1.0).abs() > tol {
+                return false;
+            }
+        }
+        for c in 0..n {
+            let s: f64 = (0..n).map(|r| self.get(r, c)).sum();
+            if (s - 1.0).abs() > tol {
+                return false;
+            }
+        }
+        self.data.iter().all(|&v| v >= -tol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let i3 = DenseMatrix::identity(3);
+        let a = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]);
+        assert_eq!(i3.matmul(&a), a);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = DenseMatrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, DenseMatrix::from_rows(&[vec![2.0, 1.0], vec![4.0, 3.0]]));
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(a.matvec_t(&[1.0, 1.0]), vec![4.0, 6.0]);
+        assert_eq!(a.transpose().matvec(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn stochastic_checks() {
+        let w = DenseMatrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        assert!(w.is_doubly_stochastic(1e-12));
+        assert!(w.is_symmetric(1e-12));
+        let bad = DenseMatrix::from_rows(&[vec![0.9, 0.5], vec![0.1, 0.5]]);
+        assert!(!bad.is_doubly_stochastic(1e-12));
+    }
+}

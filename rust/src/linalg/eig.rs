@@ -1,0 +1,137 @@
+//! Symmetric eigensolver (cyclic Jacobi rotations).
+//!
+//! Used to compute the gossip-matrix spectrum exactly: the spectral gap
+//! `δ = 1 − |λ₂(W)|` and `β = ‖I − W‖₂ = max_i |1 − λᵢ(W)|` drive both the
+//! theoretical stepsize γ*(δ, ω) of Theorem 2 and the Table-1 scaling
+//! study. Network sizes are ≤ a few hundred, so O(n³) Jacobi is plenty and
+//! avoids any external LAPACK dependency.
+
+use crate::linalg::DenseMatrix;
+
+/// All eigenvalues of a symmetric matrix, sorted descending.
+///
+/// Panics if the matrix is not square/symmetric (tolerance 1e-9).
+pub fn symmetric_eigenvalues(a: &DenseMatrix) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols, "eigenvalues of non-square matrix");
+    assert!(a.is_symmetric(1e-9), "matrix not symmetric");
+    let n = a.rows;
+    let mut m = a.clone();
+
+    // Cyclic Jacobi: sweep all (p, q) pairs, rotate away off-diagonals.
+    let max_sweeps = 100;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m.get(p, q) * m.get(p, q);
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation J(p, q, θ) on both sides: m = Jᵀ m J.
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+            }
+        }
+    }
+
+    let mut eigs: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    eigs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    eigs
+}
+
+/// Spectral two-norm of a symmetric matrix: max |λᵢ|.
+pub fn symmetric_two_norm(a: &DenseMatrix) -> f64 {
+    symmetric_eigenvalues(a)
+        .into_iter()
+        .map(f64::abs)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = DenseMatrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, -1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let e = symmetric_eigenvalues(&a);
+        assert_eq!(e, vec![3.0, 2.0, -1.0]);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = DenseMatrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = symmetric_eigenvalues(&a);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ring_gossip_matrix_eigs() {
+        // Uniform gossip on a 4-ring with self-loops: w_ii = w_{i,i±1} = 1/3.
+        // Circulant eigenvalues: 1/3 + 2/3 cos(2πk/4) → {1, 1/3, 1/3, -1/3}.
+        let n = 4;
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            a.set(i, i, 1.0 / 3.0);
+            a.set(i, (i + 1) % n, 1.0 / 3.0);
+            a.set(i, (i + n - 1) % n, 1.0 / 3.0);
+        }
+        let e = symmetric_eigenvalues(&a);
+        assert!((e[0] - 1.0).abs() < 1e-10);
+        assert!((e[1] - 1.0 / 3.0).abs() < 1e-10);
+        assert!((e[3] + 1.0 / 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn two_norm() {
+        let a = DenseMatrix::from_rows(&[vec![0.0, 2.0], vec![2.0, 0.0]]);
+        assert!((symmetric_two_norm(&a) - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn invariant_trace_preserved() {
+        // trace = sum of eigenvalues
+        let a = DenseMatrix::from_rows(&[
+            vec![1.0, 0.5, 0.2],
+            vec![0.5, 2.0, -0.3],
+            vec![0.2, -0.3, 0.5],
+        ]);
+        let e = symmetric_eigenvalues(&a);
+        let tr = 1.0 + 2.0 + 0.5;
+        assert!((e.iter().sum::<f64>() - tr).abs() < 1e-9);
+    }
+}

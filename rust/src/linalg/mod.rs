@@ -1,0 +1,14 @@
+//! Dense / sparse linear algebra substrate.
+//!
+//! Everything the algorithms need — vector ops, a row-major dense matrix,
+//! CSR sparse rows, and a symmetric eigensolver — implemented in-repo
+//! (no BLAS / nalgebra available offline). Vectors are plain `[f64]`.
+
+pub mod dense;
+pub mod eig;
+pub mod sparse;
+pub mod vecops;
+
+pub use dense::DenseMatrix;
+pub use sparse::{CsrMatrix, SparseRow};
+pub use vecops::*;

@@ -1,0 +1,160 @@
+//! Dense vector operations. These are the innermost loops of every gossip
+//! round on the native path, so they are written allocation-free over
+//! slices; the perf pass benchmarks them in `bench_compress`.
+
+/// `y += alpha * x`
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y = x`
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// `x *= alpha`
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Squared euclidean norm.
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// Squared distance ‖x − y‖².
+#[inline]
+pub fn dist_sq(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// `out = x - y`
+#[inline]
+pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// `out = x + y`
+#[inline]
+pub fn add(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        out[i] = x[i] + y[i];
+    }
+}
+
+/// Set all entries to zero.
+#[inline]
+pub fn zero(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// Elementwise mean of a set of equal-length vectors.
+pub fn mean_of(vectors: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!vectors.is_empty());
+    let d = vectors[0].len();
+    let mut out = vec![0.0; d];
+    for v in vectors {
+        assert_eq!(v.len(), d);
+        axpy(1.0, v, &mut out);
+    }
+    scale(1.0 / vectors.len() as f64, &mut out);
+    out
+}
+
+/// Sum of squared distances of each vector to a reference vector —
+/// the consensus error `Σᵢ ‖xᵢ − x̄‖²` from the paper's figures.
+pub fn consensus_error(vectors: &[Vec<f64>], mean: &[f64]) -> f64 {
+    vectors.iter().map(|v| dist_sq(v, mean)).sum()
+}
+
+/// Maximum absolute difference between two vectors.
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut m = 0.0f64;
+    for i in 0..x.len() {
+        m = m.max((x[i] - y[i]).abs());
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_dot() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert_eq!(norm2_sq(&x), 14.0);
+    }
+
+    #[test]
+    fn sub_add_roundtrip() {
+        let x = vec![5.0, -2.0];
+        let y = vec![1.0, 4.0];
+        let mut d = vec![0.0; 2];
+        let mut s = vec![0.0; 2];
+        sub(&x, &y, &mut d);
+        add(&d, &y, &mut s);
+        assert_eq!(s, x);
+    }
+
+    #[test]
+    fn mean_and_consensus_error() {
+        let vs = vec![vec![0.0, 0.0], vec![2.0, 4.0]];
+        let m = mean_of(&vs);
+        assert_eq!(m, vec![1.0, 2.0]);
+        // each vector is at distance² (1+4)=5
+        assert_eq!(consensus_error(&vs, &m), 10.0);
+    }
+
+    #[test]
+    fn dist_and_maxdiff() {
+        let x = vec![1.0, 2.0];
+        let y = vec![4.0, 6.0];
+        assert_eq!(dist_sq(&x, &y), 25.0);
+        assert_eq!(max_abs_diff(&x, &y), 4.0);
+    }
+}

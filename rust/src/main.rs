@@ -1,0 +1,236 @@
+//! `choco` — CLI launcher for the CHOCO-SGD reproduction.
+//!
+//! ```text
+//! choco repro <fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1..table4|speedup|all>
+//!       [--out results] [--full] [--scale 1.0] [--seed 42] [--quiet]
+//! choco spectrum  --topology ring --nodes 25
+//! choco consensus --topology ring --nodes 25 --dim 2000 --compressor qsgd:256
+//!       [--gamma auto] [--rounds 1000]
+//! choco train     --dataset epsilon --algorithm choco --compressor top_pct:1
+//!       [--topology ring] [--nodes 9] [--rounds 1000] [--gamma 0.04]
+//! choco e2e       [--artifact transformer_step_tiny] [--nodes 4] [--steps 60]
+//! choco artifacts
+//! ```
+
+use choco::compress::parse_compressor;
+use choco::consensus::{make_nodes, Scheme};
+use choco::coordinator::Trace;
+use choco::data::PartitionKind;
+use choco::experiments::{self, consensus_exps, sgd_exps, speedup, tables, ExpOptions};
+use choco::optim::{OptimScheme, Schedule};
+use choco::topology::{choco_gamma_star, mixing_matrix, Graph, MixingRule, Spectrum};
+use choco::util::args::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand() {
+        Some("repro") => cmd_repro(&args),
+        Some("spectrum") => cmd_spectrum(&args),
+        Some("consensus") => cmd_consensus(&args),
+        Some("train") => cmd_train(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some(other) => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: choco <repro|spectrum|consensus|train|e2e|artifacts> [flags]
+  repro <id|all>   reproduce a paper figure/table (fig2..fig9, table1..table4, speedup)
+  spectrum         print δ, β for a topology
+  consensus        run one consensus experiment
+  train            run one decentralized training experiment
+  e2e              decentralized transformer training through PJRT artifacts
+  artifacts        list AOT artifacts";
+
+fn opts_from(args: &Args) -> Result<ExpOptions, String> {
+    Ok(ExpOptions {
+        out_dir: args.get_or("out", "results").into(),
+        full: args.flag("full"),
+        seed: args.u64_or("seed", 42)?,
+        scale: args.f64_or("scale", if args.flag("full") { 1.0 } else { 0.25 })?,
+        quiet: args.flag("quiet"),
+    })
+}
+
+fn cmd_repro(args: &Args) -> Result<(), String> {
+    let opts = opts_from(args)?;
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or("repro: which figure? (fig2..fig9, table1..table4, speedup, all)")?;
+    let run_one = |id: &str| -> Result<(), String> {
+        match id {
+            "fig2" => consensus_exps::fig2(&opts).map(|_| ()),
+            "fig3" => consensus_exps::fig3(&opts).map(|_| ()),
+            "fig4" => sgd_exps::fig4(&opts, false).map(|_| ()),
+            "fig7" => sgd_exps::fig4(&opts, true).map(|_| ()),
+            "fig5" => sgd_exps::fig56(&opts, "epsilon", false, false)
+                .and_then(|_| sgd_exps::fig56(&opts, "rcv1", false, false))
+                .map(|_| ()),
+            "fig6" => sgd_exps::fig56(&opts, "epsilon", true, false)
+                .and_then(|_| sgd_exps::fig56(&opts, "rcv1", true, false))
+                .map(|_| ()),
+            "fig8" => sgd_exps::fig56(&opts, "epsilon", false, true)
+                .and_then(|_| sgd_exps::fig56(&opts, "rcv1", false, true))
+                .map(|_| ()),
+            "fig9" => sgd_exps::fig56(&opts, "epsilon", true, true)
+                .and_then(|_| sgd_exps::fig56(&opts, "rcv1", true, true))
+                .map(|_| ()),
+            "table1" => tables::table1(&opts).map(|_| ()),
+            "table2" => tables::table2(&opts).map(|_| ()),
+            "table3" => consensus_exps::table3(&opts).map(|_| ()),
+            "table4" => sgd_exps::table4(&opts, "epsilon").map(|_| ()),
+            "speedup" => speedup::speedup(&opts).map(|_| ()),
+            other => Err(format!("unknown experiment id '{other}'")),
+        }
+    };
+    if id == "all" {
+        for id in [
+            "table1", "table2", "fig2", "fig3", "table3", "fig4", "fig5", "fig6", "fig7",
+            "fig8", "fig9", "table4", "speedup",
+        ] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(id)
+    }
+}
+
+fn cmd_spectrum(args: &Args) -> Result<(), String> {
+    let topo = args.get_or("topology", "ring");
+    let n = args.usize_or("nodes", 25)?;
+    let g = Graph::by_name(topo, n)?;
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let s = Spectrum::of(&w);
+    println!(
+        "{} (n={n}): δ = {:.6}, 1/δ = {:.2}, β = {:.4}",
+        g.name(),
+        s.delta,
+        1.0 / s.delta,
+        s.beta
+    );
+    println!("diameter = {:?}, max degree = {}", g.diameter(), g.max_degree());
+    for omega in [1.0, 0.1, 0.01] {
+        println!(
+            "  ω = {omega:<5}: γ*(δ,β,ω) = {:.6}, rate bound 1−δ²ω/82 = {:.8}",
+            choco_gamma_star(s.delta, s.beta, omega),
+            choco::topology::choco_rate_bound(s.delta, omega)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_consensus(args: &Args) -> Result<(), String> {
+    let opts = opts_from(args)?;
+    let topo = args.get_or("topology", "ring");
+    let n = args.usize_or("nodes", 25)?;
+    let d = args.usize_or("dim", 2000)?;
+    let rounds = args.usize_or("rounds", 1000)?;
+    let spec = args.get_or("compressor", "qsgd:256");
+    let op = parse_compressor(spec, d)?;
+    let g = Graph::by_name(topo, n)?;
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let sp = Spectrum::of(&w);
+    let lw = choco::topology::local_weights(&g, &w);
+    let gamma = match args.get("gamma") {
+        None | Some("auto") => choco_gamma_star(sp.delta, sp.beta, op.omega(d)).min(1.0),
+        Some(v) => v.parse().map_err(|_| "bad --gamma")?,
+    };
+    println!("consensus: {} n={n} d={d} op={} γ={gamma:.4}", g.name(), op.name());
+    let setup = consensus_exps::setup(n, d, opts.seed);
+    let scheme = Scheme::Choco { gamma, op };
+    let nodes = make_nodes(&scheme, &setup.x0, &lw);
+    let t = experiments::run_curve(
+        &scheme.name(),
+        nodes,
+        &g,
+        rounds,
+        (rounds / 50).max(1),
+        opts.seed,
+        experiments::consensus_metric(setup.target.clone()),
+    );
+    println!("  {}  final err = {:.3e}", t.sparkline("metric", 50), t.last("metric"));
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    Trace::write_csv(&[t], opts.out_dir.join("consensus_run.csv")).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let opts = opts_from(args)?;
+    let dataset = args.get_or("dataset", "epsilon");
+    let topo = args.get_or("topology", "ring");
+    let n = args.usize_or("nodes", 9)?;
+    let rounds = args.usize_or("rounds", 1000)?;
+    let alg = args.get_or("algorithm", "choco");
+    let sorted = !args.flag("shuffled");
+    let kind = if sorted { PartitionKind::Sorted } else { PartitionKind::Shuffled };
+    let p = sgd_exps::prepare(dataset, topo, n, kind, &opts)?;
+    let spec = args.get_or("compressor", "top_pct:1");
+    let op = parse_compressor(spec, p.d)?;
+    let a = args.f64_or("a", 0.1)?;
+    let b = args.f64_or("b", p.d as f64)?;
+    let gamma = args.f64_or("gamma", 0.04)?;
+    let sched = Schedule::paper(p.m, a, b);
+    let scheme = match alg {
+        "plain" => OptimScheme::Plain { schedule: sched },
+        "choco" => OptimScheme::ChocoSgd { schedule: sched, gamma, op },
+        "dcd" => OptimScheme::Dcd { schedule: sched, op },
+        "ecd" => OptimScheme::Ecd { schedule: sched, op },
+        other => return Err(format!("unknown algorithm '{other}'")),
+    };
+    println!(
+        "train: {} on {dataset} ({} samples, d={}), {} n={n}, {rounds} rounds, f* = {:.6}",
+        scheme.name(),
+        p.m,
+        p.d,
+        topo,
+        p.fstar
+    );
+    let t = p.run(&scheme, rounds, (rounds / 50).max(1), opts.seed, 1);
+    println!(
+        "  {}  final f−f* = {:.3e}, bits = {}",
+        t.sparkline("metric", 50),
+        t.last("metric"),
+        choco::util::human_bytes(t.last("bits") / 8.0)
+    );
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    Trace::write_csv(&[t], opts.out_dir.join("train_run.csv")).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<(), String> {
+    let artifact = args.get_or("artifact", "transformer_step_tiny");
+    let n = args.usize_or("nodes", 4)?;
+    let steps = args.usize_or("steps", 60)?;
+    let gamma = args.f64_or("gamma", 0.5)?;
+    let lr = args.f64_or("lr", 0.1)?;
+    let kpct = args.f64_or("k-pct", 10.0)?;
+    let out: std::path::PathBuf = args.get_or("out", "results").into();
+    choco::experiments::e2e::run_transformer_e2e(artifact, n, steps, gamma, lr, kpct, &out)
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let m = choco::runtime::Manifest::load_default()?;
+    println!("artifacts in {}:", m.dir.display());
+    for a in &m.artifacts {
+        let shapes: Vec<String> = a.inputs.iter().map(|s| format!("{:?}", s.shape)).collect();
+        println!("  {:<28} kind={:<16} inputs={}", a.name, a.kind(), shapes.join(" "));
+    }
+    Ok(())
+}

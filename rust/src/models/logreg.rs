@@ -1,0 +1,202 @@
+//! L2-regularized logistic regression (the paper's §5.3 objective).
+//!
+//! Worker-local objective over the local shard Dᵢ:
+//! `fᵢ(x) = (1/|Dᵢ|) Σ_{(a,b)∈Dᵢ} log(1 + exp(−b·aᵀx)) + (λ/2)‖x‖²`
+//! with λ = 1/m_global, so that `(1/n)Σᵢ fᵢ` equals the paper's global
+//! objective when shards are equal-sized.
+
+use super::Objective;
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone)]
+pub struct LogisticRegression {
+    pub data: Dataset,
+    /// L2 regularization coefficient λ.
+    pub lambda: f64,
+    /// Mini-batch size for stochastic gradients.
+    pub batch: usize,
+    /// Cached smoothness constant (¼·max_j ‖aⱼ‖² + λ).
+    smoothness: f64,
+}
+
+impl LogisticRegression {
+    pub fn new(data: Dataset, lambda: f64, batch: usize) -> Self {
+        assert!(batch >= 1);
+        assert!(data.n_samples() > 0);
+        let max_row_sq = (0..data.n_samples())
+            .map(|j| match data.sample(j) {
+                crate::data::Sample::Dense(r) => crate::linalg::vecops::norm2_sq(r),
+                crate::data::Sample::Sparse(r) => r.norm2_sq(),
+            })
+            .fold(0.0, f64::max);
+        let smoothness = 0.25 * max_row_sq + lambda;
+        Self { data, lambda, batch, smoothness }
+    }
+
+    /// log(1 + exp(−z)) computed stably for large |z|.
+    #[inline]
+    pub fn log1p_exp_neg(z: f64) -> f64 {
+        if z > 0.0 {
+            (-z).exp().ln_1p()
+        } else {
+            -z + z.exp().ln_1p()
+        }
+    }
+
+    /// σ(−z) = 1/(1 + e^z), stable.
+    #[inline]
+    pub fn sigmoid_neg(z: f64) -> f64 {
+        if z > 0.0 {
+            let e = (-z).exp();
+            e / (1.0 + e)
+        } else {
+            1.0 / (1.0 + z.exp())
+        }
+    }
+
+    fn grad_terms(&self, x: &[f64], indices: &[usize], out: &mut [f64]) {
+        crate::linalg::vecops::zero(out);
+        let scale = 1.0 / indices.len() as f64;
+        for &j in indices {
+            let a = self.data.sample(j);
+            let b = self.data.label(j);
+            let z = b * a.dot(x);
+            // ∇ log(1+exp(−z)) = −b·σ(−z)·a
+            let coeff = -b * Self::sigmoid_neg(z) * scale;
+            a.axpy_into(coeff, out);
+        }
+        crate::linalg::vecops::axpy(self.lambda, x, out);
+    }
+}
+
+impl Objective for LogisticRegression {
+    fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    fn loss(&self, x: &[f64]) -> f64 {
+        let m = self.data.n_samples();
+        let mut acc = 0.0;
+        for j in 0..m {
+            let z = self.data.label(j) * self.data.sample(j).dot(x);
+            acc += Self::log1p_exp_neg(z);
+        }
+        acc / m as f64 + 0.5 * self.lambda * crate::linalg::vecops::norm2_sq(x)
+    }
+
+    fn full_gradient(&self, x: &[f64], out: &mut [f64]) {
+        let all: Vec<usize> = (0..self.data.n_samples()).collect();
+        self.grad_terms(x, &all, out);
+    }
+
+    fn stochastic_gradient(&self, x: &[f64], rng: &mut Rng, out: &mut [f64]) {
+        let m = self.data.n_samples();
+        let b = self.batch.min(m);
+        let idx: Vec<usize> = (0..b).map(|_| rng.index(m)).collect();
+        self.grad_terms(x, &idx, out);
+    }
+
+    fn mu(&self) -> f64 {
+        self.lambda
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.smoothness
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{epsilon_like, DenseSynthConfig, Features};
+
+    fn tiny() -> LogisticRegression {
+        let ds = Dataset {
+            features: Features::Dense {
+                rows: vec![vec![1.0, 0.0], vec![-1.0, 0.5], vec![0.0, 1.0]],
+                dim: 2,
+            },
+            labels: vec![1.0, -1.0, 1.0],
+            name: "tiny".into(),
+        };
+        LogisticRegression::new(ds, 0.1, 2)
+    }
+
+    #[test]
+    fn loss_at_zero_is_ln2() {
+        let m = tiny();
+        assert!((m.loss(&[0.0, 0.0]) - (2.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = tiny();
+        let x = vec![0.3, -0.7];
+        let mut g = vec![0.0; 2];
+        m.full_gradient(&x, &mut g);
+        let eps = 1e-6;
+        for i in 0..2 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[i] += eps;
+            xm[i] -= eps;
+            let fd = (m.loss(&xp) - m.loss(&xm)) / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 1e-6, "coord {i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn stable_for_large_margins() {
+        let m = tiny();
+        let x = vec![1000.0, 1000.0];
+        let l = m.loss(&x);
+        assert!(l.is_finite());
+        let mut g = vec![0.0; 2];
+        m.full_gradient(&x, &mut g);
+        assert!(g.iter().all(|v| v.is_finite()));
+        let l2 = m.loss(&[-1000.0, -1000.0]);
+        assert!(l2.is_finite() && l2 > 100.0);
+    }
+
+    #[test]
+    fn stochastic_gradient_unbiased() {
+        let ds = epsilon_like(&DenseSynthConfig {
+            n_samples: 40,
+            dim: 6,
+            ..Default::default()
+        });
+        let m = LogisticRegression::new(ds, 0.01, 4);
+        let x = vec![0.1; 6];
+        let mut full = vec![0.0; 6];
+        m.full_gradient(&x, &mut full);
+        let mut rng = Rng::new(5);
+        let mut mean = vec![0.0; 6];
+        let trials = 20000;
+        let mut g = vec![0.0; 6];
+        for _ in 0..trials {
+            m.stochastic_gradient(&x, &mut rng, &mut g);
+            crate::linalg::vecops::axpy(1.0 / trials as f64, &g, &mut mean);
+        }
+        let err = crate::linalg::vecops::max_abs_diff(&mean, &full);
+        assert!(err < 5e-3, "bias {err}");
+    }
+
+    #[test]
+    fn constants() {
+        let m = tiny();
+        assert_eq!(m.mu(), 0.1);
+        // max ‖a‖² = 1.25 → L = 0.3125 + 0.1
+        assert!((m.smoothness() - (0.25 * 1.25 + 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_helpers() {
+        assert!((LogisticRegression::sigmoid_neg(0.0) - 0.5).abs() < 1e-12);
+        assert!(LogisticRegression::sigmoid_neg(40.0) < 1e-15);
+        assert!((LogisticRegression::sigmoid_neg(-40.0) - 1.0).abs() < 1e-12);
+        assert!((LogisticRegression::log1p_exp_neg(0.0) - (2.0f64).ln()).abs() < 1e-12);
+        assert!(LogisticRegression::log1p_exp_neg(800.0) < 1e-300);
+        assert!((LogisticRegression::log1p_exp_neg(-800.0) - 800.0).abs() < 1e-9);
+    }
+}

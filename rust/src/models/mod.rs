@@ -1,0 +1,55 @@
+//! Optimization objectives (paper §4–5).
+//!
+//! The experiments of §5.3 minimize L2-regularized logistic regression
+//! `f(x) = (1/m) Σⱼ log(1 + exp(−bⱼ aⱼᵀx)) + 1/(2m)·‖x‖²` distributed
+//! over n workers with disjoint data. [`Objective`] is the worker-local
+//! interface consumed by every optimizer in [`crate::optim`].
+
+pub mod logreg;
+pub mod quadratic;
+pub mod solver;
+
+pub use logreg::LogisticRegression;
+pub use quadratic::QuadraticConsensus;
+pub use solver::solve_fstar;
+
+use crate::util::rng::Rng;
+
+/// A worker-local stochastic objective `fᵢ(x) = E_ξ Fᵢ(x, ξ)`.
+pub trait Objective: Send + Sync {
+    fn dim(&self) -> usize;
+
+    /// Full (deterministic) local loss fᵢ(x).
+    fn loss(&self, x: &[f64]) -> f64;
+
+    /// Full local gradient ∇fᵢ(x) written into `out`.
+    fn full_gradient(&self, x: &[f64], out: &mut [f64]);
+
+    /// Stochastic gradient ∇Fᵢ(x, ξ) with a mini-batch drawn from `rng`,
+    /// written into `out`.
+    fn stochastic_gradient(&self, x: &[f64], rng: &mut Rng, out: &mut [f64]);
+
+    /// Strong-convexity modulus μ (0 if unknown/non-strongly-convex).
+    fn mu(&self) -> f64;
+
+    /// Smoothness constant L (upper bound).
+    fn smoothness(&self) -> f64;
+}
+
+/// Average loss across workers evaluated at a common point:
+/// `f(x) = (1/n) Σᵢ fᵢ(x)` of problem (1).
+pub fn global_loss(objectives: &[Box<dyn Objective>], x: &[f64]) -> f64 {
+    objectives.iter().map(|o| o.loss(x)).sum::<f64>() / objectives.len() as f64
+}
+
+/// Average full gradient across workers at a common point.
+pub fn global_gradient(objectives: &[Box<dyn Objective>], x: &[f64]) -> Vec<f64> {
+    let d = x.len();
+    let mut out = vec![0.0; d];
+    let mut tmp = vec![0.0; d];
+    for o in objectives {
+        o.full_gradient(x, &mut tmp);
+        crate::linalg::vecops::axpy(1.0 / objectives.len() as f64, &tmp, &mut out);
+    }
+    out
+}

@@ -1,0 +1,113 @@
+//! Quadratic consensus objective `fᵢ(x) = ½‖x − cᵢ‖²`.
+//!
+//! Problem (1) with these fᵢ *is* the average-consensus problem (2):
+//! the optimum is x* = (1/n)Σᵢ cᵢ with f* = (1/2n)Σᵢ‖cᵢ − x̄‖². Used to
+//! unit-test the optimizers against a closed-form solution and to bridge
+//! between §3 (consensus) and §4 (optimization).
+
+use super::Objective;
+use crate::util::rng::Rng;
+
+#[derive(Clone)]
+pub struct QuadraticConsensus {
+    pub center: Vec<f64>,
+    /// Additive gaussian gradient noise σ (models stochastic gradients).
+    pub noise: f64,
+}
+
+impl QuadraticConsensus {
+    pub fn new(center: Vec<f64>, noise: f64) -> Self {
+        Self { center, noise }
+    }
+
+    /// Closed-form optimum and value of the *global* problem over a set
+    /// of worker objectives.
+    pub fn global_optimum(workers: &[QuadraticConsensus]) -> (Vec<f64>, f64) {
+        let d = workers[0].center.len();
+        let n = workers.len() as f64;
+        let mut xstar = vec![0.0; d];
+        for w in workers {
+            crate::linalg::vecops::axpy(1.0 / n, &w.center, &mut xstar);
+        }
+        let fstar = workers
+            .iter()
+            .map(|w| 0.5 * crate::linalg::vecops::dist_sq(&xstar, &w.center))
+            .sum::<f64>()
+            / n;
+        (xstar, fstar)
+    }
+}
+
+impl Objective for QuadraticConsensus {
+    fn dim(&self) -> usize {
+        self.center.len()
+    }
+
+    fn loss(&self, x: &[f64]) -> f64 {
+        0.5 * crate::linalg::vecops::dist_sq(x, &self.center)
+    }
+
+    fn full_gradient(&self, x: &[f64], out: &mut [f64]) {
+        crate::linalg::vecops::sub(x, &self.center, out);
+    }
+
+    fn stochastic_gradient(&self, x: &[f64], rng: &mut Rng, out: &mut [f64]) {
+        self.full_gradient(x, out);
+        if self.noise > 0.0 {
+            for v in out.iter_mut() {
+                *v += self.noise * rng.next_gaussian();
+            }
+        }
+    }
+
+    fn mu(&self) -> f64 {
+        1.0
+    }
+
+    fn smoothness(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_and_loss() {
+        let q = QuadraticConsensus::new(vec![1.0, 2.0], 0.0);
+        assert_eq!(q.loss(&[1.0, 2.0]), 0.0);
+        assert_eq!(q.loss(&[2.0, 2.0]), 0.5);
+        let mut g = vec![0.0; 2];
+        q.full_gradient(&[3.0, 1.0], &mut g);
+        assert_eq!(g, vec![2.0, -1.0]);
+    }
+
+    #[test]
+    fn closed_form_optimum() {
+        let ws = vec![
+            QuadraticConsensus::new(vec![0.0, 0.0], 0.0),
+            QuadraticConsensus::new(vec![2.0, 4.0], 0.0),
+        ];
+        let (xs, fs) = QuadraticConsensus::global_optimum(&ws);
+        assert_eq!(xs, vec![1.0, 2.0]);
+        // each center at distance² 5 → f* = ½·5 = 2.5
+        assert!((fs - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_gradient_centered() {
+        let q = QuadraticConsensus::new(vec![0.0; 4], 0.5);
+        let mut rng = Rng::new(8);
+        let mut mean = vec![0.0; 4];
+        let mut g = vec![0.0; 4];
+        let trials = 20000;
+        for _ in 0..trials {
+            q.stochastic_gradient(&[1.0; 4], &mut rng, &mut g);
+            crate::linalg::vecops::axpy(1.0 / trials as f64, &g, &mut mean);
+        }
+        for v in &mean {
+            assert!((v - 1.0).abs() < 0.02);
+        }
+    }
+}

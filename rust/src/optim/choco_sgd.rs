@@ -1,0 +1,241 @@
+//! CHOCO-SGD (Algorithm 2; memory-efficient form of Algorithm 6).
+//!
+//! Per round, worker i:
+//! ```text
+//! g = ∇F_i(x_i, ξ)                       (line 2)
+//! x^{t+½} = x_i − η_t g                  (line 3)
+//! q_i = Q(x^{t+½} − x̂_i)                (line 4)
+//! broadcast q_i; receive q_j             (lines 5–8)
+//! s_i ← s_i + Σ_j w_ij q_j               (Alg 6 line 9)
+//! x̂_i ← x̂_i + q_i
+//! x_i ← x^{t+½} + γ (s_i − x̂_i)         (line 9 / Alg 6 line 10)
+//! ```
+//!
+//! Per-node memory: the iterate plus two extra d-vectors (x̂, s),
+//! independent of the node degree.
+
+use super::{GradientSource, Schedule};
+use crate::compress::{Compressed, Compressor};
+use crate::consensus::GossipNode;
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+pub struct ChocoSgdNode {
+    x: Vec<f64>,
+    half: Vec<f64>,
+    xhat: Vec<f64>,
+    s: Vec<f64>,
+    weights: LocalWeights,
+    source: Box<dyn GradientSource>,
+    schedule: Schedule,
+    gamma: f64,
+    op: Box<dyn Compressor>,
+    grad_buf: Vec<f64>,
+    diff_buf: Vec<f64>,
+    pending_own: Option<Compressed>,
+}
+
+impl ChocoSgdNode {
+    pub fn new(
+        x0: Vec<f64>,
+        weights: LocalWeights,
+        source: Box<dyn GradientSource>,
+        schedule: Schedule,
+        gamma: f64,
+        op: &dyn Compressor,
+    ) -> Self {
+        assert!(gamma > 0.0 && gamma <= 1.0, "consensus stepsize must be in (0,1]");
+        let d = x0.len();
+        assert_eq!(source.dim(), d);
+        Self {
+            x: x0,
+            half: vec![0.0; d],
+            xhat: vec![0.0; d],
+            s: vec![0.0; d],
+            weights,
+            source,
+            schedule,
+            gamma,
+            op: op.clone_box(),
+            grad_buf: vec![0.0; d],
+            diff_buf: vec![0.0; d],
+            pending_own: None,
+        }
+    }
+
+    fn weight_of(&self, j: usize) -> f64 {
+        self.weights
+            .neighbors
+            .iter()
+            .find(|(nid, _)| *nid == j)
+            .map(|(_, w)| *w)
+            .unwrap_or_else(|| panic!("message from non-neighbor {j}"))
+    }
+}
+
+impl GossipNode for ChocoSgdNode {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed {
+        let eta = self.schedule.eta(t);
+        self.source.grad(&self.x, t, rng, &mut self.grad_buf);
+        self.half.copy_from_slice(&self.x);
+        crate::linalg::vecops::axpy(-eta, &self.grad_buf, &mut self.half);
+        // q_i = Q(x^{t+½} − x̂_i)
+        self.diff_buf.copy_from_slice(&self.half);
+        crate::linalg::vecops::axpy(-1.0, &self.xhat, &mut self.diff_buf);
+        let msg = self.op.compress(&self.diff_buf, rng);
+        self.pending_own = Some(msg.clone());
+        msg
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let w = self.weight_of(from);
+        msg.add_into(w, &mut self.s);
+    }
+
+    fn end_round(&mut self, _t: usize) {
+        let own = self.pending_own.take().expect("end_round before begin_round");
+        own.add_into(self.weights.self_weight, &mut self.s);
+        own.add_into(1.0, &mut self.xhat);
+        // x ← x^{t+½} + γ (s − x̂)
+        self.x.copy_from_slice(&self.half);
+        for i in 0..self.x.len() {
+            self.x[i] += self.gamma * (self.s[i] - self.xhat[i]);
+        }
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, QsgdS, RandK, TopK};
+    use crate::consensus::SyncRunner;
+    use crate::linalg::vecops;
+    use crate::models::global_loss;
+    use crate::optim::testutil::logreg_problem;
+    use crate::optim::{make_optim_nodes, OptimScheme};
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+    fn run_scheme(scheme: OptimScheme, n: usize, steps: usize) -> (f64, f64, f64) {
+        let (sources, objs, fstar, x0) = logreg_problem(n, 240, 12, true);
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let nodes = make_optim_nodes(&scheme, sources, &x0, &lw);
+        let mut runner = SyncRunner::new(nodes, &g, 3);
+        let f0 = global_loss(&objs, &vecops::mean_of(&runner.iterates()));
+        for _ in 0..steps {
+            runner.step();
+        }
+        let f = global_loss(&objs, &vecops::mean_of(&runner.iterates()));
+        (f0 - fstar, f - fstar, fstar)
+    }
+
+    #[test]
+    fn converges_with_randk() {
+        let (gap0, gap, _) = run_scheme(
+            OptimScheme::ChocoSgd {
+                schedule: Schedule::paper(240, 0.1, 240.0),
+                gamma: 0.3,
+                op: Box::new(RandK { k: 3 }),
+            },
+            6,
+            1500,
+        );
+        assert!(gap < 0.5 * gap0, "suboptimality {gap} (start {gap0})");
+    }
+
+    #[test]
+    fn converges_with_topk() {
+        let (gap0, gap, _) = run_scheme(
+            OptimScheme::ChocoSgd {
+                schedule: Schedule::paper(240, 0.1, 240.0),
+                gamma: 0.3,
+                op: Box::new(TopK { k: 3 }),
+            },
+            6,
+            1500,
+        );
+        assert!(gap < 0.5 * gap0, "suboptimality {gap} (start {gap0})");
+    }
+
+    #[test]
+    fn converges_with_qsgd() {
+        let (gap0, gap, _) = run_scheme(
+            OptimScheme::ChocoSgd {
+                schedule: Schedule::paper(240, 0.1, 240.0),
+                gamma: 0.8,
+                op: Box::new(QsgdS { s: 16 }),
+            },
+            6,
+            1500,
+        );
+        assert!(gap < 0.5 * gap0, "suboptimality {gap} (start {gap0})");
+    }
+
+    /// Remark 3: CHOCO-SGD with ω = 1 (identity) and γ = 1 is *exactly*
+    /// Algorithm 3 (plain decentralized SGD) — trajectories must match.
+    #[test]
+    fn identity_gamma1_equals_plain() {
+        let n = 5;
+        let (sources_a, _, _, x0) = logreg_problem(n, 100, 8, true);
+        let (sources_b, _, _, _) = logreg_problem(n, 100, 8, true);
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let sched = Schedule::paper(100, 0.1, 100.0);
+        let choco = make_optim_nodes(
+            &OptimScheme::ChocoSgd {
+                schedule: sched.clone(),
+                gamma: 1.0,
+                op: Box::new(Identity),
+            },
+            sources_a,
+            &x0,
+            &lw,
+        );
+        let plain = make_optim_nodes(&OptimScheme::Plain { schedule: sched }, sources_b, &x0, &lw);
+        let mut ra = SyncRunner::new(choco, &g, 42);
+        let mut rb = SyncRunner::new(plain, &g, 42);
+        for _ in 0..50 {
+            ra.step();
+            rb.step();
+        }
+        for (a, b) in ra.iterates().iter().zip(rb.iterates().iter()) {
+            assert!(vecops::max_abs_diff(a, b) < 1e-9, "CHOCO(ω=1,γ=1) ≠ plain");
+        }
+    }
+
+    #[test]
+    fn compression_cuts_bits_by_orders_of_magnitude() {
+        // the headline claim: rand_1% ⇒ ~100× less traffic per round.
+        let n = 6;
+        let d = 12;
+        let (sources, _, _, x0) = logreg_problem(n, 120, d, true);
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let nodes = make_optim_nodes(
+            &OptimScheme::ChocoSgd {
+                schedule: Schedule::paper(120, 0.1, 120.0),
+                gamma: 0.3,
+                op: Box::new(RandK { k: 1 }),
+            },
+            sources,
+            &x0,
+            &lw,
+        );
+        let mut runner = SyncRunner::new(nodes, &g, 3);
+        let stats = runner.step();
+        // plain: n·2·d·32 bits; choco rand_1: n·2·(32+64) bits.
+        let plain_bits = (n * 2 * d * 32) as u64;
+        assert!(stats.bits < plain_bits / 2, "bits {} vs plain {plain_bits}", stats.bits);
+    }
+}

@@ -1,0 +1,166 @@
+//! DCD-SGD / DCD-PSGD (Tang et al., NeurIPS 2018 — "Communication
+//! Compression for Decentralized Training", Algorithm 1).
+//!
+//! Difference compression: each node keeps replicas x̂ⱼ of its neighbors
+//! and ships the compressed *iterate difference*:
+//!
+//! ```text
+//! x_i^{t+1} = Σ_j w_ij x̂_j^t − η_t ∇F_i(x_i^t, ξ)
+//! q_i = Q(x_i^{t+1} − x̂_i^t)        → broadcast
+//! x̂_i^{t+1} = x̂_i^t + q_i           (on i and all neighbors)
+//! ```
+//!
+//! Unlike CHOCO there is no consensus stepsize damping the compression
+//! error, so the scheme provably requires high-precision (near-lossless,
+//! ω ≈ 1) unbiased compression; with aggressive operators the replica
+//! drift compounds and the iterates diverge — exactly what the paper's
+//! Figs. 5–6 show (DCD stepsizes tuned down to 1e-15 to avoid blow-up).
+//! Stored with the same s-vector trick as Algorithm 5.
+
+use super::{GradientSource, Schedule};
+use crate::compress::{Compressed, Compressor};
+use crate::consensus::GossipNode;
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+pub struct DcdNode {
+    x: Vec<f64>,
+    xhat: Vec<f64>,
+    /// s = Σ_j w_ij x̂_j (including self).
+    s: Vec<f64>,
+    weights: LocalWeights,
+    source: Box<dyn GradientSource>,
+    schedule: Schedule,
+    op: Box<dyn Compressor>,
+    grad_buf: Vec<f64>,
+    pending_own: Option<Compressed>,
+}
+
+impl DcdNode {
+    pub fn new(
+        x0: Vec<f64>,
+        weights: LocalWeights,
+        source: Box<dyn GradientSource>,
+        schedule: Schedule,
+        op: &dyn Compressor,
+    ) -> Self {
+        let d = x0.len();
+        assert_eq!(source.dim(), d);
+        // Replicas start at x̂ = 0 like CHOCO (Remark 13 allows any
+        // consistent initialization); s = Σ w x̂ = 0 accordingly.
+        Self {
+            x: x0,
+            xhat: vec![0.0; d],
+            s: vec![0.0; d],
+            weights,
+            source,
+            schedule,
+            op: op.clone_box(),
+            grad_buf: vec![0.0; d],
+            pending_own: None,
+        }
+    }
+
+    fn weight_of(&self, j: usize) -> f64 {
+        self.weights
+            .neighbors
+            .iter()
+            .find(|(nid, _)| *nid == j)
+            .map(|(_, w)| *w)
+            .unwrap_or_else(|| panic!("message from non-neighbor {j}"))
+    }
+}
+
+impl GossipNode for DcdNode {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed {
+        let eta = self.schedule.eta(t);
+        self.source.grad(&self.x, t, rng, &mut self.grad_buf);
+        // x^{t+1} = s − η g   (gossip over replicas, then local step)
+        self.x.copy_from_slice(&self.s.clone());
+        crate::linalg::vecops::axpy(-eta, &self.grad_buf, &mut self.x);
+        // q = Q(x^{t+1} − x̂)
+        let mut diff = self.x.clone();
+        crate::linalg::vecops::axpy(-1.0, &self.xhat, &mut diff);
+        let msg = self.op.compress(&diff, rng);
+        self.pending_own = Some(msg.clone());
+        msg
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let w = self.weight_of(from);
+        msg.add_into(w, &mut self.s);
+    }
+
+    fn end_round(&mut self, _t: usize) {
+        let own = self.pending_own.take().expect("end_round before begin_round");
+        own.add_into(self.weights.self_weight, &mut self.s);
+        own.add_into(1.0, &mut self.xhat);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{QsgdS, RandK, Rescaled};
+    use crate::consensus::SyncRunner;
+    use crate::linalg::vecops;
+    use crate::models::global_loss;
+    use crate::optim::testutil::logreg_problem;
+    use crate::optim::{make_optim_nodes, OptimScheme};
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+    fn run_dcd(op: Box<dyn Compressor>, a: f64, steps: usize) -> (f64, f64) {
+        let n = 6;
+        let (sources, objs, fstar, x0) = logreg_problem(n, 240, 12, false);
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let nodes = make_optim_nodes(
+            &OptimScheme::Dcd { schedule: Schedule::paper(240, a, 240.0), op },
+            sources,
+            &x0,
+            &lw,
+        );
+        let mut runner = SyncRunner::new(nodes, &g, 3);
+        let f0 = global_loss(&objs, &vecops::mean_of(&runner.iterates()));
+        for _ in 0..steps {
+            runner.step();
+        }
+        let f = global_loss(&objs, &vecops::mean_of(&runner.iterates()));
+        (f0 - fstar, f - fstar)
+    }
+
+    #[test]
+    fn converges_with_high_precision_quantization() {
+        // DCD's regime: near-lossless unbiased quantization (qsgd_256).
+        let d = 12;
+        let op = QsgdS { s: 256 };
+        let tau = op.tau(d);
+        let (gap0, gap) = run_dcd(Box::new(Rescaled::new(op, tau)), 0.1, 1200);
+        assert!(gap.is_finite());
+        assert!(gap < 0.6 * gap0, "suboptimality {gap} (start {gap0})");
+    }
+
+    #[test]
+    fn struggles_with_aggressive_sparsification() {
+        // With (d/k)-rescaled rand_k at k/d = 1/12 and a normal stepsize,
+        // DCD degrades or diverges (paper Fig. 5 needed a = 1e-15).
+        let (gap0, gap) = run_dcd(
+            Box::new(Rescaled::new(RandK { k: 1 }, 12.0)),
+            0.1,
+            1200,
+        );
+        assert!(
+            !gap.is_finite() || gap > 0.5 * gap0,
+            "DCD unexpectedly robust: gap {gap} vs start {gap0}"
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! ECD-SGD / ECD-PSGD (Tang et al., NeurIPS 2018, Algorithm 2).
+//!
+//! Extrapolation compression, proposed for *less* precise quantization
+//! than DCD. Each node maintains replicas x̂ⱼ updated with a diminishing
+//! weight, and compresses an extrapolated point:
+//!
+//! ```text
+//! x_i^{t+1} = Σ_j w_ij x̂_j^t − η_t ∇F_i(x_i^t, ξ)
+//! z_i = (1 − (t+2)/2)·x̂_i^t + ((t+2)/2)·x_i^{t+1}
+//! broadcast Q(z_i)
+//! x̂_i^{t+1} = (1 − 2/(t+2))·x̂_i^t + (2/(t+2))·Q(z_i)
+//! ```
+//!
+//! The extrapolation weight (t+2)/2 *grows* with t, so any compression
+//! error on z is amplified before being averaged back — with aggressive
+//! operators ECD-SGD frequently diverges, which the paper reports as "a
+//! surprise" (§5.3: ECD "always performs worse than DCD, and often
+//! diverges"). Our implementation reproduces that behavior.
+
+use super::{GradientSource, Schedule};
+use crate::compress::{Compressed, Compressor};
+use crate::consensus::GossipNode;
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+pub struct EcdNode {
+    x: Vec<f64>,
+    xhat: Vec<f64>,
+    /// s = Σ_j w_ij x̂_j (incl. self), maintained incrementally through the
+    /// same linear update as the x̂ⱼ.
+    s: Vec<f64>,
+    /// Σ_j w_ij Q(z_j) accumulated during the round (incl. self).
+    recv: Vec<f64>,
+    weights: LocalWeights,
+    source: Box<dyn GradientSource>,
+    schedule: Schedule,
+    op: Box<dyn Compressor>,
+    grad_buf: Vec<f64>,
+    pending_own: Option<Compressed>,
+}
+
+impl EcdNode {
+    pub fn new(
+        x0: Vec<f64>,
+        weights: LocalWeights,
+        source: Box<dyn GradientSource>,
+        schedule: Schedule,
+        op: &dyn Compressor,
+    ) -> Self {
+        let d = x0.len();
+        assert_eq!(source.dim(), d);
+        Self {
+            x: x0,
+            xhat: vec![0.0; d],
+            s: vec![0.0; d],
+            recv: vec![0.0; d],
+            weights,
+            source,
+            schedule,
+            op: op.clone_box(),
+            grad_buf: vec![0.0; d],
+            pending_own: None,
+        }
+    }
+
+    fn weight_of(&self, j: usize) -> f64 {
+        self.weights
+            .neighbors
+            .iter()
+            .find(|(nid, _)| *nid == j)
+            .map(|(_, w)| *w)
+            .unwrap_or_else(|| panic!("message from non-neighbor {j}"))
+    }
+}
+
+impl GossipNode for EcdNode {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed {
+        let eta = self.schedule.eta(t);
+        self.source.grad(&self.x, t, rng, &mut self.grad_buf);
+        // x^{t+1} = s − η g
+        self.x.copy_from_slice(&self.s.clone());
+        crate::linalg::vecops::axpy(-eta, &self.grad_buf, &mut self.x);
+        // z = (1 − (t+2)/2) x̂ + ((t+2)/2) x^{t+1}
+        let w_x = (t as f64 + 2.0) / 2.0;
+        let mut z = vec![0.0; self.x.len()];
+        for i in 0..z.len() {
+            z[i] = (1.0 - w_x) * self.xhat[i] + w_x * self.x[i];
+        }
+        let msg = self.op.compress(&z, rng);
+        self.pending_own = Some(msg.clone());
+        msg
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let w = self.weight_of(from);
+        msg.add_into(w, &mut self.recv);
+    }
+
+    fn end_round(&mut self, t: usize) {
+        let own = self.pending_own.take().expect("end_round before begin_round");
+        own.add_into(self.weights.self_weight, &mut self.recv);
+        let theta = 2.0 / (t as f64 + 2.0);
+        // x̂ ← (1−θ) x̂ + θ Q(z_own)
+        crate::linalg::vecops::scale(1.0 - theta, &mut self.xhat);
+        own.add_into(theta, &mut self.xhat);
+        // s ← (1−θ) s + θ Σ_j w_ij Q(z_j)   (linearity of the x̂ update)
+        crate::linalg::vecops::scale(1.0 - theta, &mut self.s);
+        crate::linalg::vecops::axpy(theta, &self.recv, &mut self.s);
+        crate::linalg::vecops::zero(&mut self.recv);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{QsgdS, RandK, Rescaled};
+    use crate::consensus::SyncRunner;
+    use crate::linalg::vecops;
+    use crate::models::global_loss;
+    use crate::optim::testutil::logreg_problem;
+    use crate::optim::{make_optim_nodes, OptimScheme};
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+    fn run_ecd(op: Box<dyn Compressor>, a: f64, steps: usize) -> (f64, f64) {
+        let n = 6;
+        let (sources, objs, fstar, x0) = logreg_problem(n, 240, 12, false);
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let nodes = make_optim_nodes(
+            &OptimScheme::Ecd { schedule: Schedule::paper(240, a, 240.0), op },
+            sources,
+            &x0,
+            &lw,
+        );
+        let mut runner = SyncRunner::new(nodes, &g, 3);
+        let f0 = global_loss(&objs, &vecops::mean_of(&runner.iterates()));
+        for _ in 0..steps {
+            runner.step();
+        }
+        let f = global_loss(&objs, &vecops::mean_of(&runner.iterates()));
+        (f0 - fstar, f - fstar)
+    }
+
+    #[test]
+    fn runs_with_high_precision_quantization() {
+        // With very fine quantization and a tiny stepsize ECD makes some
+        // progress (the paper had to use stepsizes down to 1e-12).
+        let d = 12;
+        let op = QsgdS { s: 1024 };
+        let tau = op.tau(d);
+        let (gap0, gap) = run_ecd(Box::new(Rescaled::new(op, tau)), 0.01, 800);
+        assert!(gap.is_finite(), "ECD diverged even at qsgd_1024");
+        assert!(gap < gap0 * 1.05, "gap {gap} vs start {gap0}");
+    }
+
+    #[test]
+    fn diverges_or_stalls_with_sparsification() {
+        // Paper §5.3: ECD "often diverges" with rand_k-style operators.
+        let (gap0, gap) = run_ecd(
+            Box::new(Rescaled::new(RandK { k: 1 }, 12.0)),
+            0.1,
+            600,
+        );
+        assert!(
+            !gap.is_finite() || gap > 0.5 * gap0,
+            "ECD unexpectedly robust: {gap} vs start {gap0}"
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Decentralized stochastic optimizers (paper §4 + baselines of §5.3).
+//!
+//! All optimizers implement the same message-level
+//! [`crate::consensus::GossipNode`] interface as the consensus schemes —
+//! one broadcast per node per round — so the coordinator infrastructure
+//! (round engine, actor runtime, metrics) is shared:
+//!
+//! * [`plain::PlainSgdNode`] — Algorithm 3, decentralized SGD with exact
+//!   gossip (Lian et al. 2017 style);
+//! * [`choco_sgd::ChocoSgdNode`] — **Algorithm 2 / 6 (CHOCO-SGD)**, the
+//!   paper's contribution: one CHOCO-Gossip round per SGD step;
+//! * [`dcd::DcdNode`] — DCD-SGD (Tang et al. 2018a): difference
+//!   compression, needs high-precision quantization;
+//! * [`ecd::EcdNode`] — ECD-SGD (Tang et al. 2018a): extrapolation
+//!   compression, diverges for aggressive operators (observed in Fig. 5/6);
+//! * [`centralized`] — centralized mini-batch SGD (Dekel et al. 2012),
+//!   the reference in Theorem 4's leading term.
+
+pub mod centralized;
+pub mod choco_sgd;
+pub mod dcd;
+pub mod ecd;
+pub mod plain;
+pub mod schedule;
+
+pub use schedule::Schedule;
+
+use crate::consensus::GossipNode;
+use crate::models::Objective;
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+/// Source of stochastic gradients for one worker. Implemented natively by
+/// any [`Objective`] and by the PJRT-backed providers in
+/// [`crate::runtime`], keeping the optimizers agnostic of where the
+/// gradient math runs (rust f64 vs compiled XLA artifact).
+pub trait GradientSource: Send {
+    fn dim(&self) -> usize;
+
+    /// Write ∇Fᵢ(x, ξ) into `out` (mini-batch sampled from `rng`).
+    fn grad(&mut self, x: &[f64], t: usize, rng: &mut Rng, out: &mut [f64]);
+
+    /// Local loss fᵢ(x) for metrics (may be approximate for PJRT sources).
+    fn loss(&self, x: &[f64]) -> f64;
+}
+
+/// Native gradient source: any objective.
+pub struct NativeGrad {
+    pub objective: Box<dyn Objective>,
+}
+
+impl GradientSource for NativeGrad {
+    fn dim(&self) -> usize {
+        self.objective.dim()
+    }
+
+    fn grad(&mut self, x: &[f64], _t: usize, rng: &mut Rng, out: &mut [f64]) {
+        self.objective.stochastic_gradient(x, rng, out);
+    }
+
+    fn loss(&self, x: &[f64]) -> f64 {
+        self.objective.loss(x)
+    }
+}
+
+/// Optimizer selector used by drivers and the CLI.
+pub enum OptimScheme {
+    /// Algorithm 3 (exact communication).
+    Plain { schedule: Schedule },
+    /// Algorithm 2/6 with consensus stepsize γ and compressor Q.
+    ChocoSgd { schedule: Schedule, gamma: f64, op: Box<dyn crate::compress::Compressor> },
+    /// DCD-SGD with (should-be-unbiased) compressor Q.
+    Dcd { schedule: Schedule, op: Box<dyn crate::compress::Compressor> },
+    /// ECD-SGD with (should-be-unbiased) compressor Q.
+    Ecd { schedule: Schedule, op: Box<dyn crate::compress::Compressor> },
+}
+
+impl OptimScheme {
+    pub fn name(&self) -> String {
+        match self {
+            OptimScheme::Plain { .. } => "plain".into(),
+            OptimScheme::ChocoSgd { op, .. } => format!("choco_{}", op.name()),
+            OptimScheme::Dcd { op, .. } => format!("dcd_{}", op.name()),
+            OptimScheme::Ecd { op, .. } => format!("ecd_{}", op.name()),
+        }
+    }
+}
+
+/// Build one optimizer node per worker.
+pub fn make_optim_nodes(
+    scheme: &OptimScheme,
+    sources: Vec<Box<dyn GradientSource>>,
+    x0: &[Vec<f64>],
+    weights: &[LocalWeights],
+) -> Vec<Box<dyn GossipNode>> {
+    assert_eq!(sources.len(), x0.len());
+    assert_eq!(sources.len(), weights.len());
+    sources
+        .into_iter()
+        .zip(x0.iter().zip(weights.iter()))
+        .map(|(src, (x, w))| -> Box<dyn GossipNode> {
+            match scheme {
+                OptimScheme::Plain { schedule } => {
+                    Box::new(plain::PlainSgdNode::new(x.clone(), w.clone(), src, schedule.clone()))
+                }
+                OptimScheme::ChocoSgd { schedule, gamma, op } => Box::new(
+                    choco_sgd::ChocoSgdNode::new(
+                        x.clone(),
+                        w.clone(),
+                        src,
+                        schedule.clone(),
+                        *gamma,
+                        op.as_ref(),
+                    ),
+                ),
+                OptimScheme::Dcd { schedule, op } => Box::new(dcd::DcdNode::new(
+                    x.clone(),
+                    w.clone(),
+                    src,
+                    schedule.clone(),
+                    op.as_ref(),
+                )),
+                OptimScheme::Ecd { schedule, op } => Box::new(ecd::EcdNode::new(
+                    x.clone(),
+                    w.clone(),
+                    src,
+                    schedule.clone(),
+                    op.as_ref(),
+                )),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::data::{epsilon_like, partition, DenseSynthConfig, PartitionKind};
+    use crate::models::LogisticRegression;
+
+    /// Small logreg problem split over n workers: returns (sources, f*,
+    /// x0=zeros, objectives-for-loss).
+    pub fn logreg_problem(
+        n: usize,
+        m: usize,
+        d: usize,
+        sorted: bool,
+    ) -> (Vec<Box<dyn GradientSource>>, Vec<Box<dyn Objective>>, f64, Vec<Vec<f64>>) {
+        let ds = epsilon_like(&DenseSynthConfig {
+            n_samples: m,
+            dim: d,
+            margin: 1.5,
+            label_noise: 0.02,
+            seed: 77,
+        });
+        let lambda = 1.0 / m as f64;
+        let kind = if sorted { PartitionKind::Sorted } else { PartitionKind::Shuffled };
+        let shards = partition(&ds, n, kind, 5);
+        let objs: Vec<Box<dyn Objective>> = shards
+            .iter()
+            .map(|s| {
+                Box::new(LogisticRegression::new(s.clone(), lambda, 4)) as Box<dyn Objective>
+            })
+            .collect();
+        let sources: Vec<Box<dyn GradientSource>> = shards
+            .into_iter()
+            .map(|s| {
+                Box::new(NativeGrad {
+                    objective: Box::new(LogisticRegression::new(s, lambda, 4)),
+                }) as Box<dyn GradientSource>
+            })
+            .collect();
+        let fstar = crate::models::solve_fstar(&objs, 1e-10, 100_000).f_star;
+        let x0 = vec![vec![0.0; d]; n];
+        (sources, objs, fstar, x0)
+    }
+}

@@ -1,0 +1,61 @@
+//! SGD stepsize schedules.
+//!
+//! The experiments (§5.3 / Table 4) use `η_t = m·a/(t + b)`; the theory
+//! (Theorem 4) uses `η_t = 4/(μ(a + t))`.
+
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    /// Constant stepsize.
+    Const(f64),
+    /// `η_t = numerator / (t + b)` — the experimental `m·a/(t+b)` family.
+    Decay { numerator: f64, b: f64 },
+    /// Theorem 4: `η_t = 4/(μ(a + t))`, a ≥ max{410/(δ²ω/82·5…), 16κ}.
+    Thm4 { mu: f64, a: f64 },
+}
+
+impl Schedule {
+    pub fn eta(&self, t: usize) -> f64 {
+        match self {
+            Schedule::Const(c) => *c,
+            Schedule::Decay { numerator, b } => numerator / (t as f64 + b),
+            Schedule::Thm4 { mu, a } => 4.0 / (mu * (a + t as f64)),
+        }
+    }
+
+    /// The paper's experimental parameterization (Table 4): stepsize
+    /// `η_t = m·a/(t + b)` for dataset size m.
+    pub fn paper(m: usize, a: f64, b: f64) -> Self {
+        Schedule::Decay { numerator: m as f64 * a, b }
+    }
+
+    /// Theorem-4 schedule with `a = max{5/p, 16κ}` for consensus rate p.
+    pub fn thm4(mu: f64, kappa: f64, p: f64) -> Self {
+        Schedule::Thm4 { mu, a: (5.0 / p).max(16.0 * kappa) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_values() {
+        let s = Schedule::paper(100, 0.1, 5.0);
+        assert!((s.eta(0) - 10.0 / 5.0).abs() < 1e-12);
+        assert!((s.eta(5) - 10.0 / 10.0).abs() < 1e-12);
+        assert!(s.eta(100) < s.eta(10));
+    }
+
+    #[test]
+    fn thm4_values() {
+        let s = Schedule::thm4(0.1, 10.0, 0.01);
+        // a = max(500, 160) = 500
+        assert!((s.eta(0) - 4.0 / (0.1 * 500.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn const_is_const() {
+        let s = Schedule::Const(0.5);
+        assert_eq!(s.eta(0), s.eta(1000));
+    }
+}

@@ -1,0 +1,179 @@
+//! Artifact manifest: what `make artifacts` produced and with which
+//! shapes/dtypes, parsed from `artifacts/manifest.json`.
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype '{other}'")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    /// Free-form metadata from the python side (kind, dims, lambda, ...).
+    pub meta: Json,
+}
+
+impl ArtifactInfo {
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta.get("kind").and_then(|v| v.as_str()).unwrap_or("unknown")
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let body = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let root = parse(&body)?;
+        let format = root
+            .get("format")
+            .and_then(|v| v.as_f64())
+            .ok_or("manifest missing 'format'")?;
+        if format as i64 != 1 {
+            return Err(format!("unsupported manifest format {format}"));
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing name")?
+                .to_string();
+            let file = dir.join(
+                a.get("file").and_then(|v| v.as_str()).ok_or("artifact missing file")?,
+            );
+            let mut inputs = Vec::new();
+            for inp in a.get("inputs").and_then(|v| v.as_arr()).ok_or("missing inputs")? {
+                let shape: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("input missing shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect();
+                let dtype = DType::from_str(
+                    inp.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32"),
+                )?;
+                inputs.push(TensorSpec { shape, dtype });
+            }
+            let meta = a.get("meta").cloned().unwrap_or(Json::Obj(Default::default()));
+            artifacts.push(ArtifactInfo { name, file, inputs, meta });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Default location: `$CHOCO_ARTIFACTS` or `artifacts/` relative to
+    /// the workspace root.
+    pub fn load_default() -> Result<Self, String> {
+        let dir = std::env::var("CHOCO_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find a logreg-grad artifact matching (dim, batch).
+    pub fn find_logreg(&self, dim: usize, batch: usize) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kind() == "logreg_grad"
+                && a.meta_usize("dim") == Some(dim)
+                && a.meta_usize("batch") == Some(batch)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":1,"artifacts":[{"name":"x","file":"x.hlo.txt",
+                "inputs":[{"shape":[4,2],"dtype":"float32"}],
+                "meta":{"kind":"logreg_grad","dim":2,"batch":4,"lambda":0.5}}]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("choco_manifest_test");
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("x").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 2]);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(a.inputs[0].elements(), 8);
+        assert_eq!(a.kind(), "logreg_grad");
+        assert_eq!(a.meta_f64("lambda"), Some(0.5));
+        assert!(m.find_logreg(2, 4).is_some());
+        assert!(m.find_logreg(3, 4).is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/artifacts").is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let dir = std::env::temp_dir().join("choco_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":99,"artifacts":[]}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: the L3↔L2 bridge.
+//!
+//! Python lowers the JAX/Pallas functions once (`make artifacts`) to HLO
+//! text; this module loads, compiles (PJRT CPU) and executes them from
+//! rust. See DESIGN.md §2 and /opt/xla-example for the interchange
+//! pattern; HLO *text* is required because xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod sources;
+
+pub use artifacts::{ArtifactInfo, DType, Manifest, TensorSpec};
+pub use pjrt::{PjrtEngine, Tensor};
+pub use sources::{synthetic_corpus, PjrtLogReg, PjrtTransformer};

@@ -1,0 +1,213 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once on the
+//! CPU PJRT client, execute from the rust hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. All
+//! artifacts are lowered with `return_tuple=True`, so the single output
+//! literal is a tuple that we decompose.
+
+use super::artifacts::{ArtifactInfo, DType, Manifest};
+use std::collections::HashMap;
+
+/// Input tensor for an execution (host-side, row-major).
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A PJRT engine holding one CPU client and a cache of compiled
+/// executables keyed by artifact name.
+///
+/// SAFETY/Send: the underlying `xla::PjRtClient` wraps the PJRT C API
+/// (thread-safe) behind an `Rc`, which makes the Rust type `!Send`. Each
+/// `PjrtEngine` owns its *own* client and never shares or clones it, so
+/// moving the whole engine to another thread is sound; we assert that with
+/// the `unsafe impl Send` below (used by the actor runtime, where each
+/// node thread owns one engine).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+unsafe impl Send for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Create an engine over the given artifacts directory.
+    pub fn new(manifest: Manifest) -> Result<Self, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn from_default_manifest() -> Result<Self, String> {
+        Self::new(Manifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo, String> {
+        self.manifest
+            .find(name)
+            .ok_or_else(|| format!("no artifact '{name}' in {}", self.manifest.dir.display()))
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<(), String> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.artifact(name)?.clone();
+        let path = info
+            .file
+            .to_str()
+            .ok_or_else(|| format!("non-utf8 artifact path {:?}", info.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| format!("parse HLO text {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with validated inputs; returns the output
+    /// tuple as f32 buffers (i32 outputs are converted).
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>, String> {
+        self.prepare(name)?;
+        let info = self.artifact(name)?.clone();
+        if inputs.len() != info.inputs.len() {
+            return Err(format!(
+                "{name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(info.inputs.iter()).enumerate() {
+            if t.len() != spec.elements() {
+                return Err(format!(
+                    "{name}: input {i} has {} elements, expected {} {:?}",
+                    t.len(),
+                    spec.elements(),
+                    spec.shape
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (t, &spec.dtype) {
+                (Tensor::F32(v), DType::F32) => xla::Literal::vec1(v),
+                (Tensor::I32(v), DType::I32) => xla::Literal::vec1(v),
+                _ => return Err(format!("{name}: input {i} dtype mismatch")),
+            };
+            let lit = if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims).map_err(|e| format!("{name}: reshape input {i}: {e}"))?
+            };
+            literals.push(lit);
+        }
+        let exe = self.cache.get(name).expect("prepared above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch output {name}: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| format!("untuple {name}: {e}"))?;
+        let mut buffers = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let ty = p.ty().map_err(|e| format!("{name}: output {i} type: {e}"))?;
+            let v: Vec<f32> = match ty {
+                xla::ElementType::F32 => {
+                    p.to_vec::<f32>().map_err(|e| format!("{name}: output {i}: {e}"))?
+                }
+                xla::ElementType::S32 => p
+                    .to_vec::<i32>()
+                    .map_err(|e| format!("{name}: output {i}: {e}"))?
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect(),
+                other => return Err(format!("{name}: output {i} has type {other:?}")),
+            };
+            buffers.push(v);
+        }
+        Ok(buffers)
+    }
+
+    /// Names of all artifacts of a given kind.
+    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind() == kind)
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<PjrtEngine> {
+        match Manifest::load_default() {
+            Ok(m) => Some(PjrtEngine::new(m).unwrap()),
+            Err(_) => None, // artifacts not built; integration tests cover this
+        }
+    }
+
+    #[test]
+    fn execute_qsgd_small() {
+        let Some(mut eng) = engine() else { return };
+        let d = 64;
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 - 32.0) / 10.0).collect();
+        let xi = vec![0.5f32; d];
+        let out = eng
+            .execute("qsgd_s16_d64", &[Tensor::F32(x.clone()), Tensor::F32(xi.clone())])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), d);
+        // native implementation agreement (same math, same noise)
+        let info = eng.artifact("qsgd_s16_d64").unwrap();
+        let tau = info.meta_f64("tau").unwrap();
+        let s = 16.0f64;
+        let norm = (x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt();
+        for i in 0..d {
+            let xv = x[i] as f64;
+            let level = (s * xv.abs() / norm + 0.5).floor();
+            let want = xv.signum() * norm / (s * tau) * level;
+            assert!(
+                (out[0][i] as f64 - want).abs() < 1e-4,
+                "coord {i}: {} vs {want}",
+                out[0][i]
+            );
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(mut eng) = engine() else { return };
+        // wrong arity
+        assert!(eng.execute("qsgd_s16_d64", &[Tensor::F32(vec![0.0; 64])]).is_err());
+        // wrong shape
+        assert!(eng
+            .execute("qsgd_s16_d64", &[Tensor::F32(vec![0.0; 63]), Tensor::F32(vec![0.0; 64])])
+            .is_err());
+        // unknown artifact
+        assert!(eng.execute("nope", &[]).is_err());
+    }
+}

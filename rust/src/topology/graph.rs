@@ -1,0 +1,394 @@
+//! Communication graph topologies.
+//!
+//! The paper evaluates on ring, 2d-torus and fully-connected graphs
+//! (Fig. 1, Table 1); we additionally provide the standard families used
+//! in the decentralized-optimization literature so users can plug in their
+//! own deployment shapes.
+
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+/// Undirected communication graph on nodes `0..n`. Self-loops are implicit
+/// (every gossip scheme includes `{i} ∈ E`) and not stored.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    /// Sorted adjacency lists, no self-loops, symmetric.
+    adj: Vec<Vec<usize>>,
+    name: String,
+}
+
+impl Graph {
+    /// Build from an edge list (undirected; duplicates and self-loops are
+    /// ignored).
+    pub fn from_edges(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
+        let mut sets: Vec<HashSet<usize>> = vec![HashSet::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n, "edge ({a},{b}) out of range for n={n}");
+            if a != b {
+                sets[a].insert(b);
+                sets[b].insert(a);
+            }
+        }
+        let mut adj: Vec<Vec<usize>> = sets
+            .into_iter()
+            .map(|s| {
+                let mut v: Vec<usize> = s.into_iter().collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        adj.iter_mut().for_each(|v| v.shrink_to_fit());
+        Self { n, adj, name: name.to_string() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// All undirected edges (i < j).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for i in 0..self.n {
+            for &j in &self.adj[i] {
+                if i < j {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i].binary_search(&j).is_ok()
+    }
+
+    /// BFS connectivity check. Gossip requires a connected graph for δ > 0.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &w in &self.adj[v] {
+                if !seen[w] {
+                    seen[w] = true;
+                    count += 1;
+                    stack.push(w);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter via BFS from every node (∞ → None if disconnected).
+    pub fn diameter(&self) -> Option<usize> {
+        let mut diam = 0usize;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            dist[s] = 0;
+            let mut queue = std::collections::VecDeque::from([s]);
+            while let Some(v) = queue.pop_front() {
+                for &w in &self.adj[v] {
+                    if dist[w] == usize::MAX {
+                        dist[w] = dist[v] + 1;
+                        queue.push_back(w);
+                    }
+                }
+            }
+            let m = *dist.iter().max().unwrap();
+            if m == usize::MAX {
+                return None;
+            }
+            diam = diam.max(m);
+        }
+        Some(diam)
+    }
+
+    // ---- topology families -------------------------------------------
+
+    /// Ring: node i ↔ i±1 (mod n). Paper's hardest benchmark topology,
+    /// δ⁻¹ = O(n²).
+    pub fn ring(n: usize) -> Self {
+        assert!(n >= 1);
+        let edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Self::from_edges(n, &edges, &format!("ring{n}"))
+    }
+
+    /// Path: ring with one edge removed (δ slightly worse than ring).
+    pub fn path(n: usize) -> Self {
+        let edges: Vec<(usize, usize)> = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+        Self::from_edges(n, &edges, &format!("path{n}"))
+    }
+
+    /// 2d-torus on an r×c grid (both ≥ 1); paper uses square tori
+    /// (n ∈ {9, 25, 64} → 3×3, 5×5, 8×8). δ⁻¹ = O(n).
+    pub fn torus2d(rows: usize, cols: usize) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        let idx = |r: usize, c: usize| r * cols + c;
+        let mut edges = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                edges.push((idx(r, c), idx((r + 1) % rows, c)));
+                edges.push((idx(r, c), idx(r, (c + 1) % cols)));
+            }
+        }
+        Self::from_edges(rows * cols, &edges, &format!("torus{rows}x{cols}"))
+    }
+
+    /// Square torus for n a perfect square.
+    pub fn torus_square(n: usize) -> Self {
+        let side = (n as f64).sqrt().round() as usize;
+        assert_eq!(side * side, n, "torus_square needs a perfect square, got {n}");
+        Self::torus2d(side, side)
+    }
+
+    /// 2d grid (torus without wraparound).
+    pub fn grid2d(rows: usize, cols: usize) -> Self {
+        let idx = |r: usize, c: usize| r * cols + c;
+        let mut edges = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if r + 1 < rows {
+                    edges.push((idx(r, c), idx(r + 1, c)));
+                }
+                if c + 1 < cols {
+                    edges.push((idx(r, c), idx(r, c + 1)));
+                }
+            }
+        }
+        Self::from_edges(rows * cols, &edges, &format!("grid{rows}x{cols}"))
+    }
+
+    /// Fully-connected: gossip equals exact averaging in one round with
+    /// uniform weights; δ⁻¹ = O(1). Equivalent to centralized mini-batch
+    /// SGD for Algorithm 3.
+    pub fn complete(n: usize) -> Self {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push((i, j));
+            }
+        }
+        Self::from_edges(n, &edges, &format!("complete{n}"))
+    }
+
+    /// Star: worker 0 is the hub (models a parameter-server layout).
+    pub fn star(n: usize) -> Self {
+        assert!(n >= 1);
+        let edges: Vec<(usize, usize)> = (1..n).map(|i| (0, i)).collect();
+        Self::from_edges(n, &edges, &format!("star{n}"))
+    }
+
+    /// Hypercube on n = 2^k nodes.
+    pub fn hypercube(k: u32) -> Self {
+        let n = 1usize << k;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for b in 0..k {
+                let j = i ^ (1 << b);
+                if i < j {
+                    edges.push((i, j));
+                }
+            }
+        }
+        Self::from_edges(n, &edges, &format!("hypercube{n}"))
+    }
+
+    /// Erdős–Rényi G(n, p), resampled until connected (expected O(1)
+    /// retries above the connectivity threshold).
+    pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Self {
+        for _attempt in 0..1000 {
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.bernoulli(p) {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let g = Self::from_edges(n, &edges, &format!("er{n}_p{p}"));
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("erdos_renyi({n}, {p}) failed to produce a connected graph");
+    }
+
+    /// Barbell: two complete halves joined by a single bridge edge —
+    /// a pathological topology with tiny spectral gap, useful for stress
+    /// tests of the δ-dependence.
+    pub fn barbell(half: usize) -> Self {
+        let n = 2 * half;
+        let mut edges = Vec::new();
+        for i in 0..half {
+            for j in (i + 1)..half {
+                edges.push((i, j));
+                edges.push((half + i, half + j));
+            }
+        }
+        edges.push((half - 1, half));
+        Self::from_edges(n, &edges, &format!("barbell{n}"))
+    }
+
+    /// Two disconnected cliques — used by tests that check we *reject*
+    /// disconnected inputs.
+    pub fn disconnected(half: usize) -> Self {
+        let n = 2 * half;
+        let mut edges = Vec::new();
+        for i in 0..half {
+            for j in (i + 1)..half {
+                edges.push((i, j));
+                edges.push((half + i, half + j));
+            }
+        }
+        Self::from_edges(n, &edges, &format!("disconnected{n}"))
+    }
+
+    /// Named constructor used by the CLI: `ring`, `torus`, `complete`,
+    /// `star`, `path`, `hypercube`, `barbell`.
+    pub fn by_name(name: &str, n: usize) -> Result<Self, String> {
+        match name {
+            "ring" => Ok(Self::ring(n)),
+            "path" => Ok(Self::path(n)),
+            "torus" => {
+                let side = (n as f64).sqrt().round() as usize;
+                if side * side != n {
+                    return Err(format!("torus requires square n, got {n}"));
+                }
+                Ok(Self::torus_square(n))
+            }
+            "complete" | "fully-connected" | "full" => Ok(Self::complete(n)),
+            "star" => Ok(Self::star(n)),
+            "hypercube" => {
+                let k = (n as f64).log2().round() as u32;
+                if 1usize << k != n {
+                    return Err(format!("hypercube requires n=2^k, got {n}"));
+                }
+                Ok(Self::hypercube(k))
+            }
+            "barbell" => {
+                if n % 2 != 0 {
+                    return Err(format!("barbell requires even n, got {n}"));
+                }
+                Ok(Self::barbell(n / 2))
+            }
+            other => Err(format!("unknown topology '{other}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::ring(5);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.degree(0), 2);
+        assert!(g.has_edge(0, 4));
+        assert!(g.is_connected());
+        assert_eq!(g.diameter(), Some(2));
+    }
+
+    #[test]
+    fn ring2_dedup() {
+        // ring(2) has edges (0,1) and (1,0) → one undirected edge.
+        let g = Graph::ring(2);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn torus_structure() {
+        let g = Graph::torus_square(9);
+        assert_eq!(g.num_edges(), 18); // 2 per node
+        assert!(g.neighbors(4).len() == 4);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_small_sides() {
+        // 2-wraparound creates duplicate edges which must be deduped.
+        let g = Graph::torus2d(2, 2);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn complete_structure() {
+        let g = Graph::complete(6);
+        assert_eq!(g.num_edges(), 15);
+        assert_eq!(g.max_degree(), 5);
+        assert_eq!(g.diameter(), Some(1));
+    }
+
+    #[test]
+    fn star_and_path() {
+        assert_eq!(Graph::star(5).degree(0), 4);
+        assert_eq!(Graph::star(5).degree(3), 1);
+        assert_eq!(Graph::path(4).diameter(), Some(3));
+    }
+
+    #[test]
+    fn hypercube_structure() {
+        let g = Graph::hypercube(3);
+        assert_eq!(g.n(), 8);
+        assert!(g.neighbors(0).iter().all(|&j| [1, 2, 4].contains(&j)));
+        assert_eq!(g.diameter(), Some(3));
+    }
+
+    #[test]
+    fn er_connected() {
+        let mut rng = Rng::new(42);
+        let g = Graph::erdos_renyi(20, 0.3, &mut rng);
+        assert!(g.is_connected());
+        assert_eq!(g.n(), 20);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::disconnected(3);
+        assert!(!g.is_connected());
+        assert_eq!(g.diameter(), None);
+    }
+
+    #[test]
+    fn barbell_connected() {
+        let g = Graph::barbell(4);
+        assert!(g.is_connected());
+        assert!(g.has_edge(3, 4));
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        assert!(Graph::by_name("ring", 9).is_ok());
+        assert!(Graph::by_name("torus", 9).is_ok());
+        assert!(Graph::by_name("torus", 10).is_err());
+        assert!(Graph::by_name("nope", 9).is_err());
+    }
+}

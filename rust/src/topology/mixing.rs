@@ -1,0 +1,170 @@
+//! Gossip (mixing) matrices `W` over a communication graph.
+//!
+//! Definition 1 of the paper: W symmetric, doubly stochastic, with
+//! spectral gap δ = 1 − |λ₂(W)| > 0 for connected graphs. The paper's
+//! experiments use *uniform* averaging weights
+//! `w_ij = 1/(deg+1)`-style; we also provide Metropolis–Hastings weights
+//! (valid for irregular graphs) and lazy variants.
+
+use crate::linalg::DenseMatrix;
+use crate::topology::graph::Graph;
+
+/// Weight rule for building W from a graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixingRule {
+    /// `w_ij = 1/(max_degree+1)` for edges, diagonal absorbs the rest.
+    /// For regular graphs (ring/torus/complete) this reduces to the
+    /// paper's uniform averaging `w_ij = 1/(deg(i)+1)` (counting the
+    /// self-loop).
+    Uniform,
+    /// Metropolis–Hastings: `w_ij = 1/(1+max(deg i, deg j))`; always
+    /// doubly stochastic, works on irregular graphs.
+    MetropolisHastings,
+    /// Lazy variant: `(I + W_mh)/2` — all eigenvalues shifted positive.
+    Lazy,
+}
+
+impl MixingRule {
+    pub fn by_name(name: &str) -> Result<Self, String> {
+        match name {
+            "uniform" => Ok(Self::Uniform),
+            "mh" | "metropolis" => Ok(Self::MetropolisHastings),
+            "lazy" => Ok(Self::Lazy),
+            other => Err(format!("unknown mixing rule '{other}'")),
+        }
+    }
+}
+
+/// Build the gossip matrix for `graph` under `rule`.
+///
+/// The result is symmetric and doubly stochastic by construction; tests
+/// and property tests verify the invariants numerically.
+pub fn mixing_matrix(graph: &Graph, rule: MixingRule) -> DenseMatrix {
+    let n = graph.n();
+    let mut w = DenseMatrix::zeros(n, n);
+    match rule {
+        MixingRule::Uniform => {
+            let dmax = graph.max_degree();
+            let wij = 1.0 / (dmax as f64 + 1.0);
+            for i in 0..n {
+                for &j in graph.neighbors(i) {
+                    w.set(i, j, wij);
+                }
+            }
+            for i in 0..n {
+                let row_sum: f64 = w.row(i).iter().sum();
+                w.set(i, i, 1.0 - row_sum);
+            }
+        }
+        MixingRule::MetropolisHastings => {
+            for i in 0..n {
+                for &j in graph.neighbors(i) {
+                    let v = 1.0 / (1.0 + graph.degree(i).max(graph.degree(j)) as f64);
+                    w.set(i, j, v);
+                }
+            }
+            for i in 0..n {
+                let row_sum: f64 = w.row(i).iter().sum();
+                w.set(i, i, 1.0 - row_sum);
+            }
+        }
+        MixingRule::Lazy => {
+            let base = mixing_matrix(graph, MixingRule::MetropolisHastings);
+            for i in 0..n {
+                for j in 0..n {
+                    let v = 0.5 * base.get(i, j) + if i == j { 0.5 } else { 0.0 };
+                    w.set(i, j, v);
+                }
+            }
+        }
+    }
+    debug_assert!(w.is_doubly_stochastic(1e-9), "mixing matrix not doubly stochastic");
+    w
+}
+
+/// Sparse view of one node's mixing row: `(neighbor, weight)` pairs plus
+/// the self-weight. This is what each node actually uses at runtime —
+/// nodes never materialize the full W.
+#[derive(Debug, Clone)]
+pub struct LocalWeights {
+    pub self_weight: f64,
+    /// (neighbor id, w_ij), sorted by neighbor id.
+    pub neighbors: Vec<(usize, f64)>,
+}
+
+/// Extract per-node local weights from W restricted to graph edges.
+pub fn local_weights(graph: &Graph, w: &DenseMatrix) -> Vec<LocalWeights> {
+    let n = graph.n();
+    assert_eq!(w.rows, n);
+    (0..n)
+        .map(|i| LocalWeights {
+            self_weight: w.get(i, i),
+            neighbors: graph.neighbors(i).iter().map(|&j| (j, w.get(i, j))).collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_ring_matches_paper() {
+        // ring: degree 2 everywhere → w_ij = 1/3, w_ii = 1/3.
+        let g = Graph::ring(5);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        assert!((w.get(0, 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((w.get(0, 0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!(w.is_doubly_stochastic(1e-12));
+        assert!(w.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn uniform_complete_is_exact_average() {
+        let g = Graph::complete(4);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((w.get(i, j) - 0.25).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mh_on_star_is_doubly_stochastic() {
+        let g = Graph::star(6);
+        let w = mixing_matrix(&g, MixingRule::MetropolisHastings);
+        assert!(w.is_doubly_stochastic(1e-12));
+        assert!(w.is_symmetric(1e-12));
+        // hub-leaf weight = 1/(1+max(5,1)) = 1/6
+        assert!((w.get(0, 1) - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_on_star_nonnegative() {
+        // On irregular graphs the dmax rule keeps diagonals nonnegative.
+        let g = Graph::star(6);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        assert!(w.is_doubly_stochastic(1e-12));
+        assert!(w.data.iter().all(|&v| v >= -1e-12));
+    }
+
+    #[test]
+    fn lazy_is_ds() {
+        let g = Graph::ring(6);
+        let w = mixing_matrix(&g, MixingRule::Lazy);
+        assert!(w.is_doubly_stochastic(1e-12));
+        assert!((w.get(0, 0) - (0.5 + 0.5 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_weights_view() {
+        let g = Graph::ring(4);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        assert_eq!(lw.len(), 4);
+        assert_eq!(lw[0].neighbors.len(), 2);
+        let total: f64 = lw[0].self_weight + lw[0].neighbors.iter().map(|x| x.1).sum::<f64>();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+}

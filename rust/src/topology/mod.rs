@@ -1,0 +1,9 @@
+//! Communication graphs, mixing matrices and their spectra.
+
+pub mod graph;
+pub mod mixing;
+pub mod spectrum;
+
+pub use graph::Graph;
+pub use mixing::{local_weights, mixing_matrix, LocalWeights, MixingRule};
+pub use spectrum::{choco_gamma_star, choco_p, choco_rate_bound, Spectrum};

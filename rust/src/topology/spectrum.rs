@@ -1,0 +1,149 @@
+//! Spectral quantities of a gossip matrix.
+//!
+//! δ = 1 − |λ₂(W)| (spectral gap, eq. 4) and β = ‖I − W‖₂ (eq. 5) are the
+//! two scalars that enter the CHOCO stepsize γ*(δ, ω) of Theorem 2 and
+//! every convergence bound. Computed exactly via the Jacobi eigensolver.
+
+use crate::linalg::{eig, DenseMatrix};
+
+/// Spectrum summary of a gossip matrix.
+#[derive(Debug, Clone)]
+pub struct Spectrum {
+    /// All eigenvalues, descending.
+    pub eigenvalues: Vec<f64>,
+    /// δ = 1 − |λ₂|.
+    pub delta: f64,
+    /// ρ = 1 − δ = |λ₂|.
+    pub rho: f64,
+    /// β = ‖I − W‖₂ = max |1 − λᵢ|.
+    pub beta: f64,
+}
+
+impl Spectrum {
+    /// Compute from a gossip matrix (must satisfy Definition 1; panics on
+    /// non-symmetric input, returns δ ≤ 0 for disconnected graphs).
+    pub fn of(w: &DenseMatrix) -> Self {
+        let eigenvalues = eig::symmetric_eigenvalues(w);
+        assert!(
+            (eigenvalues[0] - 1.0).abs() < 1e-8,
+            "largest eigenvalue of a doubly stochastic matrix must be 1, got {}",
+            eigenvalues[0]
+        );
+        // |λ₂| = max over non-principal eigenvalues of |λ|.
+        // For a disconnected graph λ₂ = 1 and δ = 0.
+        let lambda2_abs = eigenvalues
+            .iter()
+            .skip(1)
+            .map(|l| l.abs())
+            .fold(0.0, f64::max);
+        let beta = eigenvalues.iter().map(|l| (1.0 - l).abs()).fold(0.0, f64::max);
+        let delta = 1.0 - lambda2_abs;
+        Self { eigenvalues, delta, rho: lambda2_abs, beta }
+    }
+}
+
+/// Theoretical CHOCO-Gossip stepsize of Theorem 2:
+/// `γ* = δ²ω / (16δ + δ² + 4β² + 2δβ² − 8δω)`.
+pub fn choco_gamma_star(delta: f64, beta: f64, omega: f64) -> f64 {
+    let denom = 16.0 * delta + delta * delta + 4.0 * beta * beta
+        + 2.0 * delta * beta * beta
+        - 8.0 * delta * omega;
+    assert!(denom > 0.0, "γ* denominator must be positive (δ={delta}, β={beta}, ω={omega})");
+    delta * delta * omega / denom
+}
+
+/// Theoretical linear contraction factor per Theorem 2: `1 − δ²ω/82`.
+pub fn choco_rate_bound(delta: f64, omega: f64) -> f64 {
+    1.0 - delta * delta * omega / 82.0
+}
+
+/// Theorem-2 Lyapunov convergence parameter `p = δ²ω/82` used by the
+/// CHOCO-SGD analysis (Assumption 3).
+pub fn choco_p(delta: f64, omega: f64) -> f64 {
+    delta * delta * omega / 82.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::graph::Graph;
+    use crate::topology::mixing::{mixing_matrix, MixingRule};
+
+    fn spectrum_of(g: &Graph) -> Spectrum {
+        Spectrum::of(&mixing_matrix(g, MixingRule::Uniform))
+    }
+
+    #[test]
+    fn complete_graph_gap_is_one() {
+        // uniform W on complete graph = 11ᵀ/n → λ₂ = 0 → δ = 1.
+        let s = spectrum_of(&Graph::complete(8));
+        assert!((s.delta - 1.0).abs() < 1e-9, "δ = {}", s.delta);
+        assert!((s.beta - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_gap_matches_closed_form() {
+        // Ring with w = 1/3: λ_k = 1/3 + 2/3 cos(2πk/n);
+        // δ = 1 − max_k≠0 |λ_k| = 2/3 (1 − cos(2π/n)) for moderate n.
+        for n in [5usize, 9, 25] {
+            let s = spectrum_of(&Graph::ring(n));
+            let expect = 2.0 / 3.0 * (1.0 - (2.0 * std::f64::consts::PI / n as f64).cos());
+            assert!(
+                (s.delta - expect).abs() < 1e-9,
+                "n={n}: δ={} expected {expect}",
+                s.delta
+            );
+        }
+    }
+
+    #[test]
+    fn table1_scaling() {
+        // Table 1: ring δ⁻¹ = O(n²), torus δ⁻¹ = O(n), complete δ⁻¹ = O(1).
+        let ring_ratio = spectrum_of(&Graph::ring(32)).delta / spectrum_of(&Graph::ring(16)).delta;
+        // δ ∝ 1/n² → doubling n quarters δ.
+        assert!((ring_ratio - 0.25).abs() < 0.05, "ring ratio {ring_ratio}");
+
+        let torus_ratio =
+            spectrum_of(&Graph::torus_square(64)).delta / spectrum_of(&Graph::torus_square(16)).delta;
+        // δ ∝ 1/n → quadrupling n quarters δ.
+        assert!((torus_ratio - 0.25).abs() < 0.1, "torus ratio {torus_ratio}");
+
+        let c1 = spectrum_of(&Graph::complete(16)).delta;
+        let c2 = spectrum_of(&Graph::complete(64)).delta;
+        assert!((c1 - 1.0).abs() < 1e-9 && (c2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disconnected_gap_zero() {
+        let s = spectrum_of(&Graph::disconnected(3));
+        assert!(s.delta.abs() < 1e-9);
+    }
+
+    #[test]
+    fn beta_bounded_by_two() {
+        for g in [Graph::ring(7), Graph::star(5), Graph::barbell(4)] {
+            let s = spectrum_of(&g);
+            assert!(s.beta <= 2.0 + 1e-9);
+            assert!(s.beta >= 0.0);
+        }
+    }
+
+    #[test]
+    fn gamma_star_sane() {
+        // ω = 1, δ = 1 (complete graph, no compression): formula gives
+        // γ* = 1/(16+1+4+2−8) = 1/15.
+        let g = choco_gamma_star(1.0, 1.0, 1.0);
+        assert!((g - 1.0 / 15.0).abs() < 1e-12);
+        // γ* increases with ω.
+        assert!(choco_gamma_star(0.5, 1.0, 0.5) < choco_gamma_star(0.5, 1.0, 1.0));
+        // rate bound in (0,1)
+        let r = choco_rate_bound(0.5, 0.1);
+        assert!(r > 0.0 && r < 1.0);
+    }
+
+    #[test]
+    fn barbell_has_tiny_gap() {
+        let s = spectrum_of(&Graph::barbell(6));
+        assert!(s.delta > 0.0 && s.delta < 0.05, "barbell δ = {}", s.delta);
+    }
+}

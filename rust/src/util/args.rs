@@ -1,0 +1,145 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Subcommand dispatch happens in `main.rs`; this module only provides the
+//! flag-bag abstraction plus typed getters with error messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Positional arguments in order (subcommand words).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; flags map to "true".
+    options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else {
+                    // Lookahead: treat the next token as the value unless it
+                    // looks like another option.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            options.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            options.insert(body.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Self { positional, options })
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Keys the caller never consumed — useful for typo detection.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.options.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["repro", "fig2", "--nodes", "25", "--full", "--out=results"]);
+        assert_eq!(a.subcommand(), Some("repro"));
+        assert_eq!(a.positional[1], "fig2");
+        assert_eq!(a.usize_or("nodes", 9).unwrap(), 25);
+        assert!(a.flag("full"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("gamma", 0.5).unwrap(), 0.5);
+        assert!(!a.flag("full"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--lr=-0.5"]);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse(&["--verbose", "--nodes", "9"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("nodes", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--nodes", "abc"]);
+        assert!(a.usize_or("nodes", 1).is_err());
+    }
+}

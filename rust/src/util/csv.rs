@@ -1,0 +1,118 @@
+//! Tiny CSV writer for experiment traces (one row per logged iteration).
+//! All figure-reproduction drivers emit CSV so curves can be re-plotted
+//! with any external tool.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, ncols: header.len() })
+    }
+
+    /// Write a row of mixed values already formatted as strings.
+    pub fn row_str(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.ncols, "csv row arity mismatch");
+        let quoted: Vec<String> = cells.iter().map(|c| quote(c)).collect();
+        writeln!(self.out, "{}", quoted.join(","))
+    }
+
+    /// Write a numeric row.
+    pub fn row(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.ncols, "csv row arity mismatch");
+        let strs: Vec<String> = cells.iter().map(|c| format_num(*c)).collect();
+        writeln!(self.out, "{}", strs.join(","))
+    }
+
+    /// Write a row with a leading label followed by numbers.
+    pub fn row_labeled(&mut self, label: &str, cells: &[f64]) -> std::io::Result<()> {
+        assert_eq!(cells.len() + 1, self.ncols, "csv row arity mismatch");
+        let mut strs = vec![quote(label)];
+        strs.extend(cells.iter().map(|c| format_num(*c)));
+        writeln!(self.out, "{}", strs.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn format_num(x: f64) -> String {
+    if x.is_nan() {
+        "nan".to_string()
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.10e}")
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv() {
+        let dir = std::env::temp_dir().join("choco_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "err"]).unwrap();
+            w.row(&[0.0, 1.5]).unwrap();
+            w.row(&[1.0, 0.75]).unwrap();
+            w.flush().unwrap();
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines[0], "iter,err");
+        assert_eq!(lines[1], "0,1.5000000000e0");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(quote("plain"), "plain");
+        assert_eq!(quote("a,b"), "\"a,b\"");
+        assert_eq!(quote("q\"q"), "\"q\"\"q\"");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let dir = std::env::temp_dir().join("choco_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+
+    #[test]
+    fn labeled_row() {
+        let dir = std::env::temp_dir().join("choco_csv_test3");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["alg", "x"]).unwrap();
+            w.row_labeled("choco", &[3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("choco,3"));
+    }
+}

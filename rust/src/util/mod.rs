@@ -1,0 +1,58 @@
+//! Utility substrates built in-repo because the crate registry is offline:
+//! deterministic RNG, statistics, JSON/CSV serialization, CLI parsing, and
+//! a property-testing harness.
+
+pub mod args;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count with binary units (used in reports).
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", v as u64, UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds adaptively (ns/µs/ms/s).
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KiB");
+        assert_eq!(human_bytes(1024.0 * 1024.0 * 3.5), "3.50 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(2.5), "2.500 s");
+        assert!(human_secs(0.002).contains("ms"));
+        assert!(human_secs(2e-7).contains("ns"));
+    }
+}

