@@ -5,7 +5,12 @@
 //! Also demonstrates robustness exploration: the same run repeated under
 //! injected message loss via the round engine's link model.
 //!
+//! The examples directory sits at the repo root (outside the `rust/`
+//! package), so register it before running:
+//!
 //! ```text
+//! # in rust/Cargo.toml:  [[example]] name = "consensus_network"
+//! #                      path = "../examples/consensus_network.rs"
 //! cargo run --release --example consensus_network
 //! ```
 
@@ -47,9 +52,12 @@ fn main() {
     let err: f64 =
         result.iterates.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / n as f64;
     println!(
-        "    {rounds} rounds in {:.2}s, shipped {}, consensus error {err:.3e}",
+        "    {rounds} rounds in {:.2}s, shipped {} (measured codec frames; \
+         idealized claim {}, ratio {:.4}), consensus error {err:.3e}",
         t0.elapsed().as_secs_f64(),
-        choco::util::human_bytes(result.bits as f64 / 8.0)
+        choco::util::human_bytes(result.bits as f64 / 8.0),
+        choco::util::human_bytes(result.idealized_bits as f64 / 8.0),
+        result.bits as f64 / result.idealized_bits as f64
     );
     assert!(err < 1e-6);
 

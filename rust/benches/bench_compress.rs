@@ -3,7 +3,7 @@
 //! quoted in EXPERIMENTS.md §Perf.
 
 use choco::benchlib::{black_box, Harness};
-use choco::compress::{wire, Compressor, QsgdS, RandK, ScaledSign, TopK};
+use choco::compress::{codec, wire, Compressor, Identity, QsgdS, RandK, ScaledSign, TopK};
 use choco::util::rng::Rng;
 
 fn main() {
@@ -31,22 +31,38 @@ fn main() {
         black_box(c);
     });
 
-    // wire encode/decode (bytes/s)
+    // codec frame encode/decode (bytes/s) per payload family
     let msg_sparse = TopK { k: 20 }.compress(&x, &mut rng);
     let bytes_sparse = wire::encode(&msg_sparse);
-    h.bench_throughput("wire encode sparse(20)", bytes_sparse.len() as f64, || {
+    h.bench_throughput("codec encode sparse(20)", bytes_sparse.len() as f64, || {
         black_box(wire::encode(&msg_sparse));
     });
-    h.bench_throughput("wire decode sparse(20)", bytes_sparse.len() as f64, || {
+    h.bench_throughput("codec decode sparse(20)", bytes_sparse.len() as f64, || {
         black_box(wire::decode(&bytes_sparse).unwrap());
     });
-    let msg_dense = QsgdS { s: 16 }.compress(&x, &mut rng);
+    let msg_dense = Identity.compress(&x, &mut rng);
     let bytes_dense = wire::encode(&msg_dense);
-    h.bench_throughput("wire encode dense d=2000", bytes_dense.len() as f64, || {
+    h.bench_throughput("codec encode dense d=2000", bytes_dense.len() as f64, || {
         black_box(wire::encode(&msg_dense));
     });
-    h.bench_throughput("wire decode dense d=2000", bytes_dense.len() as f64, || {
+    h.bench_throughput("codec decode dense d=2000", bytes_dense.len() as f64, || {
         black_box(wire::decode(&bytes_dense).unwrap());
+    });
+    let msg_quant = QsgdS { s: 16 }.compress(&x, &mut rng);
+    let bytes_quant = wire::encode(&msg_quant);
+    h.bench_throughput("codec encode quantized d=2000", bytes_quant.len() as f64, || {
+        black_box(wire::encode(&msg_quant));
+    });
+    h.bench_throughput("codec decode quantized d=2000", bytes_quant.len() as f64, || {
+        black_box(wire::decode(&bytes_quant).unwrap());
+    });
+    let msg_sign = ScaledSign.compress(&x, &mut rng);
+    let bytes_sign = wire::encode(&msg_sign);
+    h.bench_throughput("codec encode sign d=2000", bytes_sign.len() as f64, || {
+        black_box(wire::encode(&msg_sign));
+    });
+    h.bench_throughput("codec decode sign d=2000", bytes_sign.len() as f64, || {
+        black_box(wire::decode(&bytes_sign).unwrap());
     });
 
     // top_k scaling (quickselect O(d) vs sort O(d log d) reference)
@@ -65,4 +81,42 @@ fn main() {
         });
     }
     h.report();
+    wire_efficiency_table();
+}
+
+/// Measured-vs-idealized bits-per-coordinate for every operator: the
+/// codec subsystem's wire efficiency, tracked across PRs via the captured
+/// bench output (BENCH_*.json). `ratio` is measured/idealized; the
+/// acceptance bar for the packed families (qsgd, sign) is ≤ 1.05.
+fn wire_efficiency_table() {
+    let d = 10_000usize;
+    let mut rng = Rng::new(2);
+    let mut x = vec![0.0; d];
+    rng.fill_gaussian(&mut x);
+    let ops: Vec<Box<dyn Compressor>> = vec![
+        Box::new(Identity),
+        Box::new(TopK { k: d / 100 }),
+        Box::new(RandK { k: d / 100 }),
+        Box::new(QsgdS { s: 4 }),
+        Box::new(QsgdS { s: 16 }),
+        Box::new(QsgdS { s: 256 }),
+        Box::new(ScaledSign),
+    ];
+    println!("\n== wire efficiency (d={d}) ==");
+    println!(
+        "{:<12} {:>18} {:>18} {:>8}",
+        "operator", "idealized b/coord", "measured b/coord", "ratio"
+    );
+    for op in &ops {
+        let c = op.compress(&x, &mut rng);
+        let idealized = c.wire_bits as f64;
+        let measured = codec::encoded_bits(&c) as f64;
+        println!(
+            "{:<12} {:>18.4} {:>18.4} {:>8.4}",
+            op.name(),
+            idealized / d as f64,
+            measured / d as f64,
+            measured / idealized
+        );
+    }
 }

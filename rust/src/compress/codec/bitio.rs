@@ -1,0 +1,214 @@
+//! Little-endian bit-level I/O shared by all wire codecs.
+//!
+//! Bits are packed LSB-first within each byte; multi-bit fields are written
+//! low-bit-first so that byte-aligned whole-byte fields (u8/u32/f32) land in
+//! plain little-endian layout. A byte-aligned fast path keeps dense payload
+//! encoding at memcpy-like speed (>1 GB/s; see EXPERIMENTS.md §Perf) while
+//! the generic path supports the sub-byte fields the packed codecs need
+//! (sign bits, quantization levels, Elias-gamma index gaps).
+
+use super::CodecError;
+
+/// A growable little-endian bit buffer.
+pub struct BitWriter {
+    pub bytes: Vec<u8>,
+    bit: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self { bytes: Vec::new(), bit: 0 }
+    }
+
+    pub fn write_bits(&mut self, value: u64, nbits: usize) {
+        debug_assert!(nbits <= 64);
+        // Fast path (perf pass, EXPERIMENTS.md §Perf): whole bytes when the
+        // cursor is byte-aligned — dense/sparse payloads are byte-multiples
+        // after their aligned headers.
+        if self.bit % 8 == 0 && nbits % 8 == 0 {
+            let n = nbits / 8;
+            for i in 0..n {
+                self.bytes.push((value >> (8 * i)) as u8);
+            }
+            self.bit += nbits;
+            return;
+        }
+        for i in 0..nbits {
+            let b = (value >> i) & 1;
+            if self.bit % 8 == 0 {
+                self.bytes.push(0);
+            }
+            if b == 1 {
+                *self.bytes.last_mut().unwrap() |= 1 << (self.bit % 8);
+            }
+            self.bit += 1;
+        }
+    }
+
+    pub fn write_bit(&mut self, b: bool) {
+        self.write_bits(b as u64, 1);
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write_bits(v as u64, 8);
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_bits(v as u64, 32);
+    }
+
+    pub fn write_f32(&mut self, v: f32) {
+        self.write_u32(v.to_bits());
+    }
+
+    /// Elias-gamma code of `v ≥ 1`: ⌊log₂ v⌋ zeros, a 1 (the implicit top
+    /// bit of v), then the remaining ⌊log₂ v⌋ low bits of v. 2⌊log₂ v⌋+1
+    /// bits total — short codes for small index gaps.
+    pub fn write_gamma(&mut self, v: u64) {
+        debug_assert!(v >= 1, "gamma codes cover v >= 1");
+        let n = (63 - v.leading_zeros()) as usize;
+        self.write_bits(0, n);
+        self.write_bits(1, 1);
+        self.write_bits(v & ((1u64 << n) - 1), n);
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.bit
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    bit: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, bit: 0 }
+    }
+
+    pub fn read_bits(&mut self, nbits: usize) -> Result<u64, CodecError> {
+        // Byte-aligned fast path mirroring `BitWriter::write_bits`.
+        if self.bit % 8 == 0 && nbits % 8 == 0 {
+            let n = nbits / 8;
+            let start = self.bit / 8;
+            if start + n > self.bytes.len() {
+                return Err(CodecError::Truncated);
+            }
+            let mut v = 0u64;
+            for i in 0..n {
+                v |= (self.bytes[start + i] as u64) << (8 * i);
+            }
+            self.bit += nbits;
+            return Ok(v);
+        }
+        let mut v = 0u64;
+        for i in 0..nbits {
+            let byte = self.bit / 8;
+            if byte >= self.bytes.len() {
+                return Err(CodecError::Truncated);
+            }
+            let b = (self.bytes[byte] >> (self.bit % 8)) & 1;
+            v |= (b as u64) << i;
+            self.bit += 1;
+        }
+        Ok(v)
+    }
+
+    pub fn read_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.read_bits(8)? as u8)
+    }
+
+    pub fn read_u32(&mut self) -> Result<u32, CodecError> {
+        Ok(self.read_bits(32)? as u32)
+    }
+
+    pub fn read_f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.read_u32()?))
+    }
+
+    /// Inverse of [`BitWriter::write_gamma`].
+    pub fn read_gamma(&mut self) -> Result<u64, CodecError> {
+        let mut n = 0usize;
+        while self.read_bits(1)? == 0 {
+            n += 1;
+            if n > 63 {
+                return Err(CodecError::Malformed("gamma code overlong".into()));
+            }
+        }
+        let low = self.read_bits(n)?;
+        Ok((1u64 << n) | low)
+    }
+
+    /// Bits remaining before the end of the buffer.
+    pub fn bits_left(&self) -> usize {
+        self.bytes.len() * 8 - self.bit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_io_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_f32(2.5);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        assert_eq!(r.read_f32().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn gamma_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals = [1u64, 2, 3, 7, 8, 100, 4095, 1 << 20, u32::MAX as u64];
+        for &v in &vals {
+            w.write_gamma(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.read_gamma().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn gamma_length_is_2floorlog2_plus_1() {
+        for (v, expect) in [(1u64, 1usize), (2, 3), (3, 3), (4, 5), (255, 15)] {
+            let mut w = BitWriter::new();
+            w.write_gamma(v);
+            assert_eq!(w.bit_len(), expect, "gamma({v})");
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut r = BitReader::new(&[0xAB]);
+        assert!(r.read_bits(8).is_ok());
+        assert!(matches!(r.read_bits(1), Err(CodecError::Truncated)));
+    }
+
+    #[test]
+    fn zero_width_fields_are_noops() {
+        let mut w = BitWriter::new();
+        w.write_bits(0, 0);
+        assert_eq!(w.bit_len(), 0);
+        let mut r = BitReader::new(&[]);
+        assert_eq!(r.read_bits(0).unwrap(), 0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Quantized-payload codecs: packed qsgd levels and 1-bit sign bitmaps.
+//!
+//! These are the encoders that turn the paper's headline claims into real
+//! frames: `qsgd_s` at 1 + ⌈log₂ s⌉ bits per coordinate ("4 bits per
+//! coordinate" for s = 2⁴, §5.1, plus the sign bit the paper's counting
+//! leaves implicit) and scaled sign at exactly 1 bit per coordinate, each
+//! plus one f32 scale.
+
+use super::bitio::{BitReader, BitWriter};
+use super::{Codec, CodecError};
+use crate::compress::{Compressed, Payload};
+
+/// Codec 5: `f32 scale`, `u8 width`, then dim × (1 sign bit + width
+/// magnitude bits). `width` is the operator's nominal ⌈log₂ s⌉ unless some
+/// level overflows it (possible when one coordinate dominates the norm:
+/// levels reach s itself), in which case the whole frame widens by one bit
+/// per coordinate rather than clipping a level.
+pub struct QuantPack;
+
+fn quantized_parts(msg: &Compressed) -> (f64, u32, &[i32]) {
+    match &msg.payload {
+        Payload::Quantized { scale, bits_per_coord, levels } => {
+            (*scale, *bits_per_coord as u32, levels)
+        }
+        _ => unreachable!("codec applicability checked by the registry"),
+    }
+}
+
+/// Largest level magnitude the 31-bit field can carry. `i32::MIN`
+/// (magnitude 2³¹) saturates here — a one-ulp loss instead of the silent
+/// wrap to 0 that dropping the top bit would cause. In-repo producers
+/// (`QsgdS`) already cap levels at `i32::MAX`, so only hand-built
+/// payloads ever saturate.
+const MAX_MAG: u32 = i32::MAX as u32;
+
+fn mag(l: i32) -> u32 {
+    l.unsigned_abs().min(MAX_MAG)
+}
+
+/// Magnitude field width actually used on the wire: the nominal ⌈log₂ s⌉
+/// unless some level overflows it.
+fn pack_width(nominal: u32, levels: &[i32]) -> u32 {
+    let max_mag = levels.iter().map(|&l| mag(l)).max().unwrap_or(0);
+    let needed = 32 - max_mag.leading_zeros(); // 0 when all levels are 0
+    needed.max(nominal).min(31)
+}
+
+impl Codec for QuantPack {
+    fn id(&self) -> u8 {
+        super::QUANT_PACK
+    }
+
+    fn name(&self) -> &'static str {
+        "quant_pack"
+    }
+
+    fn applicable(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::Quantized { .. })
+    }
+
+    fn cost_bits(&self, msg: &Compressed) -> u64 {
+        let (_, nominal, levels) = quantized_parts(msg);
+        32 + 8 + (1 + pack_width(nominal, levels) as u64) * levels.len() as u64
+    }
+
+    fn encode_payload(&self, msg: &Compressed, w: &mut BitWriter) {
+        let (scale, nominal, levels) = quantized_parts(msg);
+        let width = pack_width(nominal, levels);
+        w.write_f32(scale as f32);
+        w.write_u8(width as u8);
+        for &l in levels {
+            w.write_bit(l < 0);
+            w.write_bits(mag(l) as u64, width as usize);
+        }
+    }
+
+    fn decode_payload(&self, dim: usize, r: &mut BitReader) -> Result<Payload, CodecError> {
+        let scale = r.read_f32()? as f64;
+        let width = r.read_u8()? as usize;
+        if width > 31 {
+            return Err(CodecError::Malformed(format!("level width {width} > 31")));
+        }
+        if (dim as u64) * (1 + width as u64) > r.bits_left() as u64 {
+            return Err(CodecError::Truncated);
+        }
+        let mut levels = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            let neg = r.read_bits(1)? == 1;
+            let mag = r.read_bits(width)? as i32;
+            levels.push(if neg { -mag } else { mag });
+        }
+        Ok(Payload::Quantized { scale, bits_per_coord: width as u8, levels })
+    }
+}
+
+/// Codec 6: `f32 scale`, then dim × 1 bit (set = negative) — the scaled
+/// sign operator's idealized d + 32 bits, exactly.
+pub struct SignBitmapCodec;
+
+impl Codec for SignBitmapCodec {
+    fn id(&self) -> u8 {
+        super::SIGN_BITMAP
+    }
+
+    fn name(&self) -> &'static str {
+        "sign_bitmap"
+    }
+
+    fn applicable(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::SignBitmap { .. })
+    }
+
+    fn cost_bits(&self, msg: &Compressed) -> u64 {
+        32 + msg.dim as u64
+    }
+
+    fn encode_payload(&self, msg: &Compressed, w: &mut BitWriter) {
+        let (scale, negatives) = match &msg.payload {
+            Payload::SignBitmap { scale, negatives } => (*scale, negatives),
+            _ => unreachable!("codec applicability checked by the registry"),
+        };
+        w.write_f32(scale as f32);
+        // The in-memory bitmap is already LSB-first packed with zeroed pad
+        // bits; ship whole bytes (aligned fast path) plus the remainder.
+        let full = msg.dim / 8;
+        let rem = msg.dim % 8;
+        for &b in &negatives[..full] {
+            w.write_u8(b);
+        }
+        if rem > 0 {
+            w.write_bits((negatives[full] & ((1u16 << rem) - 1) as u8) as u64, rem);
+        }
+    }
+
+    fn decode_payload(&self, dim: usize, r: &mut BitReader) -> Result<Payload, CodecError> {
+        let scale = r.read_f32()? as f64;
+        if dim as u64 > r.bits_left() as u64 {
+            return Err(CodecError::Truncated);
+        }
+        let full = dim / 8;
+        let rem = dim % 8;
+        let mut negatives = Vec::with_capacity(dim.div_ceil(8));
+        for _ in 0..full {
+            negatives.push(r.read_u8()?);
+        }
+        if rem > 0 {
+            negatives.push(r.read_bits(rem)? as u8);
+        }
+        Ok(Payload::SignBitmap { scale, negatives })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn via(c: &dyn Codec, m: &Compressed) -> (Payload, usize) {
+        let mut w = BitWriter::new();
+        c.encode_payload(m, &mut w);
+        let bits = w.bit_len();
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        (c.decode_payload(m.dim, &mut r).unwrap(), bits)
+    }
+
+    #[test]
+    fn quant_pack_roundtrips_and_packs_tight() {
+        let levels = vec![0, 3, -7, 15, -1, 0, 8, 2];
+        let m = Compressed {
+            dim: 8,
+            payload: Payload::Quantized { scale: 0.25, bits_per_coord: 4, levels: levels.clone() },
+            wire_bits: (1 + 4) * 8 + 32,
+        };
+        let (p, bits) = via(&QuantPack, &m);
+        assert_eq!(bits, 32 + 8 + 8 * 5); // scale + width byte + 5 bits/coord
+        match p {
+            Payload::Quantized { scale, bits_per_coord, levels: l } => {
+                assert_eq!(scale, 0.25);
+                assert_eq!(bits_per_coord, 4);
+                assert_eq!(l, levels);
+            }
+            _ => panic!("quantized expected"),
+        }
+    }
+
+    #[test]
+    fn quant_pack_widens_on_level_overflow() {
+        // A dominant coordinate can push a level to s itself (16 > 2⁴−1);
+        // the frame widens instead of clipping.
+        let levels = vec![16, 0, -1, 0];
+        let m = Compressed {
+            dim: 4,
+            payload: Payload::Quantized { scale: 1.0, bits_per_coord: 4, levels: levels.clone() },
+            wire_bits: (1 + 4) * 4 + 32,
+        };
+        let (p, bits) = via(&QuantPack, &m);
+        assert_eq!(bits, 32 + 8 + 4 * 6);
+        match p {
+            Payload::Quantized { levels: l, .. } => assert_eq!(l, levels),
+            _ => panic!("quantized expected"),
+        }
+    }
+
+    #[test]
+    fn sign_bitmap_is_one_bit_per_coordinate() {
+        for d in [1usize, 7, 8, 9, 64, 1000] {
+            let mut negatives = vec![0u8; d.div_ceil(8)];
+            for i in (0..d).step_by(3) {
+                negatives[i / 8] |= 1 << (i % 8);
+            }
+            let m = Compressed {
+                dim: d,
+                payload: Payload::SignBitmap { scale: 2.0, negatives: negatives.clone() },
+                wire_bits: d as u64 + 32,
+            };
+            let (p, bits) = via(&SignBitmapCodec, &m);
+            assert_eq!(bits, 32 + d, "d={d}");
+            match p {
+                Payload::SignBitmap { scale, negatives: n } => {
+                    assert_eq!(scale, 2.0);
+                    assert_eq!(n, negatives, "d={d}");
+                }
+                _ => panic!("sign bitmap expected"),
+            }
+        }
+    }
+}

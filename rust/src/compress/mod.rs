@@ -17,13 +17,22 @@
 //! [`Rescaled`] wrapper converts it back to the unbiased τ·qsgd form the
 //! Q1-G/Q2-G baselines require (Carli et al. 2010b analyze unbiased Q).
 //!
-//! Wire-size accounting follows the paper's own counting (§5.1 reports
-//! "transmitted bits" as an architecture-independent cost): float32
-//! payloads, rand_k indices derived from a shared seed (free), top_k
-//! indices ⌈log₂ d⌉ bits, qsgd_s log₂(s) bits per coordinate plus one
-//! float32 norm. `wire.rs` provides an actual bit-packed encoder whose
-//! measured sizes are reported alongside in the benches.
+//! Wire-size accounting follows the paper's counting (§5.1 reports
+//! "transmitted bits" as an architecture-independent cost) with one honest
+//! correction: float32 payloads, rand_k indices derived from a shared seed
+//! (free), top_k indices ⌈log₂ d⌉ bits, qsgd_s **1 + log₂(s)** bits per
+//! coordinate (the paper's log₂(s) leaves the sign bit implicit; a real
+//! wire must ship it) plus one float32 norm-scale, scaled sign 1 bit per
+//! coordinate plus one float32 scale, and a dropped/zero message exactly
+//! one byte.
+//!
+//! These claims are *measured*, not asserted: the [`codec`] subsystem
+//! packs every payload family bit-exactly (self-describing frames with a
+//! fixed 11-byte header), and property tests plus the actor runtime verify
+//! that encoded frame sizes stay within that fixed header of the claimed
+//! `wire_bits`. [`wire`] is the stable façade over the codec registry.
 
+pub mod codec;
 pub mod ops;
 pub mod wire;
 
@@ -40,12 +49,20 @@ pub struct Compressed {
 
 #[derive(Debug, Clone)]
 pub enum Payload {
-    /// Nothing transmitted (drop_p miss) — decodes to the zero vector.
+    /// Nothing transmitted (drop_p miss) — decodes to the zero vector and
+    /// costs a single byte on the wire ([`codec::ZERO_FRAME_BITS`]).
     Zero,
     /// Full dense vector (identity).
     Dense(Vec<f64>),
     /// Sparse coordinates (rand_k / top_k), indices strictly increasing.
     Sparse { indices: Vec<u32>, values: Vec<f64> },
+    /// Native qsgd_s levels: coordinate i decodes to `scale · levels[i]`.
+    /// `bits_per_coord` is the nominal magnitude width ⌈log₂ s⌉; the wire
+    /// codec adds one sign bit per coordinate.
+    Quantized { scale: f64, bits_per_coord: u8, levels: Vec<i32> },
+    /// Scaled sign: coordinate i decodes to `±scale`, negative where bit i
+    /// of the LSB-first bitmap is set (pad bits of the last byte are 0).
+    SignBitmap { scale: f64, negatives: Vec<u8> },
 }
 
 impl Compressed {
@@ -57,11 +74,16 @@ impl Compressed {
     }
 
     /// `out += alpha * decode(self)` — the only operation the gossip
-    /// algorithms need, so sparse payloads never materialize.
+    /// algorithms need, so compressed payloads never materialize.
     pub fn add_into(&self, alpha: f64, out: &mut [f64]) {
+        if matches!(self.payload, Payload::Zero) {
+            // 1-byte zero frames decoded without a dim hint carry dim 0;
+            // a zero update applies to a receiver of any length.
+            return;
+        }
         assert_eq!(out.len(), self.dim);
         match &self.payload {
-            Payload::Zero => {}
+            Payload::Zero => unreachable!(),
             Payload::Dense(v) => {
                 for i in 0..v.len() {
                     out[i] += alpha * v[i];
@@ -70,6 +92,19 @@ impl Compressed {
             Payload::Sparse { indices, values } => {
                 for (&i, &v) in indices.iter().zip(values.iter()) {
                     out[i as usize] += alpha * v;
+                }
+            }
+            Payload::Quantized { scale, levels, .. } => {
+                let a = alpha * *scale;
+                for (o, &l) in out.iter_mut().zip(levels.iter()) {
+                    *o += a * l as f64;
+                }
+            }
+            Payload::SignBitmap { scale, negatives } => {
+                let a = alpha * *scale;
+                for (i, o) in out.iter_mut().enumerate() {
+                    let neg = (negatives[i / 8] >> (i % 8)) & 1 == 1;
+                    *o += if neg { -a } else { a };
                 }
             }
         }
@@ -81,6 +116,8 @@ impl Compressed {
             Payload::Zero => 0,
             Payload::Dense(v) => v.len(),
             Payload::Sparse { indices, .. } => indices.len(),
+            Payload::Quantized { levels, .. } => levels.iter().filter(|&&l| l != 0).count(),
+            Payload::SignBitmap { .. } => self.dim,
         }
     }
 }

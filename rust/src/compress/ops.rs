@@ -204,8 +204,13 @@ fn quickselect_desc(v: &mut [f64], k: usize) -> f64 {
 ///
 /// `qsgd_s(x) = sign(x)·‖x‖/(s·τ) · ⌊ s·|x|/‖x‖ + ξ ⌋`, ξ ~ U[0,1]^d.
 ///
-/// Wire cost follows the paper's counting: log₂(s) bits per coordinate
-/// (s = 2⁴ → "4 bits per coordinate", §5.1) plus one float32 for ‖x‖.
+/// Produces a native [`Payload::Quantized`] message (scale + integer
+/// levels) that the wire codec packs bit-exactly. Wire cost is the paper's
+/// counting plus the sign bit the paper leaves implicit: 1 + ⌈log₂ s⌉
+/// bits per coordinate (s = 2⁴ → "4 bits per coordinate" §5.1, shipped as
+/// 5) plus one float32 norm-scale. The scale is narrowed to f32 at
+/// compression time — exactly what the codec ships — so value-mode and
+/// serialized trajectories agree bit-for-bit.
 #[derive(Debug, Clone, Copy)]
 pub struct QsgdS {
     pub s: u32,
@@ -235,31 +240,32 @@ impl Compressor for QsgdS {
     fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
         let d = x.len();
         let norm = crate::linalg::vecops::norm2(x);
-        let bits_per_coord = (32 - (self.s.max(2) - 1).leading_zeros()) as u64; // log2(s)
+        let bits_per_coord = (32 - (self.s.max(2) - 1).leading_zeros()) as u64; // ⌈log2(s)⌉
         if norm == 0.0 {
             return Compressed {
                 dim: d,
                 payload: Payload::Zero,
-                wire_bits: F32_BITS, // still sends the (zero) norm
+                wire_bits: super::codec::ZERO_FRAME_BITS,
             };
         }
         let s = self.s as f64;
         let tau = self.tau(d);
-        let scale = norm / (s * tau);
+        let scale = (norm / (s * tau)) as f32 as f64;
         // Hot path (perf pass, EXPERIMENTS.md §Perf): hoist the 1/norm
-        // division out of the loop and use copysign instead of
-        // signum·multiply — ~1.9× on the d=2000 benchmark.
+        // division out of the loop.
         let inv_norm_s = s / norm;
-        let mut out = vec![0.0; d];
-        for i in 0..d {
-            // the argument is nonnegative, so integer truncation == floor
-            let level = (x[i].abs() * inv_norm_s + rng.next_f64()) as u32 as f64;
-            out[i] = (scale * level).copysign(x[i]);
+        let mut levels = Vec::with_capacity(d);
+        for &xi in x {
+            // the argument is nonnegative, so integer truncation == floor;
+            // cap at i32::MAX so pathological s values can't wrap the sign
+            let mag = ((xi.abs() * inv_norm_s + rng.next_f64()) as u32)
+                .min(i32::MAX as u32) as i32;
+            levels.push(if xi < 0.0 { -mag } else { mag });
         }
         Compressed {
             dim: d,
-            payload: Payload::Dense(out),
-            wire_bits: bits_per_coord * d as u64 + F32_BITS,
+            payload: Payload::Quantized { scale, bits_per_coord: bits_per_coord as u8, levels },
+            wire_bits: (1 + bits_per_coord) * d as u64 + F32_BITS,
         }
     }
 }
@@ -293,14 +299,24 @@ impl Compressor for DropP {
                 wire_bits: F32_BITS * d as u64,
             }
         } else {
-            Compressed { dim: d, payload: Payload::Zero, wire_bits: 1 }
+            // A miss still ships a frame so the receiver can stay in
+            // lockstep: exactly one byte (the zero frame), and the claim
+            // matches the encoder (the old claim of 1 bit was not
+            // achievable — there is no sub-byte wire).
+            Compressed { dim: d, payload: Payload::Zero, wire_bits: super::codec::ZERO_FRAME_BITS }
         }
     }
 }
 
 /// Scaled sign compression: `Q(x) = (‖x‖₁/d)·sign(x)`.
 /// Biased; ω(x) = ‖x‖₁²/(d‖x‖²) — we report the worst case 1/d.
-/// One bit per coordinate + one float32 scale on the wire.
+/// One bit per coordinate + one float32 scale on the wire, produced as a
+/// native [`Payload::SignBitmap`]. A 1-bit alphabet has no zero symbol, so
+/// exact-zero coordinates ship as +scale (sign(0) := +1); Assumption 1
+/// still holds deterministically: ‖Q(x) − x‖² = ‖x‖² − ‖x‖₁²/d
+/// ≤ (1 − 1/d)‖x‖² by Cauchy–Schwarz, independent of the zero-coordinate
+/// convention. The scale is narrowed to f32 at compression time (what the
+/// codec ships), keeping value and serialized modes bit-identical.
 #[derive(Debug, Clone, Copy)]
 pub struct ScaledSign;
 
@@ -320,12 +336,16 @@ impl Compressor for ScaledSign {
     fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
         let d = x.len();
         let l1: f64 = x.iter().map(|v| v.abs()).sum();
-        let scale = l1 / d as f64;
-        let out: Vec<f64> =
-            x.iter().map(|&v| if v == 0.0 { 0.0 } else { scale * v.signum() }).collect();
+        let scale = (l1 / d as f64) as f32 as f64;
+        let mut negatives = vec![0u8; d.div_ceil(8)];
+        for (i, &v) in x.iter().enumerate() {
+            if v < 0.0 {
+                negatives[i / 8] |= 1 << (i % 8);
+            }
+        }
         Compressed {
             dim: d,
-            payload: Payload::Dense(out),
+            payload: Payload::SignBitmap { scale, negatives },
             wire_bits: d as u64 + F32_BITS,
         }
     }
@@ -372,6 +392,12 @@ impl Compressor for Rescaled {
             Payload::Zero => {}
             Payload::Dense(v) => v.iter_mut().for_each(|v| *v *= self.factor),
             Payload::Sparse { values, .. } => values.iter_mut().for_each(|v| *v *= self.factor),
+            // re-narrow to f32 after rescaling: the wire codec ships an
+            // f32 scale, and keeping the in-memory value identical to the
+            // shipped one keeps value/serialize modes bit-identical for
+            // the Q1-G/Q2-G baselines too
+            Payload::Quantized { scale, .. } => *scale = (*scale * self.factor) as f32 as f64,
+            Payload::SignBitmap { scale, .. } => *scale = (*scale * self.factor) as f32 as f64,
         }
         c
     }
@@ -512,12 +538,14 @@ mod tests {
     }
 
     #[test]
-    fn qsgd_paper_bit_counting() {
-        // s = 2^4 → 4 bits per coordinate (§5.1) + 32-bit norm.
+    fn qsgd_paper_bit_counting_plus_sign() {
+        // s = 2^4 → the paper's "4 bits per coordinate" (§5.1) + the sign
+        // bit a real wire must ship + 32-bit norm-scale. The codec
+        // round-trip tests verify this claim is achievable byte-for-byte.
         let c = QsgdS { s: 16 }.compress(&[1.0; 100], &mut rng());
-        assert_eq!(c.wire_bits, 4 * 100 + 32);
+        assert_eq!(c.wire_bits, (1 + 4) * 100 + 32);
         let c = QsgdS { s: 256 }.compress(&[1.0; 100], &mut rng());
-        assert_eq!(c.wire_bits, 8 * 100 + 32);
+        assert_eq!(c.wire_bits, (1 + 8) * 100 + 32);
     }
 
     #[test]
@@ -579,8 +607,19 @@ mod tests {
         let x = vec![3.0, -1.0, 0.0, 2.0];
         let c = ScaledSign.compress(&x, &mut rng());
         let scale = 6.0 / 4.0;
-        assert_eq!(c.to_dense(), vec![scale, -scale, 0.0, scale]);
+        // zero coordinates ship as +scale: the 1-bit wire alphabet has no
+        // zero symbol (see the operator docs — Assumption 1 still holds)
+        assert_eq!(c.to_dense(), vec![scale, -scale, scale, scale]);
         assert_eq!(c.wire_bits, 4 + 32);
+    }
+
+    #[test]
+    fn drop_miss_claims_the_one_byte_zero_frame() {
+        let mut r = rng();
+        let op = DropP { p: 0.0 };
+        let c = op.compress(&[1.0, 2.0], &mut r);
+        assert_eq!(c.wire_bits, crate::compress::codec::ZERO_FRAME_BITS);
+        assert_eq!(crate::compress::codec::encode(&c).len() as u64 * 8, c.wire_bits);
     }
 
     #[test]

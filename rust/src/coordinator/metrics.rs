@@ -92,7 +92,13 @@ impl Trace {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Accounting {
     pub rounds: usize,
+    /// Idealized bits (sum of the operators' claimed `wire_bits`) — the
+    /// paper's architecture-independent counting.
     pub bits: u64,
+    /// Measured bits: actual encoded codec-frame sizes for the same
+    /// messages. 0 unless the engine runs with `measure_wire` on (the
+    /// encoding pass costs real time, so figure drivers opt in).
+    pub encoded_bits: u64,
     pub messages: u64,
     /// Simulated wall-clock (per the network latency/bandwidth model).
     pub sim_time_s: f64,

@@ -10,6 +10,13 @@
 //! * per-link i.i.d. message drop probability — a dropped gossip message
 //!   is modeled as a zero update (the receiver simply misses this round's
 //!   delta), letting us study robustness of the schemes to loss.
+//!
+//! Accounting note: a *dropped* message charges the sender's attempted
+//! `wire_bits` but the synthesized zero placeholder carries `wire_bits: 0`
+//! — nothing reached the receiver, so nothing is double-counted. This is
+//! distinct from a compressor that *chooses* to send nothing (`drop_p`
+//! miss): that ships a real 1-byte zero frame and claims
+//! [`crate::compress::codec::ZERO_FRAME_BITS`].
 
 use crate::compress::{Compressed, Payload};
 use crate::topology::Graph;
@@ -73,7 +80,8 @@ impl NetworkSim {
                 round_time = round_time.max(self.model.transfer_time(msg.wire_bits));
                 if self.model.drop_prob > 0.0 && self.rng.bernoulli(self.model.drop_prob) {
                     // dropped: deliver a zero update so protocol state
-                    // machines stay in lockstep (see module docs).
+                    // machines stay in lockstep; wire_bits stays 0 because
+                    // nothing crossed the link (see module docs).
                     out.push((
                         j,
                         i,

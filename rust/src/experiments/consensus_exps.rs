@@ -183,7 +183,9 @@ fn pjrt_choco_curve(
     let mut rng = crate::util::rng::Rng::for_stream(seed, 0x504A5254); // "PJRT"
 
     let mut trace = Trace::new("choco_qsgd16_pjrt", &["iter", "bits", "time_s", "metric"]);
-    let bits_per_round = (n * 2) as u64 * (4 * d as u64 + 32); // ring: deg 2, log2(16) bits + norm
+    // ring: deg 2, (1 + log2(16)) bits per coordinate (sign + level, the
+    // same counting QsgdS claims and the wire codec ships) + f32 norm
+    let bits_per_round = (n * 2) as u64 * (5 * d as u64 + 32);
     let mut bits = 0u64;
     let metric = |x: &[f32]| -> f64 {
         let mut acc = 0.0;

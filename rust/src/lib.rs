@@ -6,10 +6,16 @@
 //!
 //! * **L3 (this crate)** — the decentralized coordinator: communication
 //!   graphs and gossip matrices, compression operators with exact wire
-//!   accounting, the CHOCO-Gossip consensus algorithm and the CHOCO-SGD
-//!   optimizer plus every baseline the paper compares against, a network
-//!   simulator and a threaded actor runtime, and drivers reproducing every
-//!   figure/table of the paper's evaluation.
+//!   accounting, a self-describing wire-codec subsystem
+//!   ([`compress::codec`]: versioned checksummed frames, a codec registry
+//!   with bit-packed encoders per payload family — raw/XOR dense, flat or
+//!   Elias-gamma sparse indices, packed quantization levels, 1-bit sign
+//!   bitmaps — so the paper's idealized bit counts are *measured* on real
+//!   frames, not asserted), the CHOCO-Gossip consensus algorithm and the
+//!   CHOCO-SGD optimizer plus every baseline the paper compares against,
+//!   a network simulator and a threaded actor runtime that ships those
+//!   codec frames, and drivers reproducing every figure/table of the
+//!   paper's evaluation.
 //! * **L2/L1 (python/compile)** — JAX models + Pallas kernels, AOT-lowered
 //!   once to HLO text artifacts that this crate executes through the
 //!   [`runtime`] module's PJRT client. Python never runs at experiment time.

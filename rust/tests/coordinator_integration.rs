@@ -107,7 +107,8 @@ fn bit_accounting_exact() {
     }
     assert_eq!(engine.acct.bits, rounds * (n as u64) * 2 * 32 * d as u64);
 
-    // choco qsgd_16: per round n·deg·(4d + 32)
+    // choco qsgd_16: per round n·deg·((1+4)d + 32) — the paper's 4 bits
+    // per coordinate plus the sign bit the wire actually ships
     let mut engine = RoundEngine::new(
         make_nodes(&Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw),
         &g,
@@ -117,7 +118,7 @@ fn bit_accounting_exact() {
     for _ in 0..rounds {
         engine.step();
     }
-    assert_eq!(engine.acct.bits, rounds * (n as u64) * 2 * (4 * d as u64 + 32));
+    assert_eq!(engine.acct.bits, rounds * (n as u64) * 2 * (5 * d as u64 + 32));
 }
 
 /// Simulated time follows the link model: halving bandwidth increases the
