@@ -1,15 +1,109 @@
-//! PJRT runtime benchmarks: artifact execution latency (gradient round
-//! trips that sit on the SGD hot path when the PJRT sources are used) vs
-//! the native implementations. Skipped when artifacts aren't built.
+//! Runtime benchmarks, two parts:
+//!
+//! 1. **n-scaling sweep** — CHOCO-GOSSIP rounds/sec at n = 1024…16384,
+//!    serial `RoundEngine` vs the sharded worker-pool engine, reporting
+//!    the multi-core speedup per topology (the large-n regime the paper's
+//!    O(1/(nT)) rate targets). Runs everywhere, no artifacts needed.
+//! 2. **PJRT artifact latency** — gradient round trips vs the native
+//!    implementations. Skipped when artifacts aren't built.
+//!
+//! `CHOCO_BENCH_FAST=1` shrinks round counts for CI.
 
 use choco::benchlib::{black_box, Harness};
+use choco::compress::QsgdS;
+use choco::consensus::{make_nodes, GossipNode, Scheme};
+use choco::coordinator::{LinkModel, RoundEngine, ShardedEngine};
 use choco::models::Objective;
 use choco::runtime::{Manifest, PjrtEngine, Tensor};
+use choco::topology::{uniform_local_weights, Graph};
 use choco::util::rng::Rng;
 
-fn main() {
+fn gossip_nodes(g: &Graph, d: usize, seed: u64) -> Vec<Box<dyn GossipNode>> {
+    let lw = uniform_local_weights(g);
+    let mut rng = Rng::new(seed);
+    let x0: Vec<Vec<f64>> = (0..g.n())
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    make_nodes(&Scheme::Choco { gamma: 0.4, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw)
+}
+
+/// Time `rounds` engine rounds after a short warmup; returns rounds/sec.
+fn time_serial(g: &Graph, d: usize, rounds: usize, warmup: usize) -> f64 {
+    let mut e = RoundEngine::new(gossip_nodes(g, d, 1), g, 1, LinkModel::default());
+    for _ in 0..warmup {
+        e.step();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        e.step();
+    }
+    black_box(e.iterates());
+    rounds as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+}
+
+fn time_sharded(g: &Graph, d: usize, rounds: usize, warmup: usize, shards: usize) -> f64 {
+    let mut e =
+        ShardedEngine::with_shards(gossip_nodes(g, d, 1), g, 1, LinkModel::default(), shards);
+    e.run_rounds(warmup);
+    let t0 = std::time::Instant::now();
+    e.run_rounds(rounds);
+    black_box(e.iterates());
+    rounds as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+}
+
+fn gossip_scaling_sweep() {
+    let fast = std::env::var("CHOCO_BENCH_FAST").is_ok();
+    let d = 64;
+    let rounds = if fast { 5 } else { 30 };
+    let warmup = if fast { 1 } else { 3 };
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "== n-scaling: CHOCO-GOSSIP (qsgd_16, d={d}), {rounds} timed rounds, {cores} cores =="
+    );
+    println!(
+        "{:<16} {:>7} {:>14} {:>15} {:>9}",
+        "topology", "n", "serial r/s", "sharded r/s", "speedup"
+    );
+    let graphs: Vec<Graph> = vec![
+        Graph::ring(1024),
+        Graph::ring(2048),
+        Graph::ring(4096),
+        Graph::ring(8192),
+        Graph::torus_square(1024),
+        Graph::torus_square(4096),
+        Graph::torus_square(16384),
+        Graph::hypercube(13), // 8192 nodes, log-degree: heavier in-edges
+    ];
+    for g in &graphs {
+        let serial = time_serial(g, d, rounds, warmup);
+        let sharded = time_sharded(g, d, rounds, warmup, cores);
+        println!(
+            "{:<16} {:>7} {:>14.1} {:>15.1} {:>8.2}×",
+            g.name(),
+            g.n(),
+            serial,
+            sharded,
+            sharded / serial
+        );
+    }
+    // shard-count sensitivity at one fixed size
+    let g = Graph::torus_square(4096);
+    println!("-- shard sensitivity, {} --", g.name());
+    for shards in [1usize, 2, 4, 8] {
+        let rps = time_sharded(&g, d, rounds, warmup, shards);
+        println!("  shards={shards:<3} {rps:>10.1} rounds/s");
+    }
+}
+
+fn pjrt_benches() {
     let Ok(manifest) = Manifest::load_default() else {
-        println!("bench_runtime: artifacts not built (run `make artifacts`) — skipping");
+        println!(
+            "bench_runtime: artifacts not built (run `make artifacts`) — skipping PJRT part"
+        );
         return;
     };
     let mut engine = PjrtEngine::new(manifest).expect("engine");
@@ -109,4 +203,9 @@ fn main() {
         });
     }
     h.report();
+}
+
+fn main() {
+    gossip_scaling_sweep();
+    pjrt_benches();
 }

@@ -11,7 +11,15 @@
 //! per round). A leader thread is not needed: the main thread joins the
 //! workers and collects their final node states; periodic snapshots flow
 //! over a metrics channel.
+//!
+//! One thread per node stops scaling long before large-n experiments do:
+//! at n = 4096 the runtime would oversubscribe any host by three orders
+//! of magnitude. [`run_actors`] therefore refuses node counts above
+//! [`ActorConfig::max_threads`] with an error instead of thrashing — the
+//! worker-pool [`super::sharded::ShardedEngine`] is the runtime for
+//! large n, and the differential harness proves it is trajectory-equal.
 
+use super::phases;
 use crate::compress::{codec, Compressed};
 use crate::consensus::GossipNode;
 use crate::topology::Graph;
@@ -30,11 +38,17 @@ enum Packet {
 }
 
 /// Snapshot sent to the metrics collector.
+#[derive(Debug, Clone)]
 pub struct Snapshot {
     pub node: usize,
     pub round: usize,
     pub x: Vec<f64>,
 }
+
+/// Hard ceiling on node threads unless the caller raises it explicitly:
+/// past this, one-thread-per-node means the host is being oversubscribed,
+/// not exercised.
+pub const DEFAULT_MAX_NODE_THREADS: usize = 1024;
 
 pub struct ActorConfig {
     pub rounds: usize,
@@ -43,15 +57,25 @@ pub struct ActorConfig {
     pub seed: u64,
     /// Ship encoded bytes (true) or in-memory values (false).
     pub serialize: bool,
+    /// Refuse to run with more nodes (= OS threads) than this; 0 disables
+    /// the guard. Large-n workloads belong on the sharded engine.
+    pub max_threads: usize,
 }
 
 impl Default for ActorConfig {
     fn default() -> Self {
-        Self { rounds: 100, snapshot_every: 0, seed: 1, serialize: true }
+        Self {
+            rounds: 100,
+            snapshot_every: 0,
+            seed: 1,
+            serialize: true,
+            max_threads: DEFAULT_MAX_NODE_THREADS,
+        }
     }
 }
 
 /// Result of an actor-runtime run.
+#[derive(Debug)]
 pub struct ActorResult {
     /// Final iterate of each node.
     pub iterates: Vec<Vec<f64>>,
@@ -69,13 +93,25 @@ pub struct ActorResult {
 
 /// Run `nodes` for `cfg.rounds` BSP rounds over `graph` with one thread
 /// per node. Panics propagate from worker threads.
+///
+/// Errors (instead of oversubscribing the host) when the node count
+/// exceeds [`ActorConfig::max_threads`].
 pub fn run_actors(
     nodes: Vec<Box<dyn GossipNode>>,
     graph: &Graph,
     cfg: &ActorConfig,
-) -> ActorResult {
+) -> Result<ActorResult, String> {
     let n = nodes.len();
     assert_eq!(n, graph.n());
+    if cfg.max_threads > 0 && n > cfg.max_threads {
+        return Err(format!(
+            "actor runtime: {n} nodes would need {n} OS threads, over the configured cap of {} \
+             — raise ActorConfig::max_threads explicitly, or use \
+             coordinator::ShardedEngine, the worker-pool runtime built for large n \
+             (trajectory-equal, see tests/engine_equivalence.rs)",
+            cfg.max_threads
+        ));
+    }
 
     // Channel per directed edge (j → i): senders held by j, receiver by i.
     let mut edge_tx: Vec<Vec<(usize, Sender<Packet>)>> = (0..n).map(|_| Vec::new()).collect();
@@ -110,7 +146,7 @@ pub fn run_actors(
                 let mut sent_bits = 0u64;
                 let mut claimed_bits = 0u64;
                 for t in 0..rounds {
-                    let msg = node.begin_round(t, &mut rng);
+                    let msg = phases::broadcast_one(node.as_mut(), t, &mut rng);
                     // Encode once per broadcast, not once per edge.
                     let frame = if serialize { Some(codec::encode(&msg)) } else { None };
                     for (_, tx) in &my_tx {
@@ -138,7 +174,7 @@ pub fn run_actors(
                         };
                         node.receive(*j, &incoming);
                     }
-                    node.end_round(t);
+                    phases::update_one(node.as_mut(), t);
                     if snapshot_every > 0 && (t + 1) % snapshot_every == 0 {
                         let _ = snap_tx.send(Snapshot {
                             node: i,
@@ -167,7 +203,7 @@ pub fn run_actors(
         bits += sent;
         idealized_bits += claimed;
     }
-    ActorResult { iterates, snapshots, bits, idealized_bits }
+    Ok(ActorResult { iterates, snapshots, bits, idealized_bits })
 }
 
 #[cfg(test)]
@@ -197,8 +233,14 @@ mod tests {
     fn actor_matches_round_engine_exactly_in_value_mode() {
         let (g, lw, x0) = setup(6, 8);
         let scheme = Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 2 }) };
-        let cfg = ActorConfig { rounds: 40, snapshot_every: 0, seed: 55, serialize: false };
-        let actor = run_actors(make_nodes(&scheme, &x0, &lw), &g, &cfg);
+        let cfg = ActorConfig {
+            rounds: 40,
+            snapshot_every: 0,
+            seed: 55,
+            serialize: false,
+            ..Default::default()
+        };
+        let actor = run_actors(make_nodes(&scheme, &x0, &lw), &g, &cfg).unwrap();
         let mut sync = SyncRunner::new(make_nodes(&scheme, &x0, &lw), &g, 55);
         for _ in 0..40 {
             sync.step();
@@ -216,13 +258,15 @@ mod tests {
         let a = run_actors(
             make_nodes(&scheme, &x0, &lw),
             &g,
-            &ActorConfig { rounds: 30, snapshot_every: 0, seed: 9, serialize: true },
-        );
+            &ActorConfig { rounds: 30, seed: 9, serialize: true, ..Default::default() },
+        )
+        .unwrap();
         let b = run_actors(
             make_nodes(&scheme, &x0, &lw),
             &g,
-            &ActorConfig { rounds: 30, snapshot_every: 0, seed: 9, serialize: false },
-        );
+            &ActorConfig { rounds: 30, seed: 9, serialize: false, ..Default::default() },
+        )
+        .unwrap();
         for (xa, xb) in a.iterates.iter().zip(b.iterates.iter()) {
             assert!(vecops::max_abs_diff(xa, xb) < 1e-4);
         }
@@ -235,8 +279,15 @@ mod tests {
         let r = run_actors(
             make_nodes(&scheme, &x0, &lw),
             &g,
-            &ActorConfig { rounds: 20, snapshot_every: 5, seed: 2, serialize: true },
-        );
+            &ActorConfig {
+                rounds: 20,
+                snapshot_every: 5,
+                seed: 2,
+                serialize: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
         // 4 nodes × 4 snapshot points
         assert_eq!(r.snapshots.len(), 16);
         assert!(r.snapshots.iter().all(|s| s.round % 5 == 0));
@@ -253,8 +304,9 @@ mod tests {
         let r = run_actors(
             make_nodes(&scheme, &x0, &lw),
             &g,
-            &ActorConfig { rounds: 10, snapshot_every: 0, seed: 4, serialize: false },
-        );
+            &ActorConfig { rounds: 10, seed: 4, serialize: false, ..Default::default() },
+        )
+        .unwrap();
         assert_eq!(r.bits, r.idealized_bits);
     }
 
@@ -268,8 +320,14 @@ mod tests {
         let r = run_actors(
             make_nodes(&scheme, &x0, &lw),
             &g,
-            &ActorConfig { rounds: rounds as usize, snapshot_every: 0, seed: 4, serialize: true },
-        );
+            &ActorConfig {
+                rounds: rounds as usize,
+                seed: 4,
+                serialize: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
         let messages = rounds * 4 * 2; // ring of 4, one per directed edge
         assert_eq!(r.idealized_bits, messages * 6 * 32);
         // The registry picks the smallest dense encoding per message, so
@@ -288,11 +346,35 @@ mod tests {
         let r = run_actors(
             make_nodes(&scheme, &x0, &lw),
             &g,
-            &ActorConfig { rounds: 300, snapshot_every: 0, seed: 3, serialize: true },
-        );
+            &ActorConfig { rounds: 300, seed: 3, serialize: true, ..Default::default() },
+        )
+        .unwrap();
         for x in &r.iterates {
             // f32 wire narrowing bounds the final accuracy
             assert!(vecops::dist_sq(x, &target) < 1e-9);
         }
+    }
+
+    #[test]
+    fn refuses_to_oversubscribe_with_clear_error() {
+        // n above the cap: the runtime must refuse, not spawn 32 threads
+        // against a cap of 8 (and certainly not 4096 against a host).
+        let (g, lw, x0) = setup(32, 2);
+        let scheme = Scheme::Exact { gamma: 1.0 };
+        let err = run_actors(
+            make_nodes(&scheme, &x0, &lw),
+            &g,
+            &ActorConfig { rounds: 1, max_threads: 8, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.contains("32 nodes"), "unhelpful error: {err}");
+        assert!(err.contains("ShardedEngine"), "error should point at the large-n runtime: {err}");
+        // cap 0 disables the guard; raising the cap admits the run
+        let ok = run_actors(
+            make_nodes(&scheme, &x0, &lw),
+            &g,
+            &ActorConfig { rounds: 1, max_threads: 0, ..Default::default() },
+        );
+        assert!(ok.is_ok());
     }
 }

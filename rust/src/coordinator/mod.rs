@@ -1,20 +1,44 @@
 //! L3 coordinator: drives nodes (consensus schemes or optimizers) over a
 //! communication graph, accounting every transmitted bit.
 //!
-//! Two runtimes over the same [`crate::consensus::GossipNode`] objects:
-//! * [`round::RoundEngine`] — deterministic synchronous BSP rounds with a
-//!   pluggable link model (latency/bandwidth/loss); used by the figure
-//!   drivers;
+//! Three runtimes execute the same [`crate::consensus::GossipNode`]
+//! objects, all driving rounds through the shared [`phases`] module:
+//!
+//! * [`round::RoundEngine`] — the serial reference: deterministic
+//!   synchronous BSP rounds with a pluggable link model
+//!   (latency/bandwidth/loss); the engine behind every figure driver and
+//!   the trajectory oracle for the other two;
+//! * [`sharded::ShardedEngine`] — the large-n runtime: partitions the
+//!   vertex set across a pool of scoped worker threads with
+//!   double-buffered message slots and one barrier per round; runs
+//!   10k+-node graphs at full core utilization;
 //! * [`actor`] — one thread per node with per-edge FIFO channels and real
 //!   serialized messages; proves the node implementations work as actual
-//!   distributed actors. Trajectory-equal to the round engine (tested).
+//!   distributed actors. Guarded by [`ActorConfig::max_threads`] so it
+//!   refuses node counts that would oversubscribe the host.
+//!
+//! **Equivalence guarantee.** For a given seed, all three runtimes
+//! produce *bit-identical* iterates (the actor runtime in value mode; its
+//! serialize mode deliberately narrows to f32 on the wire) and identical
+//! idealized/measured bit accounting, for every shard count and worker
+//! interleaving. The two engines additionally agree bit-for-bit with
+//! link loss enabled, because drop decisions key on `(round, edge)`
+//! rather than delivery order ([`network::NetworkSim::dropped`]); the
+//! actor runtime has no link model — its channels never drop — so lossy
+//! experiments belong on the engines. The differential harness in
+//! `tests/engine_equivalence.rs` enforces all of this for CHOCO-GOSSIP
+//! and CHOCO-SGD on ring and torus topologies with shard counts
+//! {1, 2, 7, n}.
 
 pub mod actor;
 pub mod metrics;
 pub mod network;
+pub mod phases;
 pub mod round;
+pub mod sharded;
 
-pub use actor::{run_actors, ActorConfig, ActorResult};
+pub use actor::{run_actors, ActorConfig, ActorResult, DEFAULT_MAX_NODE_THREADS};
 pub use metrics::{Accounting, Trace};
 pub use network::{LinkModel, NetworkSim};
 pub use round::{RoundConfig, RoundEngine};
+pub use sharded::ShardedEngine;

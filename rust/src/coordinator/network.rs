@@ -11,6 +11,15 @@
 //!   is modeled as a zero update (the receiver simply misses this round's
 //!   delta), letting us study robustness of the schemes to loss.
 //!
+//! Drop decisions are *keyed*: [`NetworkSim::dropped`] is a pure function
+//! of `(seed, round, from, to)`, not of a stateful RNG consumed in
+//! delivery order. Every engine — serial and sharded worker-pool —
+//! therefore sees the identical loss pattern for a given seed no matter
+//! how it partitions or orders the edges, which is what lets the
+//! differential harness demand bit-identical trajectories even with loss
+//! enabled. The per-edge delivery itself (accounting + zero synthesis on
+//! a drop) lives in one place, [`super::phases::deliver_edge`].
+//!
 //! Accounting note: a *dropped* message charges the sender's attempted
 //! `wire_bits` but the synthesized zero placeholder carries `wire_bits: 0`
 //! — nothing reached the receiver, so nothing is double-counted. This is
@@ -18,9 +27,7 @@
 //! miss): that ships a real 1-byte zero frame and claims
 //! [`crate::compress::codec::ZERO_FRAME_BITS`].
 
-use crate::compress::{Compressed, Payload};
-use crate::topology::Graph;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SplitMix64};
 
 /// Link-level simulation parameters (uniform across links).
 #[derive(Debug, Clone)]
@@ -47,63 +54,41 @@ impl LinkModel {
     }
 }
 
-/// Per-round delivery plan over a graph: which messages arrive, and how
-/// long the slowest link takes (BSP round duration).
+/// One SplitMix64 avalanche step folding `v` into the running hash `h`.
+#[inline]
+fn fold(h: u64, v: u64) -> u64 {
+    SplitMix64::new(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// Per-link network decisions over a graph. Stateless across rounds: all
+/// randomness is derived from `(seed, round, edge)` keys.
 pub struct NetworkSim {
     pub model: LinkModel,
-    rng: Rng,
+    seed: u64,
 }
 
 impl NetworkSim {
     pub fn new(model: LinkModel, seed: u64) -> Self {
-        Self { model, rng: Rng::for_stream(seed, 0x4E4554) } // "NET"
+        Self { model, seed: fold(seed, 0x4E45_5453_494D) } // "NETSIM"
     }
 
-    /// Deliver round-`t` broadcasts: for each directed edge (j → i),
-    /// decide drop/deliver and account time. Returns
-    /// (delivered messages as (from, to, msg), round_time_s, bits, msgs).
-    pub fn deliver<'m>(
-        &mut self,
-        graph: &Graph,
-        msgs: &'m [Compressed],
-    ) -> (Vec<(usize, usize, Compressed)>, f64, u64, u64) {
-        let mut out = Vec::new();
-        let mut round_time: f64 = 0.0;
-        let mut bits = 0u64;
-        let mut count = 0u64;
-        for i in 0..graph.n() {
-            for &j in graph.neighbors(i) {
-                // j's broadcast traveling to i
-                let msg = &msgs[j];
-                bits += msg.wire_bits;
-                count += 1;
-                round_time = round_time.max(self.model.transfer_time(msg.wire_bits));
-                if self.model.drop_prob > 0.0 && self.rng.bernoulli(self.model.drop_prob) {
-                    // dropped: deliver a zero update so protocol state
-                    // machines stay in lockstep; wire_bits stays 0 because
-                    // nothing crossed the link (see module docs).
-                    out.push((
-                        j,
-                        i,
-                        Compressed { dim: msg.dim, payload: Payload::Zero, wire_bits: 0 },
-                    ));
-                } else {
-                    out.push((j, i, msg.clone()));
-                }
-            }
+    /// Is round-`t`'s message on the directed edge `from → to` lost?
+    ///
+    /// Pure in `(seed, t, from, to)` — independent of how many other links
+    /// were examined first, so shards can evaluate their own edges in
+    /// parallel and still agree with the serial engine bit-for-bit.
+    pub fn dropped(&self, t: usize, from: usize, to: usize) -> bool {
+        if self.model.drop_prob <= 0.0 {
+            return false;
         }
-        (out, round_time, bits, count)
+        let key = fold(fold(fold(self.seed, t as u64), from as u64), to as u64);
+        Rng::new(key).bernoulli(self.model.drop_prob)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::Payload;
-
-    fn msg(bits: u64) -> Compressed {
-        Compressed { dim: 4, payload: Payload::Dense(vec![1.0; 4]), wire_bits: bits }
-    }
 
     #[test]
     fn transfer_time_model() {
@@ -112,44 +97,92 @@ mod tests {
     }
 
     #[test]
-    fn delivers_all_without_drops() {
-        let g = Graph::ring(4);
-        let msgs: Vec<Compressed> = (0..4).map(|_| msg(100)).collect();
-        let mut sim = NetworkSim::new(LinkModel::default(), 1);
-        let (delivered, time, bits, count) = sim.deliver(&g, &msgs);
-        assert_eq!(delivered.len(), 8); // 4 nodes × 2 neighbors
-        assert_eq!(bits, 800);
-        assert_eq!(count, 8);
-        assert!(time > 0.0);
+    fn lossless_model_never_drops() {
+        let sim = NetworkSim::new(LinkModel::default(), 1);
+        assert!((0..1000).all(|t| !sim.dropped(t, 0, 1)));
     }
 
     #[test]
-    fn drops_become_zero_messages() {
-        let g = Graph::complete(4);
-        let msgs: Vec<Compressed> = (0..4).map(|_| msg(64)).collect();
-        let mut sim = NetworkSim::new(
-            LinkModel { drop_prob: 0.5, ..Default::default() },
-            3,
-        );
-        let (delivered, _, _, _) = sim.deliver(&g, &msgs);
-        let zeros = delivered
-            .iter()
-            .filter(|(_, _, m)| matches!(m.payload, Payload::Zero))
-            .count();
-        assert!(zeros > 0 && zeros < delivered.len(), "zeros = {zeros}");
+    fn certain_loss_always_drops() {
+        let sim = NetworkSim::new(LinkModel { drop_prob: 1.0, ..Default::default() }, 1);
+        assert!((0..100).all(|t| sim.dropped(t, 1, 0)));
+    }
+
+    #[test]
+    fn partial_loss_drops_some_not_all() {
+        // complete(4)'s 12 directed edges over 8 rounds at p = 0.5
+        let sim = NetworkSim::new(LinkModel { drop_prob: 0.5, ..Default::default() }, 3);
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for t in 0..8 {
+            for i in 0..4usize {
+                for j in 0..4usize {
+                    if i != j {
+                        total += 1;
+                        if sim.dropped(t, j, i) {
+                            zeros += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(zeros > 0 && zeros < total, "zeros = {zeros} of {total}");
     }
 
     #[test]
     fn deterministic_drops() {
-        let g = Graph::ring(6);
-        let msgs: Vec<Compressed> = (0..6).map(|_| msg(64)).collect();
-        let run = |seed| {
-            let mut sim =
-                NetworkSim::new(LinkModel { drop_prob: 0.3, ..Default::default() }, seed);
-            let (d, _, _, _) = sim.deliver(&g, &msgs);
-            d.iter().map(|(_, _, m)| matches!(m.payload, Payload::Zero)).collect::<Vec<_>>()
+        // ring(6)'s directed edges, as (to, from) pairs
+        let edges: Vec<(usize, usize)> =
+            (0..6).flat_map(|i| [(i, (i + 5) % 6), (i, (i + 1) % 6)]).collect();
+        let run = |seed, t| {
+            let sim = NetworkSim::new(LinkModel { drop_prob: 0.3, ..Default::default() }, seed);
+            edges.iter().map(|&(i, j)| sim.dropped(t, j, i)).collect::<Vec<_>>()
         };
-        assert_eq!(run(7), run(7));
-        assert_ne!(run(7), run(8));
+        assert_eq!(run(7, 0), run(7, 0));
+        assert_ne!(run(7, 0), run(8, 0));
+        // the loss pattern also varies across rounds for a fixed seed
+        assert_ne!(run(7, 0), run(7, 1));
+    }
+
+    #[test]
+    fn drop_decision_is_keyed_not_sequential() {
+        // Pure per-edge function: querying edges in any order, any number
+        // of times, yields identical decisions.
+        let sim = NetworkSim::new(LinkModel { drop_prob: 0.4, ..Default::default() }, 11);
+        let mut forward = Vec::new();
+        for t in 0..50 {
+            for e in 0..6usize {
+                forward.push(sim.dropped(t, e, (e + 1) % 6));
+            }
+        }
+        let mut backward = Vec::new();
+        for t in (0..50).rev() {
+            for e in (0..6usize).rev() {
+                backward.push(sim.dropped(t, e, (e + 1) % 6));
+            }
+        }
+        backward.reverse();
+        assert_eq!(forward, backward);
+        // directionality matters: (from, to) and (to, from) are
+        // independent links
+        let fwd = (0..200).filter(|&t| sim.dropped(t, 0, 1)).count();
+        let rev = (0..200).filter(|&t| sim.dropped(t, 1, 0)).count();
+        assert!(fwd > 0 && rev > 0);
+        let agree = (0..200).filter(|&t| sim.dropped(t, 0, 1) == sim.dropped(t, 1, 0)).count();
+        assert!(agree < 200, "reverse link decisions identical to forward");
+    }
+
+    #[test]
+    fn drop_rate_statistics() {
+        let sim = NetworkSim::new(LinkModel { drop_prob: 0.25, ..Default::default() }, 5);
+        let n = 20_000;
+        let mut hits = 0usize;
+        for t in 0..n {
+            if sim.dropped(t, 3, 4) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "empirical drop rate {rate}");
     }
 }

@@ -1,0 +1,263 @@
+//! Shared round-phase logic for every runtime.
+//!
+//! A BSP gossip round decomposes into three phases:
+//!
+//! 1. **broadcast** — node `i` draws from its private RNG stream and
+//!    computes its round-`t` message ([`broadcast_one`]);
+//! 2. **deliver** — every directed edge `(from → to)` carries the sender's
+//!    broadcast through the link model; the drop decision is a pure
+//!    function of `(round, edge)` ([`NetworkSim::dropped`]), so delivery
+//!    order — and therefore how vertices are sharded across workers —
+//!    cannot change the trajectory ([`deliver_edge`]);
+//! 3. **update** — all inbox messages folded in, node `i` applies its
+//!    local update ([`update_one`]).
+//!
+//! The serial [`super::round::RoundEngine`], the worker-pool
+//! [`super::sharded::ShardedEngine`] and the threaded [`super::actor`]
+//! runtime all drive [`GossipNode`]s through these same functions; the
+//! differential harness in `tests/engine_equivalence.rs` pins them to
+//! bit-identical trajectories and identical accounting.
+//!
+//! Accounting flows through [`RoundAcct`], a per-round accumulator that
+//! shards fill independently and [`RoundAcct::merge`] combines with
+//! order-independent operations only (`u64` sums and a `max`), so the
+//! merged totals are deterministic for every shard count.
+
+use super::metrics::{Accounting, Trace};
+use super::network::{LinkModel, NetworkSim};
+use super::round::{MetricFn, RoundConfig};
+use crate::compress::{Compressed, Payload};
+use crate::consensus::GossipNode;
+use crate::util::rng::Rng;
+
+/// Per-round communication accounting, accumulated per shard and merged
+/// deterministically (sums and maxes only — no order-dependent floats).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundAcct {
+    /// Idealized bits attempted on all directed links (claimed
+    /// `wire_bits`, counted even for dropped messages — the sender still
+    /// transmitted).
+    pub bits: u64,
+    /// Point-to-point messages attempted.
+    pub messages: u64,
+    /// Measured codec-frame bits (only filled when the engine runs with
+    /// `measure_wire`).
+    pub encoded_bits: u64,
+    /// Largest single-message `wire_bits` seen on any link this round;
+    /// `None` when no message moved. Determines the BSP round time.
+    pub max_link_bits: Option<u64>,
+}
+
+impl RoundAcct {
+    /// Fold another shard's accumulator into this one. Commutative and
+    /// associative, so any merge order yields the same totals.
+    pub fn merge(&mut self, other: &RoundAcct) {
+        self.bits += other.bits;
+        self.messages += other.messages;
+        self.encoded_bits += other.encoded_bits;
+        self.max_link_bits = match (self.max_link_bits, other.max_link_bits) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+    }
+
+    /// Commit one merged round into the engine-level [`Accounting`]:
+    /// counters add up, and the round's simulated duration is the transfer
+    /// time of the largest message (BSP: the slowest link gates the round).
+    pub fn commit(&self, model: &LinkModel, acct: &mut Accounting) {
+        acct.bits += self.bits;
+        acct.messages += self.messages;
+        acct.encoded_bits += self.encoded_bits;
+        if let Some(mb) = self.max_link_bits {
+            acct.sim_time_s += model.transfer_time(mb);
+        }
+    }
+}
+
+/// Phase 1 for one node: compute the round-`t` broadcast from the node's
+/// private RNG stream.
+#[inline]
+pub fn broadcast_one(node: &mut dyn GossipNode, t: usize, rng: &mut Rng) -> Compressed {
+    node.begin_round(t, rng)
+}
+
+/// Phase 1 for a slice of nodes (the serial engine's whole population, or
+/// one shard's chunk).
+pub fn broadcast_all(
+    nodes: &mut [Box<dyn GossipNode>],
+    rngs: &mut [Rng],
+    t: usize,
+) -> Vec<Compressed> {
+    nodes
+        .iter_mut()
+        .zip(rngs.iter_mut())
+        .map(|(node, rng)| broadcast_one(node.as_mut(), t, rng))
+        .collect()
+}
+
+/// Measured wire cost of broadcasting `msg` to `degree` neighbors: the
+/// codec frame is encoded once and shipped per out-edge.
+#[inline]
+pub fn sender_encoded_bits(msg: &Compressed, degree: usize) -> u64 {
+    crate::compress::codec::encoded_bits(msg) * degree as u64
+}
+
+/// Phase 2 for one directed edge `(from → to)`: account the attempted
+/// transmission, then deliver either the real message or — when the link
+/// model drops it — a synthesized zero update (the receiver simply misses
+/// this round's delta; `wire_bits: 0` because nothing crossed the link).
+/// This is the single home of per-edge delivery semantics; both engines
+/// call it once per in-edge.
+///
+/// The drop decision keys on `(round, from, to)`, so calling this once per
+/// in-edge, in any order, from any thread, produces the same trajectory.
+pub fn deliver_edge(
+    node: &mut dyn GossipNode,
+    net: &NetworkSim,
+    t: usize,
+    from: usize,
+    to: usize,
+    msg: &Compressed,
+    acct: &mut RoundAcct,
+) {
+    acct.bits += msg.wire_bits;
+    acct.messages += 1;
+    acct.max_link_bits = Some(match acct.max_link_bits {
+        Some(m) => m.max(msg.wire_bits),
+        None => msg.wire_bits,
+    });
+    if net.dropped(t, from, to) {
+        let zero = Compressed { dim: msg.dim, payload: Payload::Zero, wire_bits: 0 };
+        node.receive(from, &zero);
+    } else {
+        node.receive(from, msg);
+    }
+}
+
+/// Phase 3 for one node: all inbox messages folded in, apply the update.
+#[inline]
+pub fn update_one(node: &mut dyn GossipNode, t: usize) {
+    node.end_round(t);
+}
+
+/// Phase 3 for a slice of nodes.
+pub fn update_all(nodes: &mut [Box<dyn GossipNode>], t: usize) {
+    for node in nodes.iter_mut() {
+        update_one(node.as_mut(), t);
+    }
+}
+
+/// Engine surface the shared trace driver needs. Both engines implement
+/// it so their `run` methods stay in lockstep: one place defines the
+/// trace columns, logging cadence, and early-stop semantics.
+pub trait RoundDriver {
+    /// Advance `k` BSP rounds.
+    fn advance(&mut self, k: usize);
+    /// Current node population (for metric closures).
+    fn nodes(&self) -> &[Box<dyn GossipNode>];
+    /// Running accounting.
+    fn acct(&self) -> &Accounting;
+    /// Current round index t.
+    fn now(&self) -> usize;
+}
+
+/// Shared `run` driver: log row 0, then advance in `log_every` chunks,
+/// logging `metric` at each chunk boundary (so the final round is always
+/// logged) and stopping early on `stop_below` or a non-finite metric.
+/// Trace columns: iter, bits, time_s, metric.
+pub fn run_traced(
+    engine: &mut dyn RoundDriver,
+    name: &str,
+    cfg: &RoundConfig,
+    mut metric: MetricFn<'_>,
+) -> Trace {
+    let mut trace = Trace::new(name, &["iter", "bits", "time_s", "metric"]);
+    let m0 = metric(engine.nodes());
+    let row = |e: &dyn RoundDriver, m: f64| {
+        vec![e.now() as f64, e.acct().bits as f64, e.acct().sim_time_s, m]
+    };
+    trace.push(row(engine, m0));
+    let every = cfg.log_every.max(1);
+    let mut done = 0usize;
+    while done < cfg.rounds {
+        let k = every.min(cfg.rounds - done);
+        engine.advance(k);
+        done += k;
+        let m = metric(engine.nodes());
+        trace.push(row(engine, m));
+        if cfg.stop_below > 0.0 && m < cfg.stop_below {
+            break;
+        }
+        if !m.is_finite() {
+            // diverged — record and stop (ECD does this; the figure
+            // shows the truncated curve).
+            break;
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::{make_nodes, Scheme};
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+    #[test]
+    fn round_acct_merge_is_order_independent() {
+        let a = RoundAcct { bits: 10, messages: 2, encoded_bits: 12, max_link_bits: Some(7) };
+        let b = RoundAcct { bits: 5, messages: 1, encoded_bits: 6, max_link_bits: Some(9) };
+        let c = RoundAcct { bits: 0, messages: 0, encoded_bits: 0, max_link_bits: None };
+        let mut ab = a;
+        ab.merge(&b);
+        ab.merge(&c);
+        let mut cb = c;
+        cb.merge(&b);
+        cb.merge(&a);
+        assert_eq!(ab.bits, cb.bits);
+        assert_eq!(ab.messages, cb.messages);
+        assert_eq!(ab.encoded_bits, cb.encoded_bits);
+        assert_eq!(ab.max_link_bits, cb.max_link_bits);
+        assert_eq!(ab.max_link_bits, Some(9));
+    }
+
+    #[test]
+    fn commit_uses_slowest_link_for_round_time() {
+        let model = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6, drop_prob: 0.0 };
+        let ra = RoundAcct { bits: 1500, messages: 2, encoded_bits: 0, max_link_bits: Some(1000) };
+        let mut acct = Accounting::default();
+        ra.commit(&model, &mut acct);
+        assert_eq!(acct.bits, 1500);
+        assert_eq!(acct.messages, 2);
+        assert!((acct.sim_time_s - (1e-3 + 1000.0 / 1e6)).abs() < 1e-12);
+        // an empty round adds no simulated time
+        let mut empty = Accounting::default();
+        RoundAcct::default().commit(&model, &mut empty);
+        assert_eq!(empty.sim_time_s, 0.0);
+    }
+
+    #[test]
+    fn deliver_edge_accounts_attempted_bits_even_for_drops() {
+        let g = Graph::ring(4);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let x0 = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0], vec![7.0, 8.0]];
+        let mut nodes = make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw);
+        let net =
+            NetworkSim::new(LinkModel { drop_prob: 1.0, ..Default::default() }, 1);
+        let msg = Compressed {
+            dim: 2,
+            payload: Payload::Dense(vec![1.0, 1.0]),
+            wire_bits: 64,
+        };
+        let mut ra = RoundAcct::default();
+        let mut rng = Rng::new(3);
+        broadcast_one(nodes[0].as_mut(), 0, &mut rng);
+        deliver_edge(nodes[0].as_mut(), &net, 0, 1, 0, &msg, &mut ra);
+        // drop_prob = 1: message surely dropped, yet the attempt is charged
+        assert_eq!(ra.bits, 64);
+        assert_eq!(ra.messages, 1);
+        assert_eq!(ra.max_link_bits, Some(64));
+    }
+}

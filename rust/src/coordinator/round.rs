@@ -1,16 +1,17 @@
-//! Synchronous (BSP) round engine.
+//! Synchronous (BSP) round engine — the serial reference runtime.
 //!
 //! Drives any set of [`GossipNode`]s — consensus schemes or optimizers —
 //! for T rounds over a graph, with exact bit accounting, a pluggable
 //! network model (latency / bandwidth / loss), and periodic metric
 //! logging into a [`Trace`]. This is the engine behind every figure
-//! reproduction; the threaded [`super::actor`] runtime executes the same
-//! node objects with real message passing and must produce the same
-//! trajectories (tested).
+//! reproduction, and the trajectory oracle the other two runtimes
+//! (threaded [`super::actor`], worker-pool [`super::sharded`]) are pinned
+//! to bit-for-bit by the differential harness. All three drive nodes
+//! through the same [`super::phases`] functions.
 
 use super::metrics::{Accounting, Trace};
 use super::network::{LinkModel, NetworkSim};
-use crate::compress::Compressed;
+use super::phases::{self, RoundAcct};
 use crate::consensus::GossipNode;
 use crate::topology::Graph;
 use crate::util::rng::Rng;
@@ -51,7 +52,12 @@ pub struct RoundEngine<'g> {
 }
 
 impl<'g> RoundEngine<'g> {
-    pub fn new(nodes: Vec<Box<dyn GossipNode>>, graph: &'g Graph, seed: u64, link: LinkModel) -> Self {
+    pub fn new(
+        nodes: Vec<Box<dyn GossipNode>>,
+        graph: &'g Graph,
+        seed: u64,
+        link: LinkModel,
+    ) -> Self {
         assert_eq!(nodes.len(), graph.n(), "one node per graph vertex");
         let rngs = (0..nodes.len()).map(|i| Rng::for_stream(seed, i as u64)).collect();
         Self {
@@ -70,32 +76,32 @@ impl<'g> RoundEngine<'g> {
     pub fn step(&mut self) -> u64 {
         let start = std::time::Instant::now();
         let t = self.t;
-        let msgs: Vec<Compressed> = self
-            .nodes
-            .iter_mut()
-            .zip(self.rngs.iter_mut())
-            .map(|(node, rng)| node.begin_round(t, rng))
-            .collect();
-        let (delivered, round_time, bits, count) = self.net.deliver(self.graph, &msgs);
+        let msgs = phases::broadcast_all(&mut self.nodes, &mut self.rngs, t);
+        let mut ra = RoundAcct::default();
         if self.measure_wire {
             for (i, msg) in msgs.iter().enumerate() {
-                self.acct.encoded_bits +=
-                    crate::compress::codec::encoded_bits(msg) * self.graph.degree(i) as u64;
+                ra.encoded_bits += phases::sender_encoded_bits(msg, self.graph.degree(i));
             }
         }
-        for (from, to, msg) in &delivered {
-            self.nodes[*to].receive(*from, msg);
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            for &j in self.graph.neighbors(i) {
+                phases::deliver_edge(node.as_mut(), &self.net, t, j, i, &msgs[j], &mut ra);
+            }
         }
-        for node in self.nodes.iter_mut() {
-            node.end_round(t);
-        }
+        phases::update_all(&mut self.nodes, t);
         self.t += 1;
         self.acct.rounds += 1;
-        self.acct.bits += bits;
-        self.acct.messages += count;
-        self.acct.sim_time_s += round_time;
+        let bits = ra.bits;
+        ra.commit(&self.net.model, &mut self.acct);
         self.acct.cpu_time_s += start.elapsed().as_secs_f64();
         bits
+    }
+
+    /// Run `k` rounds back to back.
+    pub fn run_rounds(&mut self, k: usize) {
+        for _ in 0..k {
+            self.step();
+        }
     }
 
     /// Current iterates.
@@ -108,33 +114,26 @@ impl<'g> RoundEngine<'g> {
         crate::linalg::vecops::mean_of(&self.iterates())
     }
 
-    /// Run under `cfg`, logging `metric` at the configured cadence.
+    /// Run under `cfg`, logging `metric` at the configured cadence
+    /// (shared driver: [`phases::run_traced`]).
     /// Trace columns: iter, bits, time_s, metric.
-    pub fn run(&mut self, name: &str, cfg: &RoundConfig, mut metric: MetricFn<'_>) -> Trace {
-        let mut trace = Trace::new(name, &["iter", "bits", "time_s", "metric"]);
-        let m0 = metric(&self.nodes);
-        trace.push(vec![self.t as f64, self.acct.bits as f64, self.acct.sim_time_s, m0]);
-        for r in 0..cfg.rounds {
-            self.step();
-            if (r + 1) % cfg.log_every.max(1) == 0 || r + 1 == cfg.rounds {
-                let m = metric(&self.nodes);
-                trace.push(vec![
-                    self.t as f64,
-                    self.acct.bits as f64,
-                    self.acct.sim_time_s,
-                    m,
-                ]);
-                if cfg.stop_below > 0.0 && m < cfg.stop_below {
-                    break;
-                }
-                if !m.is_finite() {
-                    // diverged — record and stop (ECD does this; the
-                    // figure shows the truncated curve).
-                    break;
-                }
-            }
-        }
-        trace
+    pub fn run(&mut self, name: &str, cfg: &RoundConfig, metric: MetricFn<'_>) -> Trace {
+        phases::run_traced(self, name, cfg, metric)
+    }
+}
+
+impl phases::RoundDriver for RoundEngine<'_> {
+    fn advance(&mut self, k: usize) {
+        self.run_rounds(k);
+    }
+    fn nodes(&self) -> &[Box<dyn GossipNode>] {
+        &self.nodes
+    }
+    fn acct(&self) -> &Accounting {
+        &self.acct
+    }
+    fn now(&self) -> usize {
+        self.t
     }
 }
 
@@ -246,7 +245,8 @@ mod tests {
         let (x0, target) = x0s(4, 4, 9);
         let nodes = make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw);
         let mut engine = RoundEngine::new(nodes, &g, 1, LinkModel::default());
-        let cfg = RoundConfig { rounds: 1000, log_every: 1, stop_below: 1e-12, ..Default::default() };
+        let cfg =
+            RoundConfig { rounds: 1000, log_every: 1, stop_below: 1e-12, ..Default::default() };
         let trace = engine.run("exact", &cfg, Box::new(move |nodes| {
             nodes.iter().map(|n| vecops::dist_sq(n.x(), &target)).sum::<f64>()
         }));

@@ -1,0 +1,523 @@
+//! Sharded worker-pool BSP engine for large-n gossip.
+//!
+//! The serial [`super::round::RoundEngine`] steps nodes one at a time and
+//! the [`super::actor`] runtime spawns one OS thread per node — neither
+//! reaches the large-n regimes where the paper's O(1/(nT)) rate pays off.
+//! This engine partitions the vertex set into contiguous shards and runs
+//! each shard on a scoped worker thread, while remaining **bit-identical**
+//! to the serial engine for every shard count:
+//!
+//! * each node keeps its own RNG stream `Rng::for_stream(seed, i)`,
+//!   exactly as the serial engine seeds it, so broadcast randomness does
+//!   not depend on which worker drives the node;
+//! * broadcasts land in double-buffered per-node message slots (no mpsc
+//!   channels, no per-message allocation beyond the message itself); a
+//!   [`Barrier`] separates the broadcast phase from the update phase, and
+//!   the two slot banks alternate so one barrier per round suffices — a
+//!   worker writing round `t+1` into bank `(t+1) % 2` can never race a
+//!   straggler still reading bank `t % 2`, and nobody rewrites bank
+//!   `t % 2` until the next barrier has proven all its readers done;
+//! * link-loss decisions key on `(round, edge)`
+//!   ([`super::network::NetworkSim::dropped`]), so shards evaluate their
+//!   own in-edges independently yet agree with the serial order;
+//! * accounting accumulates per shard in [`RoundAcct`] and merges with
+//!   order-independent operations only, so `Accounting.bits`,
+//!   `messages`, `encoded_bits` and `sim_time_s` match the serial engine
+//!   exactly.
+//!
+//! The differential harness (`tests/engine_equivalence.rs`) pins all of
+//! the above for shard counts {1, 2, 7, n}; `benches/bench_runtime.rs`
+//! reports the rounds/sec scaling against the serial engine at n up to
+//! 16384.
+
+use super::metrics::{Accounting, Trace};
+use super::network::{LinkModel, NetworkSim};
+use super::phases::{self, RoundAcct};
+use super::round::{MetricFn, RoundConfig};
+use crate::compress::{Compressed, Payload};
+use crate::consensus::GossipNode;
+use crate::topology::Graph;
+use crate::util::rng::Rng;
+use std::cell::UnsafeCell;
+use std::sync::Barrier;
+
+/// One bank of per-node broadcast slots.
+///
+/// Safety protocol (upheld by [`ShardedEngine::run_rounds`]): during a
+/// broadcast phase each worker writes only the slots of its own vertices;
+/// a barrier separates all writes from all reads; the bank is not written
+/// again until a subsequent barrier has retired every reader.
+struct SlotBank {
+    slots: Vec<UnsafeCell<Compressed>>,
+}
+
+// Safety: see the protocol above — writers are disjoint per index and
+// always separated from readers by a barrier.
+unsafe impl Sync for SlotBank {}
+
+impl SlotBank {
+    fn new(n: usize) -> Self {
+        Self {
+            slots: (0..n)
+                .map(|_| {
+                    UnsafeCell::new(Compressed { dim: 0, payload: Payload::Zero, wire_bits: 0 })
+                })
+                .collect(),
+        }
+    }
+
+    /// Safety: caller must be the unique writer of index `i` this phase,
+    /// with no concurrent readers (readers wait at the phase barrier).
+    unsafe fn write(&self, i: usize, msg: Compressed) {
+        *self.slots[i].get() = msg;
+    }
+
+    /// Safety: caller must be past the barrier that retired all writers of
+    /// this bank, with no writer active until the next barrier.
+    unsafe fn read(&self, i: usize) -> &Compressed {
+        &*self.slots[i].get()
+    }
+}
+
+/// Worker-pool BSP engine: same API surface as [`super::round::RoundEngine`]
+/// (step / run / iterates / accounting), same trajectories bit-for-bit.
+pub struct ShardedEngine<'g> {
+    pub nodes: Vec<Box<dyn GossipNode>>,
+    pub graph: &'g Graph,
+    pub acct: Accounting,
+    /// When set, every broadcast is additionally run through the wire
+    /// codec and measured frame sizes accumulate in `acct.encoded_bits`
+    /// next to the idealized `acct.bits`, exactly as in the serial engine.
+    pub measure_wire: bool,
+    shards: usize,
+    rngs: Vec<Rng>,
+    net: NetworkSim,
+    t: usize,
+}
+
+impl<'g> ShardedEngine<'g> {
+    /// Engine with an automatic shard count (one per available core).
+    pub fn new(
+        nodes: Vec<Box<dyn GossipNode>>,
+        graph: &'g Graph,
+        seed: u64,
+        link: LinkModel,
+    ) -> Self {
+        Self::with_shards(nodes, graph, seed, link, 0)
+    }
+
+    /// Engine with an explicit shard count (0 = automatic). Any count
+    /// produces the same trajectory; the count only controls parallelism.
+    pub fn with_shards(
+        nodes: Vec<Box<dyn GossipNode>>,
+        graph: &'g Graph,
+        seed: u64,
+        link: LinkModel,
+        shards: usize,
+    ) -> Self {
+        assert_eq!(nodes.len(), graph.n(), "one node per graph vertex");
+        let shards = if shards == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            shards
+        };
+        let rngs = (0..nodes.len()).map(|i| Rng::for_stream(seed, i as u64)).collect();
+        Self {
+            nodes,
+            graph,
+            acct: Accounting::default(),
+            measure_wire: false,
+            shards,
+            rngs,
+            net: NetworkSim::new(link, seed),
+            t: 0,
+        }
+    }
+
+    /// Vertex partition for `n` nodes under the configured shard count:
+    /// `(chunk, workers)` — contiguous chunks of `chunk` vertices, one
+    /// worker per chunk. Single source of truth for `run_rounds` and
+    /// [`Self::worker_count`].
+    fn partition(&self, n: usize) -> (usize, usize) {
+        let shards = self.shards.max(1).min(n);
+        let chunk = n.div_ceil(shards);
+        (chunk, n.div_ceil(chunk))
+    }
+
+    /// Number of worker threads a round will actually use (the requested
+    /// shard count clamped to the node count).
+    pub fn worker_count(&self) -> usize {
+        let n = self.nodes.len();
+        if n == 0 {
+            return 0;
+        }
+        self.partition(n).1
+    }
+
+    /// One BSP round. Returns the bits shipped this round.
+    pub fn step(&mut self) -> u64 {
+        let before = self.acct.bits;
+        self.run_rounds(1);
+        self.acct.bits - before
+    }
+
+    /// Run `k` BSP rounds on the worker pool: one scoped thread per shard,
+    /// persistent across all `k` rounds, one barrier per round.
+    pub fn run_rounds(&mut self, k: usize) {
+        let n = self.nodes.len();
+        if k == 0 || n == 0 {
+            self.t += k;
+            self.acct.rounds += k;
+            return;
+        }
+        let start = std::time::Instant::now();
+        let (chunk, workers) = self.partition(n);
+        let banks = [SlotBank::new(n), SlotBank::new(n)];
+        let barrier = Barrier::new(workers);
+        let t0 = self.t;
+        let measure_wire = self.measure_wire;
+        let graph = self.graph;
+        let net = &self.net;
+        let per_worker: Vec<Vec<RoundAcct>> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for (w, (nodes, rngs)) in
+                self.nodes.chunks_mut(chunk).zip(self.rngs.chunks_mut(chunk)).enumerate()
+            {
+                let base = w * chunk;
+                let banks = &banks;
+                let barrier = &barrier;
+                handles.push(s.spawn(move || {
+                    // Each round performs exactly one barrier.wait(); if a
+                    // node panics, this worker must still serve its
+                    // remaining waits or every sibling deadlocks at the
+                    // barrier and the panic is never reported. Count the
+                    // waits done, catch the unwind, pay the rest, rethrow.
+                    let waited = std::cell::Cell::new(0usize);
+                    let body = std::panic::AssertUnwindSafe(|| {
+                        let mut rounds: Vec<RoundAcct> = Vec::with_capacity(k);
+                        for r in 0..k {
+                            let t = t0 + r;
+                            let bank = &banks[r % 2];
+                            let mut ra = RoundAcct::default();
+                            // Phase 1: broadcast this shard's vertices.
+                            for (li, node) in nodes.iter_mut().enumerate() {
+                                let msg =
+                                    phases::broadcast_one(node.as_mut(), t, &mut rngs[li]);
+                                if measure_wire {
+                                    ra.encoded_bits += phases::sender_encoded_bits(
+                                        &msg,
+                                        graph.degree(base + li),
+                                    );
+                                }
+                                // Safety: this worker is the unique writer
+                                // of its own vertices' slots; readers are
+                                // held at the barrier below.
+                                unsafe { bank.write(base + li, msg) };
+                            }
+                            barrier.wait();
+                            waited.set(waited.get() + 1);
+                            // Phase 2+3: deliver in-edges and update.
+                            // Reads of this bank are safe until the
+                            // *other* bank's next barrier retires them
+                            // (double buffering).
+                            for (li, node) in nodes.iter_mut().enumerate() {
+                                let i = base + li;
+                                for &j in graph.neighbors(i) {
+                                    // Safety: all writers of `bank` passed
+                                    // the barrier; no writer touches it
+                                    // again before the next barrier.
+                                    let msg = unsafe { bank.read(j) };
+                                    phases::deliver_edge(
+                                        node.as_mut(),
+                                        net,
+                                        t,
+                                        j,
+                                        i,
+                                        msg,
+                                        &mut ra,
+                                    );
+                                }
+                                phases::update_one(node.as_mut(), t);
+                            }
+                            rounds.push(ra);
+                        }
+                        rounds
+                    });
+                    match std::panic::catch_unwind(body) {
+                        Ok(rounds) => rounds,
+                        Err(payload) => {
+                            // Siblings finish their k rounds against stale
+                            // (but valid) slot contents; results of this
+                            // run are discarded when the panic resurfaces
+                            // at join below.
+                            for _ in waited.get()..k {
+                                barrier.wait();
+                            }
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(rounds) => rounds,
+                    // rethrow the original payload so the caller sees the
+                    // node's own panic message, as with the serial engine
+                    Err(payload) => std::panic::resume_unwind(payload),
+                })
+                .collect()
+        });
+        // Deterministic merge: per round, fold the shard accumulators in
+        // shard order (sums and maxes — order-independent anyway), then
+        // commit exactly as the serial engine does per step.
+        for r in 0..k {
+            let mut merged = RoundAcct::default();
+            for rounds in &per_worker {
+                merged.merge(&rounds[r]);
+            }
+            merged.commit(&self.net.model, &mut self.acct);
+            self.acct.rounds += 1;
+        }
+        self.t += k;
+        self.acct.cpu_time_s += start.elapsed().as_secs_f64();
+    }
+
+    /// Current iterates.
+    pub fn iterates(&self) -> Vec<Vec<f64>> {
+        self.nodes.iter().map(|n| n.x().to_vec()).collect()
+    }
+
+    /// Mean iterate x̄.
+    pub fn mean(&self) -> Vec<f64> {
+        crate::linalg::vecops::mean_of(&self.iterates())
+    }
+
+    /// Run under `cfg`, logging `metric` at the configured cadence —
+    /// identical trace shape and stop semantics to
+    /// [`super::round::RoundEngine::run`] (shared driver:
+    /// [`phases::run_traced`]), with the rounds between log points
+    /// executing on the worker pool.
+    pub fn run(&mut self, name: &str, cfg: &RoundConfig, metric: MetricFn<'_>) -> Trace {
+        phases::run_traced(self, name, cfg, metric)
+    }
+}
+
+impl phases::RoundDriver for ShardedEngine<'_> {
+    fn advance(&mut self, k: usize) {
+        self.run_rounds(k);
+    }
+    fn nodes(&self) -> &[Box<dyn GossipNode>] {
+        &self.nodes
+    }
+    fn acct(&self) -> &Accounting {
+        &self.acct
+    }
+    fn now(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{QsgdS, TopK};
+    use crate::consensus::{make_nodes, Scheme};
+    use crate::linalg::vecops;
+    use crate::topology::{local_weights, mixing_matrix, MixingRule};
+
+    fn x0s(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_serial_engine_for_every_shard_count() {
+        let g = Graph::ring(11);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let x0 = x0s(11, 8, 3);
+        let mk_scheme = || Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 2 }) };
+        let mut serial = crate::coordinator::RoundEngine::new(
+            make_nodes(&mk_scheme(), &x0, &lw),
+            &g,
+            42,
+            LinkModel::default(),
+        );
+        for _ in 0..30 {
+            serial.step();
+        }
+        for shards in [1usize, 2, 3, 7, 11, 64] {
+            let mut engine = ShardedEngine::with_shards(
+                make_nodes(&mk_scheme(), &x0, &lw),
+                &g,
+                42,
+                LinkModel::default(),
+                shards,
+            );
+            engine.run_rounds(30);
+            for (a, b) in engine.iterates().iter().zip(serial.iterates().iter()) {
+                assert_eq!(
+                    vecops::max_abs_diff(a, b),
+                    0.0,
+                    "shards={shards}: trajectory diverged from serial"
+                );
+            }
+            assert_eq!(engine.acct.bits, serial.acct.bits, "shards={shards}");
+            assert_eq!(engine.acct.messages, serial.acct.messages, "shards={shards}");
+            assert_eq!(engine.acct.rounds, serial.acct.rounds, "shards={shards}");
+            assert_eq!(
+                engine.acct.sim_time_s, serial.acct.sim_time_s,
+                "shards={shards}: simulated time must merge deterministically"
+            );
+        }
+    }
+
+    #[test]
+    fn step_interleaves_with_run_rounds() {
+        // step() is run_rounds(1): mixing the two must not change state
+        // evolution.
+        let g = Graph::torus2d(3, 3);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let x0 = x0s(9, 6, 5);
+        let scheme = || Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) };
+        let nodes_a = make_nodes(&scheme(), &x0, &lw);
+        let nodes_b = make_nodes(&scheme(), &x0, &lw);
+        let mut a = ShardedEngine::with_shards(nodes_a, &g, 9, LinkModel::default(), 3);
+        let mut b = ShardedEngine::with_shards(nodes_b, &g, 9, LinkModel::default(), 2);
+        a.run_rounds(10);
+        for _ in 0..10 {
+            b.step();
+        }
+        for (xa, xb) in a.iterates().iter().zip(b.iterates().iter()) {
+            assert_eq!(vecops::max_abs_diff(xa, xb), 0.0);
+        }
+        assert_eq!(a.acct.bits, b.acct.bits);
+        assert_eq!(a.acct.rounds, 10);
+    }
+
+    #[test]
+    fn measure_wire_matches_serial() {
+        let g = Graph::ring(6);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let x0 = x0s(6, 32, 8);
+        let scheme = || Scheme::Choco { gamma: 0.2, op: Box::new(QsgdS { s: 16 }) };
+        let mut serial = crate::coordinator::RoundEngine::new(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            21,
+            LinkModel::default(),
+        );
+        serial.measure_wire = true;
+        for _ in 0..5 {
+            serial.step();
+        }
+        let mut sharded = ShardedEngine::with_shards(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            21,
+            LinkModel::default(),
+            3,
+        );
+        sharded.measure_wire = true;
+        sharded.run_rounds(5);
+        assert!(serial.acct.encoded_bits > 0);
+        assert_eq!(sharded.acct.encoded_bits, serial.acct.encoded_bits);
+    }
+
+    /// Test double: behaves like a do-nothing node until round `at`,
+    /// then panics in begin_round.
+    struct PanicNode {
+        x: Vec<f64>,
+        at: usize,
+    }
+
+    impl GossipNode for PanicNode {
+        fn dim(&self) -> usize {
+            self.x.len()
+        }
+        fn begin_round(&mut self, t: usize, _rng: &mut Rng) -> Compressed {
+            assert!(t < self.at, "node deliberately panicked at round {t}");
+            Compressed {
+                dim: self.x.len(),
+                payload: Payload::Dense(self.x.clone()),
+                wire_bits: 32,
+            }
+        }
+        fn receive(&mut self, _from: usize, _msg: &Compressed) {}
+        fn end_round(&mut self, _t: usize) {}
+        fn x(&self) -> &[f64] {
+            &self.x
+        }
+    }
+
+    #[test]
+    fn node_panic_propagates_instead_of_deadlocking() {
+        // One node panics mid-run on one worker: the other workers must
+        // not deadlock at the barrier, and the panic must resurface to
+        // the caller (the serial engine's behavior), not hang.
+        let g = Graph::ring(8);
+        let nodes: Vec<Box<dyn GossipNode>> = (0..8)
+            .map(|i| {
+                Box::new(PanicNode {
+                    x: vec![0.0; 2],
+                    at: if i == 5 { 3 } else { usize::MAX },
+                }) as Box<dyn GossipNode>
+            })
+            .collect();
+        let mut e = ShardedEngine::with_shards(nodes, &g, 1, LinkModel::default(), 4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.run_rounds(10)));
+        assert!(r.is_err(), "panic in a shard worker must propagate");
+    }
+
+    #[test]
+    fn worker_count_clamps_to_nodes() {
+        let g = Graph::ring(4);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let x0 = x0s(4, 4, 1);
+        let e = ShardedEngine::with_shards(
+            make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw),
+            &g,
+            1,
+            LinkModel::default(),
+            99,
+        );
+        assert_eq!(e.worker_count(), 4);
+    }
+
+    #[test]
+    fn run_logs_trace_like_serial() {
+        let g = Graph::ring(5);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let x0 = x0s(5, 4, 7);
+        let target = vecops::mean_of(&x0);
+        let nodes = make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw);
+        let mut engine = ShardedEngine::with_shards(nodes, &g, 1, LinkModel::default(), 2);
+        let cfg = RoundConfig { rounds: 50, log_every: 10, ..Default::default() };
+        let trace = engine.run(
+            "exact",
+            &cfg,
+            Box::new(move |nodes| {
+                nodes.iter().map(|n| vecops::dist_sq(n.x(), &target)).sum::<f64>()
+                    / nodes.len() as f64
+            }),
+        );
+        assert_eq!(trace.rows.len(), 6); // t=0 plus 5 log points
+        let bits = trace.column("bits");
+        assert!(bits.windows(2).all(|w| w[1] > w[0]));
+        let m = trace.column("metric");
+        assert!(m.last().unwrap() < &(m[0] * 1e-6));
+        assert_eq!(engine.acct.rounds, 50);
+        assert_eq!(engine.acct.messages, 50 * 10);
+    }
+}

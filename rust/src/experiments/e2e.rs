@@ -69,9 +69,15 @@ pub fn run_transformer_e2e(
     // Threaded actor runtime with value-mode messages (n_params-length
     // deltas; serialization mode is exercised by the integration tests).
     let snapshot_every = (steps / 20).max(1);
-    let cfg = ActorConfig { rounds: steps, snapshot_every, seed: 7, serialize: false };
+    let cfg = ActorConfig {
+        rounds: steps,
+        snapshot_every,
+        seed: 7,
+        serialize: false,
+        ..Default::default()
+    };
     let start = std::time::Instant::now();
-    let result = crate::coordinator::run_actors(nodes, &graph, &cfg);
+    let result = crate::coordinator::run_actors(nodes, &graph, &cfg)?;
     let wall = start.elapsed().as_secs_f64();
 
     // Loss curve: consensus distance between node snapshots + final
@@ -117,7 +123,8 @@ pub fn run_transformer_e2e(
     println!("  consensus spread {}", trace.sparkline("consensus_spread", 40));
 
     std::fs::create_dir_all(out_dir).ok();
-    let mut summary = Trace::new("e2e_summary", &["final_loss", "random_init_loss", "bits", "wall_s"]);
+    let mut summary =
+        Trace::new("e2e_summary", &["final_loss", "random_init_loss", "bits", "wall_s"]);
     summary.push(vec![final_loss, init_vocab_loss, result.bits as f64, wall]);
     Trace::write_csv(&[summary], out_dir.join("e2e_summary.csv")).map_err(|e| e.to_string())?;
     Trace::write_csv(&[trace], out_dir.join("e2e_consensus.csv")).map_err(|e| e.to_string())?;

@@ -1,0 +1,195 @@
+//! Large-n scenario driver: CHOCO-GOSSIP at n = 1024…16384.
+//!
+//! The paper's O(1/(nT)) headline only pays off as n grows, and related
+//! work (Koloskova et al. 2019b; Toghani & Uribe 2022) runs consensus at
+//! deep-learning scale. This driver makes large-n a first-class scenario:
+//! torus / hypercube / Erdős–Rényi graphs at thousands of vertices, the
+//! sharded worker-pool engine against the serial engine, with a built-in
+//! differential check — every row in the emitted table is backed by a
+//! bit-identical serial/sharded trajectory comparison.
+//!
+//! Weights come from [`crate::topology::uniform_local_weights`] (O(|E|)),
+//! never a dense mixing matrix. CI-scale runs n ≤ 4096; `--full` adds
+//! n = 16384.
+
+use super::{write_traces, ExpOptions};
+use crate::compress::QsgdS;
+use crate::consensus::{make_nodes, Scheme};
+use crate::coordinator::{LinkModel, RoundEngine, ShardedEngine, Trace};
+use crate::linalg::vecops;
+use crate::topology::{uniform_local_weights, Graph};
+use crate::util::rng::Rng;
+
+/// One row of the n-scaling table.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub topology: String,
+    pub n: usize,
+    pub rounds: usize,
+    pub initial_err: f64,
+    pub final_err: f64,
+    pub bits: u64,
+    pub serial_rps: f64,
+    pub sharded_rps: f64,
+    pub speedup: f64,
+    pub workers: usize,
+}
+
+/// Run one CHOCO-GOSSIP scenario on `g` with both engines, verify they
+/// agree bit-for-bit, and measure rounds/sec for each.
+pub fn run_scenario(g: &Graph, d: usize, rounds: usize, seed: u64) -> Result<ScaleRow, String> {
+    let n = g.n();
+    let lw = uniform_local_weights(g);
+    let mut rng = Rng::new(seed);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let target = vecops::mean_of(&x0);
+    let err_of = |xs: &[Vec<f64>]| {
+        xs.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / n as f64
+    };
+    let mk = || {
+        make_nodes(&Scheme::Choco { gamma: 0.4, op: Box::new(QsgdS { s: 32 }) }, &x0, &lw)
+    };
+    let initial_err = err_of(&x0);
+
+    let mut serial = RoundEngine::new(mk(), g, seed, LinkModel::default());
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        serial.step();
+    }
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    let mut sharded = ShardedEngine::new(mk(), g, seed, LinkModel::default());
+    let workers = sharded.worker_count();
+    let t1 = std::time::Instant::now();
+    sharded.run_rounds(rounds);
+    let sharded_secs = t1.elapsed().as_secs_f64();
+
+    // Differential check: a speedup number for a different trajectory
+    // would be meaningless.
+    for (i, (a, b)) in sharded.iterates().iter().zip(serial.iterates().iter()).enumerate() {
+        if vecops::max_abs_diff(a, b) != 0.0 {
+            return Err(format!(
+                "{} n={n}: sharded trajectory diverged from serial at node {i}",
+                g.name()
+            ));
+        }
+    }
+    if sharded.acct.bits != serial.acct.bits {
+        return Err(format!(
+            "{} n={n}: bit accounting differs (sharded {} vs serial {})",
+            g.name(),
+            sharded.acct.bits,
+            serial.acct.bits
+        ));
+    }
+
+    Ok(ScaleRow {
+        topology: g.name().to_string(),
+        n,
+        rounds,
+        initial_err,
+        final_err: err_of(&sharded.iterates()),
+        bits: sharded.acct.bits,
+        serial_rps: rounds as f64 / serial_secs.max(1e-12),
+        sharded_rps: rounds as f64 / sharded_secs.max(1e-12),
+        speedup: serial_secs / sharded_secs.max(1e-12),
+        workers,
+    })
+}
+
+/// Scenario graphs at CI scale (n ≤ 4096) or paper scale (adds 16384).
+fn scenario_graphs(full: bool, seed: u64) -> Vec<Graph> {
+    let mut rng = Rng::new(seed ^ 0x5CA1E);
+    // ER above the connectivity threshold ln(n)/n ≈ 0.002: expected
+    // degree ≈ 16, resampled until connected.
+    let mut gs = vec![
+        Graph::torus_square(1024),
+        Graph::torus_square(4096),
+        Graph::hypercube(12),
+        Graph::erdos_renyi(4096, 0.004, &mut rng),
+    ];
+    if full {
+        gs.push(Graph::hypercube(14));
+        gs.push(Graph::torus_square(16384));
+    }
+    gs
+}
+
+/// The `repro scale` driver: emit the n-scaling table and CSV.
+pub fn large_scale(opts: &ExpOptions) -> Result<Vec<ScaleRow>, String> {
+    let rounds = opts.iters(30, 200);
+    let d = 32;
+    opts.say(&format!(
+        "large-scale CHOCO-GOSSIP (qsgd_32, d={d}): sharded vs serial, {rounds} rounds each"
+    ));
+    opts.say(&format!(
+        "  {:<14} {:>6} {:>8} {:>12} {:>12} {:>10} {:>8}",
+        "topology", "n", "workers", "serial r/s", "sharded r/s", "speedup", "err"
+    ));
+    let mut rows = Vec::new();
+    let mut traces = Vec::new();
+    for g in scenario_graphs(opts.full, opts.seed) {
+        let row = run_scenario(&g, d, rounds, opts.seed)?;
+        opts.say(&format!(
+            "  {:<14} {:>6} {:>8} {:>12.1} {:>12.1} {:>9.2}× {:>8.2e}",
+            row.topology, row.n, row.workers, row.serial_rps, row.sharded_rps, row.speedup,
+            row.final_err
+        ));
+        let mut tr = Trace::new(
+            &row.topology,
+            &["n", "rounds", "final_err", "bits", "serial_rps", "sharded_rps", "speedup"],
+        );
+        tr.push(vec![
+            row.n as f64,
+            row.rounds as f64,
+            row.final_err,
+            row.bits as f64,
+            row.serial_rps,
+            row.sharded_rps,
+            row.speedup,
+        ]);
+        traces.push(tr);
+        rows.push(row);
+    }
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    write_traces(opts, "large_scale", &traces)?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_runner_verifies_and_converges_small() {
+        // Same code path as the large-n driver, CI-sized: the built-in
+        // differential check must pass and the consensus error must fall.
+        let g = Graph::torus_square(256);
+        let row = run_scenario(&g, 16, 150, 7).unwrap();
+        assert_eq!(row.n, 256);
+        assert!(row.final_err.is_finite());
+        assert!(
+            row.final_err < row.initial_err * 0.9,
+            "no progress: {} → {}",
+            row.initial_err,
+            row.final_err
+        );
+        assert!(row.serial_rps > 0.0 && row.sharded_rps > 0.0);
+        assert!(row.bits > 0);
+        assert!(row.workers >= 1);
+    }
+
+    #[test]
+    fn er_scenario_is_connected_and_deduped() {
+        let gs = scenario_graphs(false, 42);
+        let er = gs.iter().find(|g| g.name().starts_with("er")).unwrap();
+        assert!(er.is_connected());
+        assert_eq!(er.n(), 4096);
+    }
+}

@@ -8,6 +8,7 @@
 pub mod consensus_exps;
 pub mod sgd_exps;
 pub mod e2e;
+pub mod large_scale;
 pub mod speedup;
 pub mod tables;
 

@@ -1,7 +1,7 @@
 //! `choco` — CLI launcher for the CHOCO-SGD reproduction.
 //!
 //! ```text
-//! choco repro <fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1..table4|speedup|all>
+//! choco repro <fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|table1..table4|speedup|scale|all>
 //!       [--out results] [--full] [--scale 1.0] [--seed 42] [--quiet]
 //! choco spectrum  --topology ring --nodes 25
 //! choco consensus --topology ring --nodes 25 --dim 2000 --compressor qsgd:256
@@ -16,7 +16,7 @@ use choco::compress::parse_compressor;
 use choco::consensus::{make_nodes, Scheme};
 use choco::coordinator::Trace;
 use choco::data::PartitionKind;
-use choco::experiments::{self, consensus_exps, sgd_exps, speedup, tables, ExpOptions};
+use choco::experiments::{self, consensus_exps, large_scale, sgd_exps, speedup, tables, ExpOptions};
 use choco::optim::{OptimScheme, Schedule};
 use choco::topology::{choco_gamma_star, mixing_matrix, Graph, MixingRule, Spectrum};
 use choco::util::args::Args;
@@ -49,7 +49,8 @@ fn main() {
 }
 
 const USAGE: &str = "usage: choco <repro|spectrum|consensus|train|e2e|artifacts> [flags]
-  repro <id|all>   reproduce a paper figure/table (fig2..fig9, table1..table4, speedup)
+  repro <id|all>   reproduce a paper figure/table (fig2..fig9, table1..table4, speedup),
+                   or 'scale' — sharded vs serial CHOCO-GOSSIP at n=1024..16384
   spectrum         print δ, β for a topology
   consensus        run one consensus experiment
   train            run one decentralized training experiment
@@ -96,13 +97,14 @@ fn cmd_repro(args: &Args) -> Result<(), String> {
             "table3" => consensus_exps::table3(&opts).map(|_| ()),
             "table4" => sgd_exps::table4(&opts, "epsilon").map(|_| ()),
             "speedup" => speedup::speedup(&opts).map(|_| ()),
+            "scale" => large_scale::large_scale(&opts).map(|_| ()),
             other => Err(format!("unknown experiment id '{other}'")),
         }
     };
     if id == "all" {
         for id in [
             "table1", "table2", "fig2", "fig3", "table3", "fig4", "fig5", "fig6", "fig7",
-            "fig8", "fig9", "table4", "speedup",
+            "fig8", "fig9", "table4", "speedup", "scale",
         ] {
             run_one(id)?;
         }

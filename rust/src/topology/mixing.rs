@@ -92,6 +92,26 @@ pub struct LocalWeights {
     pub neighbors: Vec<(usize, f64)>,
 }
 
+/// Uniform-rule local weights built directly from the graph in O(|E|)
+/// memory — no n×n matrix. Bit-identical to
+/// `local_weights(g, &mixing_matrix(g, MixingRule::Uniform))` (property
+/// tested), which materializes a dense W and stops being feasible around
+/// n ≈ 10⁴; the large-n scenario drivers and benches use this path.
+pub fn uniform_local_weights(graph: &Graph) -> Vec<LocalWeights> {
+    let wij = 1.0 / (graph.max_degree() as f64 + 1.0);
+    (0..graph.n())
+        .map(|i| {
+            let neighbors: Vec<(usize, f64)> =
+                graph.neighbors(i).iter().map(|&j| (j, wij)).collect();
+            // Mirror the dense construction exactly: w_ii = 1 − Σ_j w_ij
+            // with the same (ascending-neighbor) summation order, so the
+            // two paths agree bit-for-bit, zeros contributing nothing.
+            let row_sum: f64 = neighbors.iter().map(|&(_, w)| w).sum();
+            LocalWeights { self_weight: 1.0 - row_sum, neighbors }
+        })
+        .collect()
+}
+
 /// Extract per-node local weights from W restricted to graph edges.
 pub fn local_weights(graph: &Graph, w: &DenseMatrix) -> Vec<LocalWeights> {
     let n = graph.n();
@@ -107,6 +127,23 @@ pub fn local_weights(graph: &Graph, w: &DenseMatrix) -> Vec<LocalWeights> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn uniform_local_weights_match_dense_path_bitwise() {
+        for g in [Graph::ring(9), Graph::torus2d(3, 4), Graph::star(7), Graph::hypercube(3)] {
+            let dense = local_weights(&g, &mixing_matrix(&g, MixingRule::Uniform));
+            let sparse = uniform_local_weights(&g);
+            assert_eq!(dense.len(), sparse.len());
+            for (a, b) in dense.iter().zip(sparse.iter()) {
+                assert_eq!(a.self_weight.to_bits(), b.self_weight.to_bits(), "{}", g.name());
+                assert_eq!(a.neighbors.len(), b.neighbors.len());
+                for (&(ja, wa), &(jb, wb)) in a.neighbors.iter().zip(b.neighbors.iter()) {
+                    assert_eq!(ja, jb);
+                    assert_eq!(wa.to_bits(), wb.to_bits(), "{}", g.name());
+                }
+            }
+        }
+    }
 
     #[test]
     fn uniform_ring_matches_paper() {

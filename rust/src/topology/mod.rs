@@ -5,5 +5,5 @@ pub mod mixing;
 pub mod spectrum;
 
 pub use graph::Graph;
-pub use mixing::{local_weights, mixing_matrix, LocalWeights, MixingRule};
+pub use mixing::{local_weights, mixing_matrix, uniform_local_weights, LocalWeights, MixingRule};
 pub use spectrum::{choco_gamma_star, choco_p, choco_rate_bound, Spectrum};

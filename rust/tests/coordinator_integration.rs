@@ -41,8 +41,9 @@ fn runtimes_agree_consensus_and_sgd() {
     let actors = run_actors(
         make_nodes(&scheme, &x0, &lw),
         &g,
-        &ActorConfig { rounds, snapshot_every: 0, seed: 17, serialize: false },
-    );
+        &ActorConfig { rounds, seed: 17, serialize: false, ..Default::default() },
+    )
+    .unwrap();
     for (a, b) in engine.iterates().iter().zip(actors.iterates.iter()) {
         assert_eq!(vecops::max_abs_diff(a, b), 0.0, "consensus trajectories differ");
     }
@@ -77,8 +78,9 @@ fn runtimes_agree_consensus_and_sgd() {
     let actors = run_actors(
         make_optim_nodes(&opt_scheme, mk_sources(), &x0, &lw),
         &g,
-        &ActorConfig { rounds, snapshot_every: 0, seed: 23, serialize: false },
-    );
+        &ActorConfig { rounds, seed: 23, serialize: false, ..Default::default() },
+    )
+    .unwrap();
     for (a, b) in engine.iterates().iter().zip(actors.iterates.iter()) {
         assert_eq!(vecops::max_abs_diff(a, b), 0.0, "SGD trajectories differ");
     }
@@ -209,13 +211,15 @@ fn serialization_end_to_end_sgd() {
     let a = run_actors(
         make_optim_nodes(&scheme(), mk_sources(), &x0, &lw),
         &g,
-        &ActorConfig { rounds: 60, snapshot_every: 0, seed: 2, serialize: true },
-    );
+        &ActorConfig { rounds: 60, seed: 2, serialize: true, ..Default::default() },
+    )
+    .unwrap();
     let b = run_actors(
         make_optim_nodes(&scheme(), mk_sources(), &x0, &lw),
         &g,
-        &ActorConfig { rounds: 60, snapshot_every: 0, seed: 2, serialize: false },
-    );
+        &ActorConfig { rounds: 60, seed: 2, serialize: false, ..Default::default() },
+    )
+    .unwrap();
     for (xa, xb) in a.iterates.iter().zip(b.iterates.iter()) {
         assert!(vecops::max_abs_diff(xa, xb) < 1e-3);
     }

@@ -1,0 +1,261 @@
+//! Differential trajectory harness: the three runtimes (serial
+//! `RoundEngine`, worker-pool `ShardedEngine`, threaded actor runtime)
+//! must be bit-for-bit interchangeable.
+//!
+//! For CHOCO-GOSSIP and CHOCO-SGD, on ring and torus topologies, with
+//! shard counts {1, 2, 7, n}: identical iterates (exact `==`, no
+//! tolerance), identical `Accounting.bits`/`messages`/`encoded_bits`,
+//! identical simulated time — and the same with link loss enabled,
+//! because drop decisions key on (round, edge), not arrival order.
+
+use choco::compress::{QsgdS, TopK};
+use choco::consensus::{make_nodes, GossipNode, Scheme};
+use choco::coordinator::{run_actors, ActorConfig, LinkModel, RoundEngine, ShardedEngine};
+use choco::linalg::vecops;
+use choco::optim::{make_optim_nodes, GradientSource, NativeGrad, OptimScheme, Schedule};
+use choco::topology::{local_weights, mixing_matrix, Graph, LocalWeights, MixingRule};
+use choco::util::rng::Rng;
+
+fn x0s(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect()
+}
+
+fn weights_for(g: &Graph) -> Vec<LocalWeights> {
+    let w = mixing_matrix(g, MixingRule::Uniform);
+    local_weights(g, &w)
+}
+
+fn assert_bit_identical(a: &[Vec<f64>], b: &[Vec<f64>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: node count");
+    for (i, (xa, xb)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            vecops::max_abs_diff(xa, xb),
+            0.0,
+            "{what}: node {i} iterate differs"
+        );
+    }
+}
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 7, usize::MAX]; // MAX → clamped to n
+
+/// Run the full differential matrix for one node-builder over one graph:
+/// serial engine as oracle, sharded at each shard count, actor runtime in
+/// value mode. All with `measure_wire` on where the engine supports it.
+fn differential<F>(g: &Graph, seed: u64, rounds: usize, link: LinkModel, mk: F, what: &str)
+where
+    F: Fn() -> Vec<Box<dyn GossipNode>>,
+{
+    let n = g.n();
+    let mut serial = RoundEngine::new(mk(), g, seed, link.clone());
+    serial.measure_wire = true;
+    for _ in 0..rounds {
+        serial.step();
+    }
+    let oracle = serial.iterates();
+
+    for &shards in &SHARD_COUNTS {
+        let shards = shards.min(n);
+        let mut engine = ShardedEngine::with_shards(mk(), g, seed, link.clone(), shards);
+        engine.measure_wire = true;
+        engine.run_rounds(rounds);
+        assert_bit_identical(&engine.iterates(), &oracle, &format!("{what} shards={shards}"));
+        assert_eq!(engine.acct.bits, serial.acct.bits, "{what} shards={shards}: bits");
+        assert_eq!(engine.acct.messages, serial.acct.messages, "{what} shards={shards}: messages");
+        assert_eq!(
+            engine.acct.encoded_bits, serial.acct.encoded_bits,
+            "{what} shards={shards}: encoded_bits"
+        );
+        assert_eq!(engine.acct.rounds, serial.acct.rounds, "{what} shards={shards}: rounds");
+        assert_eq!(
+            engine.acct.sim_time_s, serial.acct.sim_time_s,
+            "{what} shards={shards}: sim time"
+        );
+    }
+
+    // Actor runtime: value mode, only meaningful without link loss (the
+    // channel wiring has no drop model).
+    if link.drop_prob == 0.0 && n <= 64 {
+        let actor = run_actors(
+            mk(),
+            g,
+            &ActorConfig { rounds, seed, serialize: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_bit_identical(&actor.iterates, &oracle, &format!("{what} actor"));
+        assert_eq!(actor.idealized_bits, serial.acct.bits, "{what}: actor claimed bits");
+        assert_eq!(actor.bits, serial.acct.bits, "{what}: actor value-mode bits");
+    }
+}
+
+#[test]
+fn choco_gossip_bit_identical_on_ring_and_torus() {
+    for (g, seed) in [(Graph::ring(12), 101u64), (Graph::torus2d(3, 4), 202u64)] {
+        let lw = weights_for(&g);
+        let x0 = x0s(g.n(), 10, seed);
+        // top_k: value-dependent sparse frames — the harshest encoded-bits case
+        let lw2 = lw.clone();
+        let x02 = x0.clone();
+        differential(
+            &g,
+            seed,
+            40,
+            LinkModel::default(),
+            move || {
+                make_nodes(&Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 3 }) }, &x02, &lw2)
+            },
+            &format!("choco_topk on {}", g.name()),
+        );
+        // qsgd: randomized quantization exercises per-node RNG streams
+        differential(
+            &g,
+            seed + 1,
+            40,
+            LinkModel::default(),
+            move || {
+                make_nodes(&Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw)
+            },
+            &format!("choco_qsgd on {}", g.name()),
+        );
+    }
+}
+
+#[test]
+fn choco_sgd_bit_identical_on_ring_and_torus() {
+    for (g, seed) in [(Graph::ring(10), 7u64), (Graph::torus2d(3, 3), 8u64)] {
+        let n = g.n();
+        let d = 12;
+        let lw = weights_for(&g);
+        let x0 = x0s(n, d, seed);
+        let mk = move || {
+            let sources: Vec<Box<dyn GradientSource>> = (0..n)
+                .map(|i| {
+                    Box::new(NativeGrad {
+                        objective: Box::new(choco::models::QuadraticConsensus::new(
+                            vec![i as f64; d],
+                            0.5, // stochastic gradients: exercises the RNG streams
+                        )),
+                    }) as Box<dyn GradientSource>
+                })
+                .collect();
+            let scheme = OptimScheme::ChocoSgd {
+                schedule: Schedule::Const(0.05),
+                gamma: 0.3,
+                op: Box::new(TopK { k: 3 }),
+            };
+            make_optim_nodes(&scheme, sources, &x0, &lw)
+        };
+        differential(
+            &g,
+            seed,
+            40,
+            LinkModel::default(),
+            mk,
+            &format!("choco_sgd on {}", g.name()),
+        );
+    }
+}
+
+/// Satellite: same seed ⇒ same trajectory regardless of worker count and
+/// shard assignment, *including with link loss enabled* — the loss
+/// pattern is a function of (round, edge), so every partition of the
+/// vertex set observes the same drops.
+#[test]
+fn determinism_with_link_loss_across_shard_counts() {
+    let g = Graph::ring(13);
+    let lw = weights_for(&g);
+    let x0 = x0s(13, 8, 31);
+    let lossy = LinkModel { drop_prob: 0.25, ..Default::default() };
+    let mk = || make_nodes(&Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 2 }) }, &x0, &lw);
+    differential(&g, 55, 60, lossy.clone(), &mk, "choco_topk lossy ring");
+
+    // and the loss pattern actually bites: a lossless run differs
+    let mut clean = RoundEngine::new(mk(), &g, 55, LinkModel::default());
+    let mut dropped = RoundEngine::new(mk(), &g, 55, lossy);
+    for _ in 0..60 {
+        clean.step();
+        dropped.step();
+    }
+    let differs = clean
+        .iterates()
+        .iter()
+        .zip(dropped.iterates().iter())
+        .any(|(a, b)| vecops::max_abs_diff(a, b) > 0.0);
+    assert!(differs, "25% loss produced an identical trajectory — drops not applied?");
+}
+
+/// Repeated sharded runs are reproducible, and the seed actually matters.
+#[test]
+fn sharded_runs_reproducible_seed_sensitive() {
+    let g = Graph::torus2d(4, 4);
+    let lw = weights_for(&g);
+    let x0 = x0s(16, 6, 77);
+    let lossy = LinkModel { drop_prob: 0.1, ..Default::default() };
+    let run = |seed: u64, shards: usize| {
+        let nodes =
+            make_nodes(&Scheme::Choco { gamma: 0.25, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw);
+        let mut e = ShardedEngine::with_shards(nodes, &g, seed, lossy.clone(), shards);
+        e.run_rounds(30);
+        (e.iterates(), e.acct.bits)
+    };
+    let (x_a, bits_a) = run(9, 4);
+    let (x_b, bits_b) = run(9, 16);
+    let (x_c, _) = run(10, 4);
+    assert_bit_identical(&x_a, &x_b, "same seed, different shard count");
+    assert_eq!(bits_a, bits_b);
+    let differs = x_a
+        .iter()
+        .zip(x_c.iter())
+        .any(|(a, b)| vecops::max_abs_diff(a, b) > 0.0);
+    assert!(differs, "different seeds produced identical trajectories");
+}
+
+/// Large-n release-mode smoke (run by the CI `large-n-smoke` job via
+/// `cargo test --release -- --ignored`): one sharded CHOCO-GOSSIP run at
+/// n = 4096 with a short serial differential prefix, bounded wall time.
+#[test]
+#[ignore = "large-n smoke: run in release mode (CI job), ~seconds, too slow for debug tier-1"]
+fn large_n_smoke_sharded_choco_gossip_n4096() {
+    let n = 4096;
+    let g = Graph::torus_square(n);
+    // O(|E|) weights: the dense mixing-matrix path would build an n×n W
+    let lw = choco::topology::uniform_local_weights(&g);
+    let d = 16;
+    let x0 = x0s(n, d, 4096);
+    let target = vecops::mean_of(&x0);
+    let mk = || {
+        make_nodes(&Scheme::Choco { gamma: 0.5, op: Box::new(QsgdS { s: 64 }) }, &x0, &lw)
+    };
+    let err_of = |xs: &[Vec<f64>]| {
+        xs.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / n as f64
+    };
+
+    // short differential prefix: sharded == serial even at n=4096
+    let mut serial = RoundEngine::new(mk(), &g, 1, LinkModel::default());
+    for _ in 0..3 {
+        serial.step();
+    }
+    let mut sharded = ShardedEngine::new(mk(), &g, 1, LinkModel::default());
+    sharded.run_rounds(3);
+    assert_bit_identical(&sharded.iterates(), &serial.iterates(), "n=4096 prefix");
+    assert_eq!(sharded.acct.bits, serial.acct.bits);
+
+    // the actual smoke: 300 more rounds on the worker pool
+    let e0 = err_of(&sharded.iterates());
+    sharded.run_rounds(300);
+    let e1 = err_of(&sharded.iterates());
+    assert!(e1.is_finite());
+    assert!(e1 < e0 * 0.99, "no progress at n=4096: {e0} → {e1}");
+    assert_eq!(sharded.acct.rounds, 303);
+    assert!(sharded.acct.bits > 0);
+
+    // and the actor runtime refuses this scale with a clear error
+    let err = run_actors(mk(), &g, &ActorConfig { rounds: 1, ..Default::default() }).unwrap_err();
+    assert!(err.contains("4096"), "guard error should name the node count: {err}");
+}

@@ -25,8 +25,8 @@ fn measured_vs_idealized(scheme: Scheme, d: usize, rounds: usize) -> (u64, u64) 
             v
         })
         .collect();
-    let cfg = ActorConfig { rounds, snapshot_every: 0, seed: 5, serialize: true };
-    let r = run_actors(make_nodes(&scheme, &x0, &lw), &g, &cfg);
+    let cfg = ActorConfig { rounds, seed: 5, serialize: true, ..Default::default() };
+    let r = run_actors(make_nodes(&scheme, &x0, &lw), &g, &cfg).unwrap();
     assert!(r.bits > 0 && r.idealized_bits > 0);
     (r.bits, r.idealized_bits)
 }
@@ -100,8 +100,8 @@ fn serialized_qsgd_trajectories_match_value_mode_bit_exactly() {
         .collect();
     let run = |serialize: bool| {
         let scheme = Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) };
-        let cfg = ActorConfig { rounds: 25, snapshot_every: 0, seed: 9, serialize };
-        run_actors(make_nodes(&scheme, &x0, &lw), &g, &cfg)
+        let cfg = ActorConfig { rounds: 25, seed: 9, serialize, ..Default::default() };
+        run_actors(make_nodes(&scheme, &x0, &lw), &g, &cfg).unwrap()
     };
     let a = run(true);
     let b = run(false);
