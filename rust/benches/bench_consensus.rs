@@ -5,13 +5,12 @@
 use choco::benchlib::{black_box, Harness};
 use choco::compress::{QsgdS, RandK, Rescaled, TopK};
 use choco::consensus::{make_nodes, Scheme, SyncRunner};
-use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use choco::topology::{uniform_local_weights, Graph};
 use choco::util::rng::Rng;
 
 fn bench_scheme(h: &mut Harness, name: &str, scheme: Scheme, n: usize, d: usize) {
     let g = Graph::ring(n);
-    let w = mixing_matrix(&g, MixingRule::Uniform);
-    let lw = local_weights(&g, &w);
+    let lw = uniform_local_weights(&g);
     let mut rng = Rng::new(5);
     let x0: Vec<Vec<f64>> = (0..n)
         .map(|_| {

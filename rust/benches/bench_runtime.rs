@@ -2,8 +2,11 @@
 //!
 //! 1. **n-scaling sweep** — CHOCO-GOSSIP rounds/sec at n = 1024…16384,
 //!    serial `RoundEngine` vs the sharded worker-pool engine, reporting
-//!    the multi-core speedup per topology (the large-n regime the paper's
-//!    O(1/(nT)) rate targets). Runs everywhere, no artifacts needed.
+//!    the multi-core speedup and the power-iteration spectral gap δ per
+//!    topology (the large-n regime the paper's O(1/(nT)) rate targets).
+//!    Runs everywhere, no artifacts needed, and emits the rows as
+//!    `BENCH_scale.json` (uploaded as a CI artifact by the large-n-smoke
+//!    job, so the bench trajectory accumulates run over run).
 //! 2. **PJRT artifact latency** — gradient round trips vs the native
 //!    implementations. Skipped when artifacts aren't built.
 //!
@@ -13,9 +16,11 @@ use choco::benchlib::{black_box, Harness};
 use choco::compress::QsgdS;
 use choco::consensus::{make_nodes, GossipNode, Scheme};
 use choco::coordinator::{LinkModel, RoundEngine, ShardedEngine};
+use choco::linalg::PowerOpts;
 use choco::models::Objective;
 use choco::runtime::{Manifest, PjrtEngine, Tensor};
-use choco::topology::{uniform_local_weights, Graph};
+use choco::topology::{uniform_local_weights, Graph, SparseMixing, Spectrum};
+use choco::util::json::Json;
 use choco::util::rng::Rng;
 
 fn gossip_nodes(g: &Graph, d: usize, seed: u64) -> Vec<Box<dyn GossipNode>> {
@@ -55,18 +60,28 @@ fn time_sharded(g: &Graph, d: usize, rounds: usize, warmup: usize, shards: usize
     rounds as f64 / t0.elapsed().as_secs_f64().max(1e-12)
 }
 
+/// Bounded-budget δ estimate: rings at n ~ 10⁴ have near-degenerate λ₂,
+/// so this trades certified accuracy for bench-scale wall time.
+fn delta_estimate(g: &Graph, max_iters: usize) -> f64 {
+    let opts = PowerOpts { max_iters, ..PowerOpts::default() };
+    Spectrum::estimate_with(&SparseMixing::uniform(g), 1, &opts)
+        .map(|s| s.delta)
+        .unwrap_or(f64::NAN)
+}
+
 fn gossip_scaling_sweep() {
     let fast = std::env::var("CHOCO_BENCH_FAST").is_ok();
     let d = 64;
     let rounds = if fast { 5 } else { 30 };
     let warmup = if fast { 1 } else { 3 };
+    let delta_iters = if fast { 2_000 } else { 20_000 };
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     println!(
         "== n-scaling: CHOCO-GOSSIP (qsgd_16, d={d}), {rounds} timed rounds, {cores} cores =="
     );
     println!(
-        "{:<16} {:>7} {:>14} {:>15} {:>9}",
-        "topology", "n", "serial r/s", "sharded r/s", "speedup"
+        "{:<16} {:>7} {:>11} {:>14} {:>15} {:>9}",
+        "topology", "n", "delta", "serial r/s", "sharded r/s", "speedup"
     );
     let graphs: Vec<Graph> = vec![
         Graph::ring(1024),
@@ -78,24 +93,57 @@ fn gossip_scaling_sweep() {
         Graph::torus_square(16384),
         Graph::hypercube(13), // 8192 nodes, log-degree: heavier in-edges
     ];
+    let mut rows: Vec<Json> = Vec::new();
     for g in &graphs {
+        let delta = delta_estimate(g, delta_iters);
         let serial = time_serial(g, d, rounds, warmup);
         let sharded = time_sharded(g, d, rounds, warmup, cores);
         println!(
-            "{:<16} {:>7} {:>14.1} {:>15.1} {:>8.2}×",
+            "{:<16} {:>7} {:>11.3e} {:>14.1} {:>15.1} {:>8.2}×",
             g.name(),
             g.n(),
+            delta,
             serial,
             sharded,
             sharded / serial
         );
+        rows.push(Json::obj(vec![
+            ("topology", Json::Str(g.name().to_string())),
+            ("n", Json::Num(g.n() as f64)),
+            ("delta_est", Json::Num(delta)),
+            ("serial_rps", Json::Num(serial)),
+            ("sharded_rps", Json::Num(sharded)),
+            ("speedup", Json::Num(sharded / serial)),
+        ]));
     }
     // shard-count sensitivity at one fixed size
     let g = Graph::torus_square(4096);
     println!("-- shard sensitivity, {} --", g.name());
+    let mut sensitivity: Vec<Json> = Vec::new();
     for shards in [1usize, 2, 4, 8] {
         let rps = time_sharded(&g, d, rounds, warmup, shards);
         println!("  shards={shards:<3} {rps:>10.1} rounds/s");
+        sensitivity.push(Json::obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("rounds_per_sec", Json::Num(rps)),
+        ]));
+    }
+    // Machine-readable trajectory: one file per run, uploaded as a CI
+    // artifact so sweeps are comparable across commits.
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_runtime_scale".into())),
+        ("d", Json::Num(d as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("cores", Json::Num(cores as f64)),
+        ("fast_mode", Json::Bool(fast)),
+        ("delta_power_iters", Json::Num(delta_iters as f64)),
+        ("rows", Json::Arr(rows)),
+        ("shard_sensitivity", Json::Arr(sensitivity)),
+    ]);
+    let out = "BENCH_scale.json";
+    match std::fs::write(out, doc.to_pretty()) {
+        Ok(()) => println!("wrote {out} ({} scaling rows)", graphs.len()),
+        Err(e) => eprintln!("bench_runtime: could not write {out}: {e}"),
     }
 }
 

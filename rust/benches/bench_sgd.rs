@@ -7,7 +7,7 @@ use choco::consensus::SyncRunner;
 use choco::data::{epsilon_like, partition, DenseSynthConfig, PartitionKind};
 use choco::models::LogisticRegression;
 use choco::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
-use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use choco::topology::{uniform_local_weights, Graph};
 
 fn runner_for(scheme: OptimScheme, n: usize, d: usize) -> (SyncRunner<'static>, usize) {
     let ds = epsilon_like(&DenseSynthConfig { n_samples: 512, dim: d, ..Default::default() });
@@ -22,8 +22,7 @@ fn runner_for(scheme: OptimScheme, n: usize, d: usize) -> (SyncRunner<'static>, 
         })
         .collect();
     let g = Box::leak(Box::new(Graph::ring(n)));
-    let w = mixing_matrix(g, MixingRule::Uniform);
-    let lw = local_weights(g, &w);
+    let lw = uniform_local_weights(g);
     let nodes = make_optim_nodes(&scheme, sources, &vec![vec![0.0; d]; n], &lw);
     (SyncRunner::new(nodes, g, 7), n * d)
 }

@@ -1,8 +1,11 @@
-//! Spectral machinery benchmarks: mixing-matrix construction + Jacobi
-//! eigensolve across sizes (backs Table 1 generation cost).
+//! Spectral machinery benchmarks: dense mixing-matrix construction +
+//! Jacobi eigensolve (the n ≤ 512 reference path, backs Table 1) against
+//! the sparse CSR build + power-iteration estimate (the default path,
+//! feasible at n = 16384 where dense W would need 2 GiB).
 
 use choco::benchlib::{black_box, Harness};
-use choco::topology::{mixing_matrix, Graph, MixingRule, Spectrum};
+use choco::linalg::PowerOpts;
+use choco::topology::{mixing_matrix, Graph, MixingRule, SparseMixing, Spectrum};
 
 fn main() {
     let mut h = Harness::new("bench_topology");
@@ -13,13 +16,27 @@ fn main() {
         });
         let w = mixing_matrix(&g, MixingRule::Uniform);
         h.bench(&format!("spectrum (Jacobi) ring n={n}"), || {
-            black_box(Spectrum::of(&w));
+            black_box(Spectrum::of(&w).unwrap());
+        });
+        let sw = SparseMixing::uniform(&g);
+        h.bench(&format!("spectrum (power iter) ring n={n}"), || {
+            black_box(Spectrum::estimate(&sw, 1).unwrap());
         });
     }
     let g = Graph::torus_square(64);
     let w = mixing_matrix(&g, MixingRule::Uniform);
     h.bench("spectrum torus n=64", || {
-        black_box(Spectrum::of(&w));
+        black_box(Spectrum::of(&w).unwrap());
     });
+    // Sparse-only sizes: the dense path stops here, the default keeps
+    // going (bounded budget — the bench measures cost, not certified
+    // accuracy).
+    let opts = PowerOpts { max_iters: 2_000, ..PowerOpts::default() };
+    for g in [Graph::torus_square(4096), Graph::hypercube(12)] {
+        let sw = SparseMixing::uniform(&g);
+        h.bench(&format!("spectrum (power iter) {} n={}", g.name(), g.n()), || {
+            black_box(Spectrum::estimate_with(&sw, 1, &opts).unwrap());
+        });
+    }
     h.report();
 }

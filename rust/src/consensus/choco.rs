@@ -160,7 +160,7 @@ mod tests {
     fn thm2_rate_bound_holds() {
         let g = Graph::ring(8);
         let w = mixing_matrix(&g, MixingRule::Uniform);
-        let spec = Spectrum::of(&w);
+        let spec = Spectrum::of(&w).unwrap();
         let d = 12;
         for (op, omega) in [
             (
@@ -174,7 +174,7 @@ mod tests {
             ),
         ] {
             let name = op.name();
-            let gamma = choco_gamma_star(spec.delta, spec.beta, omega);
+            let gamma = choco_gamma_star(spec.delta, spec.beta, omega).unwrap();
             let x0 = random_x0(8, d, 21);
             let errs = run_choco(&g, &x0, gamma, op, 3000, 77);
             let measured = stats::contraction_factor(&errs);
@@ -199,13 +199,13 @@ mod tests {
         // (xᵢ, x̂ᵢ) → (x̄, x̄): the public estimates converge too.
         let g = Graph::ring(5);
         let w = mixing_matrix(&g, MixingRule::Uniform);
-        let spec = Spectrum::of(&w);
+        let spec = Spectrum::of(&w).unwrap();
         let lw = local_weights(&g, &w);
         let d = 6;
         let x0 = random_x0(5, d, 9);
         let target = vecops::mean_of(&x0);
         let op = RandK { k: 2 };
-        let gamma = choco_gamma_star(spec.delta, spec.beta, 2.0 / 6.0);
+        let gamma = choco_gamma_star(spec.delta, spec.beta, 2.0 / 6.0).unwrap();
         let mut nodes: Vec<ChocoNode> = (0..5)
             .map(|i| ChocoNode::new(x0[i].clone(), lw[i].clone(), gamma, &op))
             .collect();

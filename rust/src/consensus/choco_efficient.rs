@@ -113,7 +113,7 @@ mod tests {
         // different degree — use a star (hub degree n−1, leaves degree 1).
         let g = Graph::star(7);
         let w = mixing_matrix(&g, MixingRule::Uniform);
-        let spec = Spectrum::of(&w);
+        let spec = Spectrum::of(&w).unwrap();
         let lw = local_weights(&g, &w);
         let d = 10;
         let mut rng = Rng::new(4);
@@ -127,7 +127,7 @@ mod tests {
         let target = vecops::mean_of(&x0);
         let op = QsgdS { s: 16 };
         // Practical γ, well above the conservative γ*(δ, β, ω).
-        let gamma = choco_gamma_star(spec.delta, spec.beta, op.omega(d)).max(0.3);
+        let gamma = choco_gamma_star(spec.delta, spec.beta, op.omega(d)).unwrap().max(0.3);
         let nodes = make_nodes(
             &Scheme::ChocoEfficient { gamma, op: Box::new(op) },
             &x0,

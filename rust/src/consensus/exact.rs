@@ -77,7 +77,7 @@ mod tests {
         for gamma in [1.0, 0.5] {
             let g = Graph::ring(10);
             let w = mixing_matrix(&g, MixingRule::Uniform);
-            let spec = Spectrum::of(&w);
+            let spec = Spectrum::of(&w).unwrap();
             let lw = local_weights(&g, &w);
             let mut rng = crate::util::rng::Rng::new(99);
             let x0: Vec<Vec<f64>> = (0..10)

@@ -222,7 +222,7 @@ mod tests {
     fn choco_converges_with_heavy_compression() {
         let (g, lw, x0, target) = setup(8, 20, 2);
         let w = mixing_matrix(&g, MixingRule::Uniform);
-        let spec = crate::topology::Spectrum::of(&w);
+        let spec = crate::topology::Spectrum::of(&w).unwrap();
         let op = TopK { k: 2 };
         let _ = spec;
         // Practically tuned γ (the paper tunes γ per configuration,

@@ -13,7 +13,7 @@ use crate::consensus::{make_nodes, Scheme};
 use crate::coordinator::Trace;
 use crate::data::{epsilon_like, DenseSynthConfig, Features};
 use crate::linalg::vecops;
-use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use crate::topology::{uniform_local_weights, Graph, SparseMixing};
 
 /// Paper configuration: ring n=25, d=2000, x⁽⁰⁾ = first n epsilon vectors.
 pub struct ConsensusSetup {
@@ -25,8 +25,7 @@ pub struct ConsensusSetup {
 
 pub fn setup(n: usize, d: usize, seed: u64) -> ConsensusSetup {
     let graph = Graph::ring(n);
-    let w = mixing_matrix(&graph, MixingRule::Uniform);
-    let weights = local_weights(&graph, &w);
+    let weights = uniform_local_weights(&graph);
     // x_i^(0) := i-th vector of the (synthetic) epsilon dataset (§5.2).
     let ds = epsilon_like(&DenseSynthConfig {
         n_samples: n,
@@ -178,7 +177,10 @@ fn pjrt_choco_curve(
 
     let mut x: Vec<f32> = s.x0.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect();
     let mut xhat = vec![0.0f32; n * d];
-    let wmat = mixing_matrix(&s.graph, MixingRule::Uniform);
+    // The matrix-form choco_round artifact (Appendix B) takes W as a
+    // dense tensor — this is the n = 25 reference path, the only place a
+    // consensus driver still materializes W.
+    let wmat = SparseMixing::uniform(&s.graph).to_dense();
     let wflat: Vec<f32> = wmat.data.iter().map(|&v| v as f32).collect();
     let mut rng = crate::util::rng::Rng::for_stream(seed, 0x504A5254); // "PJRT"
 

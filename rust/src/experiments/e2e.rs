@@ -14,7 +14,7 @@ use crate::compress::TopK;
 use crate::coordinator::{ActorConfig, Trace};
 use crate::optim::{make_optim_nodes, GradientSource, OptimScheme, Schedule};
 use crate::runtime::{synthetic_corpus, Manifest, PjrtEngine, PjrtTransformer};
-use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use crate::topology::{uniform_local_weights, Graph};
 use std::path::Path;
 
 /// Run the e2e experiment; writes `results/e2e_loss.csv` and prints the
@@ -29,8 +29,7 @@ pub fn run_transformer_e2e(
     out_dir: &Path,
 ) -> Result<(), String> {
     let graph = Graph::ring(n);
-    let w = mixing_matrix(&graph, MixingRule::Uniform);
-    let lw = local_weights(&graph, &w);
+    let lw = uniform_local_weights(&graph);
 
     // Build one PJRT source per node; disjoint corpus shards emulate
     // decentralized data ownership.

@@ -1,31 +1,51 @@
-//! Large-n scenario driver: CHOCO-GOSSIP at n = 1024…16384.
+//! Large-n scenario driver: CHOCO-GOSSIP and CHOCO-SGD at n = 1024…16384.
 //!
 //! The paper's O(1/(nT)) headline only pays off as n grows, and related
-//! work (Koloskova et al. 2019b; Toghani & Uribe 2022) runs consensus at
-//! deep-learning scale. This driver makes large-n a first-class scenario:
-//! torus / hypercube / Erdős–Rényi graphs at thousands of vertices, the
-//! sharded worker-pool engine against the serial engine, with a built-in
-//! differential check — every row in the emitted table is backed by a
-//! bit-identical serial/sharded trajectory comparison.
+//! work (Koloskova et al. 2019b; Toghani & Uribe 2022) runs consensus *and
+//! training* at deep-learning scale. This driver makes large-n a
+//! first-class scenario: torus / hypercube / Erdős–Rényi graphs at
+//! thousands of vertices, the sharded worker-pool engine against the
+//! serial engine, with a built-in differential check — every row in the
+//! emitted table is backed by a bit-identical serial/sharded trajectory
+//! comparison.
 //!
-//! Weights come from [`crate::topology::uniform_local_weights`] (O(|E|)),
-//! never a dense mixing matrix. CI-scale runs n ≤ 4096; `--full` adds
-//! n = 16384.
+//! The entire path is O(n + |E|) in the network size: weights come from
+//! [`crate::topology::uniform_local_weights`], δ / β / γ*(δ, ω) from
+//! [`Spectrum::estimate`] (sparse power iteration — so the table reports
+//! the theory column even at n = 16384), and the CHOCO-SGD rows wire
+//! label-sorted partitions of a synthetic dataset through
+//! [`make_optim_nodes`] with a few samples per worker. No dense n×n
+//! matrix anywhere. CI-scale runs n ≤ 4096; `--full` adds n = 16384.
 
 use super::{write_traces, ExpOptions};
-use crate::compress::QsgdS;
-use crate::consensus::{make_nodes, Scheme};
+use crate::compress::{Compressor, QsgdS};
+use crate::consensus::{make_nodes, GossipNode, Scheme};
 use crate::coordinator::{LinkModel, RoundEngine, ShardedEngine, Trace};
-use crate::linalg::vecops;
-use crate::topology::{uniform_local_weights, Graph};
+use crate::data::{epsilon_like, partition, DenseSynthConfig, PartitionKind};
+use crate::linalg::{vecops, PowerOpts};
+use crate::models::{global_loss, LogisticRegression, Objective};
+use crate::optim::{make_optim_nodes, GradientSource, NativeGrad, OptimScheme, Schedule};
+use crate::topology::{choco_gamma_star, uniform_local_weights, Graph, SparseMixing, Spectrum};
 use crate::util::rng::Rng;
 
 /// One row of the n-scaling table.
 #[derive(Debug, Clone)]
 pub struct ScaleRow {
+    /// `choco_gossip` (consensus) or `choco_sgd` (decentralized training).
+    pub algorithm: String,
     pub topology: String,
     pub n: usize,
     pub rounds: usize,
+    /// Power-iteration spectral gap of W: a best-effort estimate, still
+    /// reported when the iteration hit its budget (NaN only if the
+    /// estimator errored on the matrix).
+    pub delta: f64,
+    /// Theorem-2 stepsize γ*(δ, β, ω) for the row's compressor. NaN when
+    /// undefined *or* when the spectral estimate is uncertified
+    /// (budget-truncated) — so a NaN γ* next to a finite δ marks an
+    /// unconverged row in the table and CSV.
+    pub gamma_star: f64,
+    /// Consensus error (gossip rows) or global loss f(x̄) (SGD rows).
     pub initial_err: f64,
     pub final_err: f64,
     pub bits: u64,
@@ -35,28 +55,35 @@ pub struct ScaleRow {
     pub workers: usize,
 }
 
-/// Run one CHOCO-GOSSIP scenario on `g` with both engines, verify they
-/// agree bit-for-bit, and measure rounds/sec for each.
-pub fn run_scenario(g: &Graph, d: usize, rounds: usize, seed: u64) -> Result<ScaleRow, String> {
-    let n = g.n();
-    let lw = uniform_local_weights(g);
-    let mut rng = Rng::new(seed);
-    let x0: Vec<Vec<f64>> = (0..n)
-        .map(|_| {
-            let mut v = vec![0.0; d];
-            rng.fill_gaussian(&mut v);
-            v
-        })
-        .collect();
-    let target = vecops::mean_of(&x0);
-    let err_of = |xs: &[Vec<f64>]| {
-        xs.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / n as f64
-    };
-    let mk = || {
-        make_nodes(&Scheme::Choco { gamma: 0.4, op: Box::new(QsgdS { s: 32 }) }, &x0, &lw)
-    };
-    let initial_err = err_of(&x0);
+/// δ, β and γ* via sparse power iteration with a scale-driver budget,
+/// reusing the weights the scenario already built. γ* is withheld (NaN)
+/// when the iteration hit its budget before converging — an
+/// underestimated |λ₂| would inflate the Theorem-2 stepsize.
+fn spectrum_columns(lw: &[crate::topology::LocalWeights], omega: f64, seed: u64) -> (f64, f64) {
+    let opts = PowerOpts { max_iters: 50_000, ..PowerOpts::default() };
+    match Spectrum::estimate_with(&SparseMixing::from_local_weights(lw), seed, &opts) {
+        Ok(s) => {
+            let gs = if s.converged {
+                choco_gamma_star(s.delta, s.beta, omega).unwrap_or(f64::NAN)
+            } else {
+                f64::NAN
+            };
+            (s.delta, gs)
+        }
+        Err(_) => (f64::NAN, f64::NAN),
+    }
+}
 
+/// Run both engines over fresh node sets from `mk`, verify the sharded
+/// trajectory and accounting are bit-identical to serial, and measure
+/// rounds/sec for each. Returns
+/// `(final iterates, bits, serial_rps, sharded_rps, workers)`.
+fn run_both_engines(
+    g: &Graph,
+    rounds: usize,
+    seed: u64,
+    mk: &dyn Fn() -> Vec<Box<dyn GossipNode>>,
+) -> Result<(Vec<Vec<f64>>, u64, f64, f64, usize), String> {
     let mut serial = RoundEngine::new(mk(), g, seed, LinkModel::default());
     let t0 = std::time::Instant::now();
     for _ in 0..rounds {
@@ -75,35 +102,140 @@ pub fn run_scenario(g: &Graph, d: usize, rounds: usize, seed: u64) -> Result<Sca
     for (i, (a, b)) in sharded.iterates().iter().zip(serial.iterates().iter()).enumerate() {
         if vecops::max_abs_diff(a, b) != 0.0 {
             return Err(format!(
-                "{} n={n}: sharded trajectory diverged from serial at node {i}",
-                g.name()
+                "{} n={}: sharded trajectory diverged from serial at node {i}",
+                g.name(),
+                g.n()
             ));
         }
     }
     if sharded.acct.bits != serial.acct.bits {
         return Err(format!(
-            "{} n={n}: bit accounting differs (sharded {} vs serial {})",
+            "{} n={}: bit accounting differs (sharded {} vs serial {})",
             g.name(),
+            g.n(),
             sharded.acct.bits,
             serial.acct.bits
         ));
     }
+    Ok((
+        sharded.iterates(),
+        sharded.acct.bits,
+        rounds as f64 / serial_secs.max(1e-12),
+        rounds as f64 / sharded_secs.max(1e-12),
+        workers,
+    ))
+}
 
+/// One CHOCO-GOSSIP consensus scenario on `g` with both engines.
+pub fn run_scenario(g: &Graph, d: usize, rounds: usize, seed: u64) -> Result<ScaleRow, String> {
+    let n = g.n();
+    let lw = uniform_local_weights(g);
+    let op = QsgdS { s: 32 };
+    let (delta, gamma_star) = spectrum_columns(&lw, op.omega(d), seed);
+    let mut rng = Rng::new(seed);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let target = vecops::mean_of(&x0);
+    let err_of = |xs: &[Vec<f64>]| {
+        xs.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / n as f64
+    };
+    let mk = || make_nodes(&Scheme::Choco { gamma: 0.4, op: Box::new(op) }, &x0, &lw);
+    let (finals, bits, serial_rps, sharded_rps, workers) =
+        run_both_engines(g, rounds, seed, &mk)?;
     Ok(ScaleRow {
+        algorithm: "choco_gossip".into(),
         topology: g.name().to_string(),
         n,
         rounds,
-        initial_err,
-        final_err: err_of(&sharded.iterates()),
-        bits: sharded.acct.bits,
-        serial_rps: rounds as f64 / serial_secs.max(1e-12),
-        sharded_rps: rounds as f64 / sharded_secs.max(1e-12),
-        speedup: serial_secs / sharded_secs.max(1e-12),
+        delta,
+        gamma_star,
+        initial_err: err_of(&x0),
+        final_err: err_of(&finals),
+        bits,
+        serial_rps,
+        sharded_rps,
+        speedup: sharded_rps / serial_rps.max(1e-12),
         workers,
     })
 }
 
-/// Scenario graphs at CI scale (n ≤ 4096) or paper scale (adds 16384).
+/// One CHOCO-SGD training scenario on `g`: a label-sorted partition of a
+/// synthetic logistic-regression problem (a few samples per worker, so
+/// memory stays O(n + |E|) in the network size), run on both engines
+/// with the same bit-exact differential check as the consensus rows.
+pub fn run_sgd_scenario(g: &Graph, rounds: usize, seed: u64) -> Result<ScaleRow, String> {
+    let n = g.n();
+    let d = 16;
+    let samples_per_worker = 2;
+    let lw = uniform_local_weights(g);
+    let op = QsgdS { s: 16 };
+    let (delta, gamma_star) = spectrum_columns(&lw, op.omega(d), seed);
+
+    let ds = epsilon_like(&DenseSynthConfig {
+        n_samples: samples_per_worker * n,
+        dim: d,
+        margin: 2.0,
+        label_noise: 0.05,
+        seed,
+    });
+    let m = ds.n_samples();
+    let lambda = 1.0 / m as f64;
+    // Sorted partition: the paper's hard regime (each worker sees almost
+    // one label), which is exactly where gossip quality matters.
+    let shards = partition(&ds, n, PartitionKind::Sorted, seed);
+    let objectives: Vec<Box<dyn Objective>> = shards
+        .iter()
+        .map(|s| Box::new(LogisticRegression::new(s.clone(), lambda, 1)) as Box<dyn Objective>)
+        .collect();
+    let x0 = vec![vec![0.0; d]; n];
+    let mk = || {
+        let sources: Vec<Box<dyn GradientSource>> = shards
+            .iter()
+            .map(|s| {
+                Box::new(NativeGrad {
+                    objective: Box::new(LogisticRegression::new(s.clone(), lambda, 1)),
+                }) as Box<dyn GradientSource>
+            })
+            .collect();
+        make_optim_nodes(
+            &OptimScheme::ChocoSgd {
+                schedule: Schedule::Const(0.05),
+                gamma: 0.3,
+                op: Box::new(op),
+            },
+            sources,
+            &x0,
+            &lw,
+        )
+    };
+    let loss_of = |xs: &[Vec<f64>]| global_loss(&objectives, &vecops::mean_of(xs));
+    let initial_err = loss_of(&x0);
+    let (finals, bits, serial_rps, sharded_rps, workers) =
+        run_both_engines(g, rounds, seed, &mk)?;
+    Ok(ScaleRow {
+        algorithm: "choco_sgd".into(),
+        topology: g.name().to_string(),
+        n,
+        rounds,
+        delta,
+        gamma_star,
+        initial_err,
+        final_err: loss_of(&finals),
+        bits,
+        serial_rps,
+        sharded_rps,
+        speedup: sharded_rps / serial_rps.max(1e-12),
+        workers,
+    })
+}
+
+/// Consensus scenario graphs at CI scale (n ≤ 4096) or paper scale
+/// (adds 16384).
 fn scenario_graphs(full: bool, seed: u64) -> Vec<Graph> {
     let mut rng = Rng::new(seed ^ 0x5CA1E);
     // ER above the connectivity threshold ln(n)/n ≈ 0.002: expected
@@ -121,40 +253,81 @@ fn scenario_graphs(full: bool, seed: u64) -> Vec<Graph> {
     gs
 }
 
+/// CHOCO-SGD scenario graphs: the n = 4096 training rows.
+fn sgd_scenario_graphs() -> Vec<Graph> {
+    vec![Graph::torus_square(4096), Graph::hypercube(12)]
+}
+
+fn say_row(opts: &ExpOptions, row: &ScaleRow) {
+    opts.say(&format!(
+        "  {:<12} {:<14} {:>6} {:>8} {:>10.2e} {:>10.2e} {:>11.1} {:>11.1} {:>8.2}× {:>9.2e}",
+        row.algorithm,
+        row.topology,
+        row.n,
+        row.workers,
+        row.delta,
+        row.gamma_star,
+        row.serial_rps,
+        row.sharded_rps,
+        row.speedup,
+        row.final_err
+    ));
+}
+
+fn trace_of(row: &ScaleRow) -> Trace {
+    let mut tr = Trace::new(
+        &format!("{}_{}", row.algorithm, row.topology),
+        &[
+            "n",
+            "rounds",
+            "delta",
+            "gamma_star",
+            "final_err",
+            "bits",
+            "serial_rps",
+            "sharded_rps",
+            "speedup",
+        ],
+    );
+    tr.push(vec![
+        row.n as f64,
+        row.rounds as f64,
+        row.delta,
+        row.gamma_star,
+        row.final_err,
+        row.bits as f64,
+        row.serial_rps,
+        row.sharded_rps,
+        row.speedup,
+    ]);
+    tr
+}
+
 /// The `repro scale` driver: emit the n-scaling table and CSV.
 pub fn large_scale(opts: &ExpOptions) -> Result<Vec<ScaleRow>, String> {
     let rounds = opts.iters(30, 200);
     let d = 32;
     opts.say(&format!(
-        "large-scale CHOCO-GOSSIP (qsgd_32, d={d}): sharded vs serial, {rounds} rounds each"
+        "large-scale CHOCO (sharded vs serial, {rounds} rounds each): \
+         gossip qsgd_32 d={d}, SGD qsgd_16 logreg d=16"
     ));
     opts.say(&format!(
-        "  {:<14} {:>6} {:>8} {:>12} {:>12} {:>10} {:>8}",
-        "topology", "n", "workers", "serial r/s", "sharded r/s", "speedup", "err"
+        "  {:<12} {:<14} {:>6} {:>8} {:>10} {:>10} {:>11} {:>11} {:>9} {:>9}",
+        "algorithm", "topology", "n", "workers", "delta", "gamma*", "serial r/s",
+        "sharded r/s", "speedup", "err"
     ));
     let mut rows = Vec::new();
     let mut traces = Vec::new();
     for g in scenario_graphs(opts.full, opts.seed) {
         let row = run_scenario(&g, d, rounds, opts.seed)?;
-        opts.say(&format!(
-            "  {:<14} {:>6} {:>8} {:>12.1} {:>12.1} {:>9.2}× {:>8.2e}",
-            row.topology, row.n, row.workers, row.serial_rps, row.sharded_rps, row.speedup,
-            row.final_err
-        ));
-        let mut tr = Trace::new(
-            &row.topology,
-            &["n", "rounds", "final_err", "bits", "serial_rps", "sharded_rps", "speedup"],
-        );
-        tr.push(vec![
-            row.n as f64,
-            row.rounds as f64,
-            row.final_err,
-            row.bits as f64,
-            row.serial_rps,
-            row.sharded_rps,
-            row.speedup,
-        ]);
-        traces.push(tr);
+        say_row(opts, &row);
+        traces.push(trace_of(&row));
+        rows.push(row);
+    }
+    for g in sgd_scenario_graphs() {
+        let row = run_sgd_scenario(&g, rounds, opts.seed)?;
+        say_row(opts, &row);
+        traces.push(trace_of(&row));
         rows.push(row);
     }
     std::fs::create_dir_all(&opts.out_dir).ok();
@@ -173,6 +346,7 @@ mod tests {
         let g = Graph::torus_square(256);
         let row = run_scenario(&g, 16, 150, 7).unwrap();
         assert_eq!(row.n, 256);
+        assert_eq!(row.algorithm, "choco_gossip");
         assert!(row.final_err.is_finite());
         assert!(
             row.final_err < row.initial_err * 0.9,
@@ -183,6 +357,29 @@ mod tests {
         assert!(row.serial_rps > 0.0 && row.sharded_rps > 0.0);
         assert!(row.bits > 0);
         assert!(row.workers >= 1);
+        // Theory columns come from the sparse estimator: torus δ is known
+        // to ≈ 1e-2 at n = 256 and γ* must be a small positive stepsize.
+        assert!(row.delta > 0.0 && row.delta < 1.0, "δ = {}", row.delta);
+        assert!(row.gamma_star > 0.0 && row.gamma_star < 1.0, "γ* = {}", row.gamma_star);
+    }
+
+    #[test]
+    fn sgd_scenario_verifies_and_learns_small() {
+        // CHOCO-SGD through the same serial-vs-sharded differential
+        // harness: bit-exact engines and a falling global loss.
+        let g = Graph::torus_square(64);
+        let row = run_sgd_scenario(&g, 150, 7).unwrap();
+        assert_eq!(row.algorithm, "choco_sgd");
+        assert_eq!(row.n, 64);
+        assert!(row.final_err.is_finite());
+        assert!(
+            row.final_err < row.initial_err,
+            "loss did not fall: {} → {}",
+            row.initial_err,
+            row.final_err
+        );
+        assert!(row.bits > 0);
+        assert!(row.delta > 0.0 && row.delta < 1.0);
     }
 
     #[test]
@@ -191,5 +388,12 @@ mod tests {
         let er = gs.iter().find(|g| g.name().starts_with("er")).unwrap();
         assert!(er.is_connected());
         assert_eq!(er.n(), 4096);
+    }
+
+    #[test]
+    fn sgd_rows_are_n4096() {
+        for g in sgd_scenario_graphs() {
+            assert_eq!(g.n(), 4096);
+        }
     }
 }

@@ -15,7 +15,7 @@ use crate::coordinator::Trace;
 use crate::data::{load_or_generate, partition, PartitionKind};
 use crate::models::{solve_fstar, LogisticRegression, Objective};
 use crate::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
-use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use crate::topology::{uniform_local_weights, Graph};
 
 /// A prepared decentralized logreg problem.
 pub struct SgdProblem {
@@ -41,8 +41,10 @@ pub fn prepare(
     let d = ds.dim();
     let lambda = 1.0 / m as f64;
     let graph = Graph::by_name(topology, n)?;
-    let w = mixing_matrix(&graph, MixingRule::Uniform);
-    let weights = local_weights(&graph, &w);
+    // O(|E|) sparse weights — bit-equal to the dense reference path, so
+    // every figure's trajectory is unchanged while n is no longer capped
+    // by an n×n matrix.
+    let weights = uniform_local_weights(&graph);
     let shards = partition(&ds, n, kind, opts.seed);
     let objectives: Vec<Box<dyn Objective>> = shards
         .iter()

@@ -8,7 +8,7 @@ use super::{suboptimality_metric, write_traces, ExpOptions};
 use crate::coordinator::Trace;
 use crate::models::{Objective, QuadraticConsensus};
 use crate::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
-use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+use crate::topology::{uniform_local_weights, Graph};
 use crate::util::rng::Rng;
 
 /// Run CHOCO-SGD on n workers; return final E[f(x̄) − f*].
@@ -34,8 +34,7 @@ fn final_gap(n: usize, rounds: usize, opts: &ExpOptions, rep: u64) -> f64 {
         })
         .collect();
     let graph = Graph::ring(n);
-    let w = mixing_matrix(&graph, MixingRule::Uniform);
-    let lw = local_weights(&graph, &w);
+    let lw = uniform_local_weights(&graph);
     let x0 = vec![vec![0.0; d]; n];
     let scheme = OptimScheme::ChocoSgd {
         schedule: Schedule::Thm4 { mu: 1.0, a: 50.0 },

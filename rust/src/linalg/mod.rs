@@ -1,14 +1,17 @@
 //! Dense / sparse linear algebra substrate.
 //!
 //! Everything the algorithms need — vector ops, a row-major dense matrix,
-//! CSR sparse rows, and a symmetric eigensolver — implemented in-repo
-//! (no BLAS / nalgebra available offline). Vectors are plain `[f64]`.
+//! CSR sparse rows, a symmetric eigensolver, and deflated power iteration
+//! for matrix-free spectral estimates — implemented in-repo (no BLAS /
+//! nalgebra available offline). Vectors are plain `[f64]`.
 
 pub mod dense;
 pub mod eig;
+pub mod power;
 pub mod sparse;
 pub mod vecops;
 
 pub use dense::DenseMatrix;
+pub use power::{dominant_eigenvalue, PowerOpts, PowerResult};
 pub use sparse::{CsrMatrix, SparseRow};
 pub use vecops::*;

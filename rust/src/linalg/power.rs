@@ -1,0 +1,176 @@
+//! Deflated power iteration for symmetric operators given as matvec
+//! closures — the large-n companion to the dense Jacobi solver in
+//! [`super::eig`].
+//!
+//! `Spectrum::estimate` drives this over the CSR gossip matrix: O(|E|)
+//! work per iteration instead of Jacobi's O(n³) total, which is what makes
+//! the spectral gap δ (and the theoretical stepsize γ*(δ, ω)) reportable
+//! at n = 16384 where a dense W never fits.
+
+use crate::linalg::vecops;
+use crate::util::rng::Rng;
+
+/// Stopping controls for [`dominant_eigenvalue`].
+#[derive(Debug, Clone)]
+pub struct PowerOpts {
+    /// Relative Rayleigh-quotient stall tolerance: the iteration stops
+    /// once consecutive estimates differ by ≤ `tol·|λ|` for `stall`
+    /// iterations in a row.
+    pub tol: f64,
+    /// Consecutive stalled iterations required before stopping.
+    pub stall: usize,
+    /// Hard iteration cap; the current estimate is returned (with
+    /// `converged = false`) when hit. Near-degenerate spectra — e.g. huge
+    /// rings, where λ₂ and λ₄ almost coincide — converge slowly, so
+    /// budget-bound callers (benches) lower this and accept the estimate.
+    pub max_iters: usize,
+}
+
+impl Default for PowerOpts {
+    fn default() -> Self {
+        Self { tol: 3e-14, stall: 10, max_iters: 200_000 }
+    }
+}
+
+/// Outcome of one power-iteration run.
+#[derive(Debug, Clone)]
+pub struct PowerResult {
+    /// Final Rayleigh-quotient estimate of the largest eigenvalue of the
+    /// deflated operator.
+    pub eigenvalue: f64,
+    /// Iterations performed.
+    pub iters: usize,
+    /// Whether the stall criterion fired before `max_iters`.
+    pub converged: bool,
+}
+
+/// Largest eigenvalue of the symmetric operator `apply`, restricted to
+/// the orthogonal complement of the (unit-norm) `deflate` vectors.
+///
+/// The operator must be positive semidefinite on that subspace — callers
+/// square (W → W²) or shift (W → I − W) indefinite operators first — so
+/// the Rayleigh quotient increases monotonically towards λ_max and sign
+/// oscillation between ±λ pairs cannot stall the iteration.
+pub fn dominant_eigenvalue(
+    n: usize,
+    deflate: &[&[f64]],
+    seed: u64,
+    opts: &PowerOpts,
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+) -> Result<PowerResult, String> {
+    if n == 0 {
+        return Err("power iteration on an empty operator".into());
+    }
+    let mut rng = Rng::for_stream(seed, 0x9077_E120);
+    let mut x = vec![0.0; n];
+    rng.fill_gaussian(&mut x);
+    project_out(&mut x, deflate);
+    let nx = vecops::norm2(&x);
+    if nx < 1e-300 {
+        // Deflation spans the whole space (n = 1 against the ones vector):
+        // the restricted operator is trivial.
+        return Ok(PowerResult { eigenvalue: 0.0, iters: 0, converged: true });
+    }
+    vecops::scale(1.0 / nx, &mut x);
+
+    let mut y = vec![0.0; n];
+    let mut rq_prev = f64::NEG_INFINITY;
+    let mut stalled = 0usize;
+    let max_iters = opts.max_iters.max(1);
+    for it in 1..=max_iters {
+        apply(&x, &mut y);
+        project_out(&mut y, deflate);
+        let rq = vecops::dot(&x, &y);
+        let ny = vecops::norm2(&y);
+        if ny <= 1e-14 {
+            // The operator (numerically) annihilates the deflated subspace
+            // — e.g. W² on 1⊥ for the complete graph: λ = 0.
+            return Ok(PowerResult { eigenvalue: 0.0, iters: it, converged: true });
+        }
+        for (xi, &yi) in x.iter_mut().zip(y.iter()) {
+            *xi = yi / ny;
+        }
+        if (rq - rq_prev).abs() <= opts.tol * rq.abs().max(1e-30) {
+            stalled += 1;
+            if stalled >= opts.stall {
+                return Ok(PowerResult { eigenvalue: rq, iters: it, converged: true });
+            }
+        } else {
+            stalled = 0;
+        }
+        rq_prev = rq;
+    }
+    Ok(PowerResult { eigenvalue: rq_prev, iters: max_iters, converged: false })
+}
+
+fn project_out(x: &mut [f64], deflate: &[&[f64]]) {
+    for v in deflate {
+        let c = vecops::dot(x, v);
+        vecops::axpy(-c, v, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+
+    fn dense_apply(a: &DenseMatrix) -> impl Fn(&[f64], &mut [f64]) + '_ {
+        move |x, y| {
+            let r = a.matvec(x);
+            y.copy_from_slice(&r);
+        }
+    }
+
+    #[test]
+    fn diagonal_dominant() {
+        let a = DenseMatrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let r = dominant_eigenvalue(3, &[], 1, &PowerOpts::default(), dense_apply(&a)).unwrap();
+        assert!(r.converged);
+        assert!((r.eigenvalue - 3.0).abs() < 1e-10, "λ = {}", r.eigenvalue);
+    }
+
+    #[test]
+    fn deflation_finds_second_eigenvalue() {
+        // Symmetric with known eigenpairs: eigenvector of λ=3 is e0.
+        let a = DenseMatrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 2.0, 0.0],
+            vec![0.0, 0.0, 0.5],
+        ]);
+        let e0 = [1.0, 0.0, 0.0];
+        let r =
+            dominant_eigenvalue(3, &[&e0], 2, &PowerOpts::default(), dense_apply(&a)).unwrap();
+        assert!((r.eigenvalue - 2.0).abs() < 1e-10, "λ₂ = {}", r.eigenvalue);
+    }
+
+    #[test]
+    fn annihilated_subspace_gives_zero() {
+        // Rank-one projector 11ᵀ/n: zero on 1⊥.
+        let n = 4;
+        let a = DenseMatrix::from_rows(&vec![vec![0.25; n]; n]);
+        let ones = vec![0.5; n]; // unit-norm all-ones for n = 4
+        let r =
+            dominant_eigenvalue(n, &[&ones], 3, &PowerOpts::default(), dense_apply(&a)).unwrap();
+        assert!(r.converged);
+        assert_eq!(r.eigenvalue, 0.0);
+    }
+
+    #[test]
+    fn iteration_cap_returns_estimate() {
+        let a = DenseMatrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let opts = PowerOpts { max_iters: 3, ..PowerOpts::default() };
+        let r = dominant_eigenvalue(2, &[], 4, &opts, dense_apply(&a)).unwrap();
+        assert!(!r.converged);
+        assert!(r.eigenvalue.is_finite());
+    }
+
+    #[test]
+    fn empty_operator_is_an_error() {
+        assert!(dominant_eigenvalue(0, &[], 1, &PowerOpts::default(), |_, _| {}).is_err());
+    }
+}

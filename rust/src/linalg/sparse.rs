@@ -65,7 +65,6 @@ impl CsrMatrix {
             self.indices.push(i);
             self.values.push(v);
         }
-        self.rows = self.indptr.len(); // rows counted via indptr below
         self.indptr.push(self.indices.len());
         self.rows = self.indptr.len() - 1;
     }
@@ -150,6 +149,31 @@ mod tests {
         let mut y = vec![10.0, 10.0, 10.0];
         m.row(0).axpy_into(2.0, &mut y);
         assert_eq!(y, vec![12.0, 10.0, 6.0]);
+    }
+
+    #[test]
+    fn push_row_keeps_row_count_consistent() {
+        // Regression: `push_row` used to dead-store `rows = indptr.len()`
+        // before pushing the new row pointer; `rows` must equal
+        // `indptr.len() - 1` after every push, including empty rows.
+        let mut m = CsrMatrix::new(0, 4);
+        assert_eq!(m.rows, 0);
+        assert_eq!(m.indptr, vec![0]);
+        for expect in 1..=6 {
+            if expect % 2 == 0 {
+                m.push_row(&[]);
+            } else {
+                m.push_row(&[(0, 1.0), (2, -1.0)]);
+            }
+            assert_eq!(m.rows, expect, "rows after push #{expect}");
+            assert_eq!(m.indptr.len(), expect + 1);
+            assert_eq!(*m.indptr.last().unwrap(), m.nnz());
+        }
+        // every row stays addressable with the right contents
+        assert_eq!(m.row(0).nnz(), 2);
+        assert_eq!(m.row(1).nnz(), 0);
+        assert_eq!(m.row(5).nnz(), 0);
+        assert_eq!(m.matvec(&[1.0, 0.0, 1.0, 0.0]), vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -5,6 +5,15 @@
 //! experiments use *uniform* averaging weights
 //! `w_ij = 1/(deg+1)`-style; we also provide Metropolis–Hastings weights
 //! (valid for irregular graphs) and lazy variants.
+//!
+//! All three rules are *local* — each row depends only on degrees — so
+//! the default representation is sparse: [`uniform_local_weights`] /
+//! [`metropolis_local_weights`] build per-node rows in O(|E|) memory and
+//! [`crate::topology::SparseMixing`] wraps them as a CSR matrix for
+//! spectral estimation. The dense [`mixing_matrix`] is kept as the
+//! n ≤ 512 reference path (bit-equal to the sparse constructors, property
+//! tested) for the Jacobi eigensolver and the matrix-form PJRT artifacts;
+//! no large-n driver materializes it.
 
 use crate::linalg::DenseMatrix;
 use crate::topology::graph::Graph;
@@ -112,6 +121,27 @@ pub fn uniform_local_weights(graph: &Graph) -> Vec<LocalWeights> {
         .collect()
 }
 
+/// Metropolis–Hastings local weights built directly from the graph in
+/// O(|E|) memory — the irregular-graph counterpart of
+/// [`uniform_local_weights`], bit-identical to
+/// `local_weights(g, &mixing_matrix(g, MixingRule::MetropolisHastings))`
+/// (property tested).
+pub fn metropolis_local_weights(graph: &Graph) -> Vec<LocalWeights> {
+    (0..graph.n())
+        .map(|i| {
+            let neighbors: Vec<(usize, f64)> = graph
+                .neighbors(i)
+                .iter()
+                .map(|&j| (j, 1.0 / (1.0 + graph.degree(i).max(graph.degree(j)) as f64)))
+                .collect();
+            // Same ascending-neighbor summation order as the dense path
+            // (zeros contribute exact +0.0), so the rows agree bitwise.
+            let row_sum: f64 = neighbors.iter().map(|&(_, w)| w).sum();
+            LocalWeights { self_weight: 1.0 - row_sum, neighbors }
+        })
+        .collect()
+}
+
 /// Extract per-node local weights from W restricted to graph edges.
 pub fn local_weights(graph: &Graph, w: &DenseMatrix) -> Vec<LocalWeights> {
     let n = graph.n();
@@ -144,6 +174,10 @@ mod tests {
             }
         }
     }
+
+    // (MH bit-equality vs the dense path is covered at the matrix level
+    // by topology::sparse::from_rule_matches_dense_bitwise and the
+    // randomized prop_sparse_mixing_matches_dense_bitwise.)
 
     #[test]
     fn uniform_ring_matches_paper() {

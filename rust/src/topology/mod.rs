@@ -1,9 +1,17 @@
 //! Communication graphs, mixing matrices and their spectra.
+//!
+//! The default W representation is sparse ([`SparseMixing`], O(n + |E|));
+//! the dense [`mixing_matrix`] survives as the n ≤ 512 reference path.
 
 pub mod graph;
 pub mod mixing;
+pub mod sparse;
 pub mod spectrum;
 
 pub use graph::Graph;
-pub use mixing::{local_weights, mixing_matrix, uniform_local_weights, LocalWeights, MixingRule};
+pub use mixing::{
+    local_weights, metropolis_local_weights, mixing_matrix, uniform_local_weights, LocalWeights,
+    MixingRule,
+};
+pub use sparse::SparseMixing;
 pub use spectrum::{choco_gamma_star, choco_p, choco_rate_bound, Spectrum};

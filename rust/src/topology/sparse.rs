@@ -1,0 +1,278 @@
+//! CSR-backed sparse gossip matrix — the default representation of W.
+//!
+//! [`SparseMixing`] stores each node's full mixing row (neighbor weights
+//! plus the diagonal self-weight, indices ascending) in O(n + |E|)
+//! memory on top of [`crate::linalg::CsrMatrix`]. It is what every driver
+//! touches when it needs W as a matrix: spectral estimation
+//! ([`crate::topology::Spectrum::estimate`] via sparse matvec), node
+//! construction (`local_weights`), and — only on the n ≤ 512 reference /
+//! PJRT path — materialization to a dense matrix. The constructors are
+//! bit-equal to the dense `mixing_matrix` rows (tested), so switching a
+//! driver to the sparse path never changes a trajectory.
+
+use crate::linalg::{CsrMatrix, DenseMatrix};
+use crate::topology::graph::Graph;
+use crate::topology::mixing::{
+    metropolis_local_weights, uniform_local_weights, LocalWeights, MixingRule,
+};
+
+/// Sparse symmetric doubly-stochastic gossip matrix (Definition 1).
+#[derive(Debug, Clone)]
+pub struct SparseMixing {
+    csr: CsrMatrix,
+}
+
+impl SparseMixing {
+    /// Uniform-rule W for the paper's experiments:
+    /// [`uniform_local_weights`] is the constructor — O(|E|), bit-equal to
+    /// the dense path.
+    pub fn uniform(graph: &Graph) -> Self {
+        Self::from_local_weights(&uniform_local_weights(graph))
+    }
+
+    /// Local-rule construction for every [`MixingRule`] in O(|E|). All
+    /// three rules are local (uniform and Metropolis–Hastings depend only
+    /// on degrees; lazy halves MH and shifts the diagonal), so no dense
+    /// matrix is ever needed. Bit-equal to
+    /// `mixing_matrix(graph, rule)` (property tested).
+    pub fn from_rule(graph: &Graph, rule: MixingRule) -> Self {
+        match rule {
+            MixingRule::Uniform => Self::uniform(graph),
+            MixingRule::MetropolisHastings => {
+                Self::from_local_weights(&metropolis_local_weights(graph))
+            }
+            MixingRule::Lazy => {
+                let mut lw = metropolis_local_weights(graph);
+                for w in &mut lw {
+                    for e in &mut w.neighbors {
+                        e.1 *= 0.5;
+                    }
+                    w.self_weight = 0.5 * w.self_weight + 0.5;
+                }
+                Self::from_local_weights(&lw)
+            }
+        }
+    }
+
+    /// Assemble the CSR from per-node local weights, inserting each
+    /// diagonal self-weight at its sorted position.
+    pub fn from_local_weights(lw: &[LocalWeights]) -> Self {
+        let n = lw.len();
+        assert!(n < u32::MAX as usize, "SparseMixing limited to u32 node ids");
+        let mut csr = CsrMatrix::new(0, n);
+        let mut entries: Vec<(u32, f64)> = Vec::new();
+        for (i, w) in lw.iter().enumerate() {
+            entries.clear();
+            let mut placed = false;
+            for &(j, wij) in &w.neighbors {
+                if !placed && j > i {
+                    entries.push((i as u32, w.self_weight));
+                    placed = true;
+                }
+                entries.push((j as u32, wij));
+            }
+            if !placed {
+                entries.push((i as u32, w.self_weight));
+            }
+            csr.push_row(&entries);
+        }
+        Self { csr }
+    }
+
+    pub fn n(&self) -> usize {
+        self.csr.rows
+    }
+
+    /// Stored entries (≈ 2|E| + n).
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// Entry lookup via binary search within row `i`.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let row = self.csr.row(i);
+        match row.indices.binary_search(&(j as u32)) {
+            Ok(k) => row.values[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Per-node view, the inverse of [`SparseMixing::from_local_weights`]
+    /// (round-trip tested). Drivers that already hold `LocalWeights` pass
+    /// them to the node builders directly; this accessor is for callers
+    /// that only hold the assembled matrix.
+    pub fn local_weights(&self) -> Vec<LocalWeights> {
+        (0..self.n())
+            .map(|i| {
+                let row = self.csr.row(i);
+                let mut self_weight = 0.0;
+                let mut neighbors = Vec::with_capacity(row.nnz().saturating_sub(1));
+                for (&j, &w) in row.indices.iter().zip(row.values.iter()) {
+                    if j as usize == i {
+                        self_weight = w;
+                    } else {
+                        neighbors.push((j as usize, w));
+                    }
+                }
+                LocalWeights { self_weight, neighbors }
+            })
+            .collect()
+    }
+
+    /// `y = W x` in O(|E|). Ascending-index accumulation matches the
+    /// dense row product bit-for-bit (the skipped zeros contribute exact
+    /// `+0.0`).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n());
+        assert_eq!(y.len(), self.n());
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = self.csr.row(i).dot(x);
+        }
+    }
+
+    /// Materialize dense W — n ≤ 512 reference / PJRT matrix-form path
+    /// only (O(n²) memory; large-n drivers never call this).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let n = self.n();
+        let mut w = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            let row = self.csr.row(i);
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                w.set(i, j as usize, v);
+            }
+        }
+        w
+    }
+
+    /// Definition-1 structural check in O(|E| log deg): symmetric and
+    /// every row summing to 1 (⇒ λ₁ = 1 for the symmetric stochastic W).
+    pub fn validate(&self, tol: f64) -> Result<(), String> {
+        let n = self.n();
+        for i in 0..n {
+            let row = self.csr.row(i);
+            let sum: f64 = row.values.iter().sum();
+            if (sum - 1.0).abs() > tol {
+                return Err(format!("row {i} of W sums to {sum}, not 1 (tol {tol})"));
+            }
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                let j = j as usize;
+                // Check every off-diagonal entry (not just j > i): a stray
+                // entry whose mirror is absent must be caught from its own
+                // side, since the mirror row has nothing to trigger on.
+                if j != i {
+                    let back = self.get(j, i);
+                    if (back - v).abs() > tol {
+                        return Err(format!("W not symmetric at ({i},{j}): {v} vs {back}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops;
+    use crate::topology::mixing::{local_weights, mixing_matrix};
+    use crate::util::rng::Rng;
+
+    fn test_graphs() -> Vec<Graph> {
+        let mut rng = Rng::new(31);
+        vec![
+            Graph::ring(9),
+            Graph::torus2d(3, 4),
+            Graph::star(7),
+            Graph::hypercube(3),
+            Graph::barbell(4),
+            Graph::erdos_renyi(12, 0.5, &mut rng),
+        ]
+    }
+
+    #[test]
+    fn from_rule_matches_dense_bitwise() {
+        for g in test_graphs() {
+            for rule in [MixingRule::Uniform, MixingRule::MetropolisHastings, MixingRule::Lazy] {
+                let dense = mixing_matrix(&g, rule);
+                let sparse = SparseMixing::from_rule(&g, rule);
+                assert_eq!(sparse.n(), g.n());
+                for i in 0..g.n() {
+                    for j in 0..g.n() {
+                        assert_eq!(
+                            dense.get(i, j).to_bits(),
+                            sparse.get(i, j).to_bits(),
+                            "{} {rule:?} at ({i},{j})",
+                            g.name()
+                        );
+                    }
+                }
+                sparse.validate(1e-9).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn local_weights_roundtrip() {
+        for g in test_graphs() {
+            let via_dense = local_weights(&g, &mixing_matrix(&g, MixingRule::Uniform));
+            let via_sparse = SparseMixing::uniform(&g).local_weights();
+            assert_eq!(via_dense.len(), via_sparse.len());
+            for (a, b) in via_dense.iter().zip(via_sparse.iter()) {
+                assert_eq!(a.self_weight.to_bits(), b.self_weight.to_bits(), "{}", g.name());
+                assert_eq!(a.neighbors, b.neighbors, "{}", g.name());
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        for g in test_graphs() {
+            let dense = mixing_matrix(&g, MixingRule::Uniform);
+            let sparse = SparseMixing::uniform(&g);
+            let mut rng = Rng::new(7);
+            let mut x = vec![0.0; g.n()];
+            rng.fill_gaussian(&mut x);
+            let want = dense.matvec(&x);
+            let mut got = vec![0.0; g.n()];
+            sparse.matvec_into(&x, &mut got);
+            assert!(vecops::max_abs_diff(&want, &got) == 0.0, "{}", g.name());
+        }
+    }
+
+    #[test]
+    fn to_dense_roundtrip() {
+        let g = Graph::torus2d(3, 3);
+        let sparse = SparseMixing::uniform(&g);
+        let w = sparse.to_dense();
+        assert!(w.is_doubly_stochastic(1e-12));
+        assert!(w.is_symmetric(1e-12));
+        assert_eq!(w.max_abs_diff(&mixing_matrix(&g, MixingRule::Uniform)), 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_one_sided_entry() {
+        // Node 5 lists node 2 as a neighbor but not vice versa, with both
+        // rows still summing to 1: the asymmetry is only visible from the
+        // lower-triangle side and must still be reported.
+        let g = Graph::ring(6);
+        let mut lw = uniform_local_weights(&g);
+        lw[5].neighbors.insert(1, (2, 0.1));
+        lw[5].self_weight -= 0.1;
+        let sm = SparseMixing::from_local_weights(&lw);
+        let err = sm.validate(1e-8).unwrap_err();
+        assert!(err.contains("not symmetric"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_broken_rows() {
+        // A row scaled away from stochasticity must be reported, not
+        // silently accepted.
+        let g = Graph::ring(5);
+        let mut lw = uniform_local_weights(&g);
+        lw[2].self_weight += 0.25;
+        let sm = SparseMixing::from_local_weights(&lw);
+        let err = sm.validate(1e-8).unwrap_err();
+        assert!(err.contains("row 2"), "{err}");
+    }
+}

@@ -2,14 +2,31 @@
 //!
 //! δ = 1 − |λ₂(W)| (spectral gap, eq. 4) and β = ‖I − W‖₂ (eq. 5) are the
 //! two scalars that enter the CHOCO stepsize γ*(δ, ω) of Theorem 2 and
-//! every convergence bound. Computed exactly via the Jacobi eigensolver.
+//! every convergence bound. Two paths compute them:
+//!
+//! * [`Spectrum::estimate`] — the **default**: deflated power iteration
+//!   over the sparse `W` ([`SparseMixing`], O(|E|) per matvec), usable at
+//!   n = 16384 and beyond. |λ₂| comes from iterating W² on the complement
+//!   of the all-ones eigenvector (squaring folds ±λ pairs together), and
+//!   β from iterating the PSD shift I − W.
+//! * [`Spectrum::of`] — the n ≤ 512 reference: exact dense Jacobi
+//!   eigensolver (O(n³)), kept for small graphs, tests, and as the
+//!   ground truth the estimator is differentially tested against
+//!   (≤ 1e-6 relative δ agreement on ring/torus/hypercube/ER).
+//!
+//! Both return `Result` instead of asserting so drivers on weighted or
+//! near-disconnected graphs report the failing graph rather than
+//! aborting the process.
 
-use crate::linalg::{eig, DenseMatrix};
+use crate::linalg::{dominant_eigenvalue, eig, DenseMatrix, PowerOpts};
+use crate::topology::sparse::SparseMixing;
 
 /// Spectrum summary of a gossip matrix.
 #[derive(Debug, Clone)]
 pub struct Spectrum {
-    /// All eigenvalues, descending.
+    /// All eigenvalues, descending. Filled by the exact Jacobi path only;
+    /// empty for power-iteration estimates (which compute δ, ρ, β but not
+    /// the full spectrum).
     pub eigenvalues: Vec<f64>,
     /// δ = 1 − |λ₂|.
     pub delta: f64,
@@ -17,18 +34,38 @@ pub struct Spectrum {
     pub rho: f64,
     /// β = ‖I − W‖₂ = max |1 − λᵢ|.
     pub beta: f64,
+    /// Whether the values are fully resolved: always true for the exact
+    /// Jacobi path; for power-iteration estimates, false when either run
+    /// hit its `max_iters` budget before the stall criterion fired (the
+    /// estimate is then a bound-quality approximation, not a certified
+    /// value — callers printing theory columns should mark or withhold
+    /// derived quantities like γ*).
+    pub converged: bool,
 }
 
 impl Spectrum {
-    /// Compute from a gossip matrix (must satisfy Definition 1; panics on
-    /// non-symmetric input, returns δ ≤ 0 for disconnected graphs).
-    pub fn of(w: &DenseMatrix) -> Self {
+    /// Exact spectrum from a dense gossip matrix (Jacobi, O(n³)) — the
+    /// n ≤ 512 reference path. Errs on non-square/non-symmetric input or
+    /// λ₁ drifting from 1 (non-stochastic W); disconnected graphs are
+    /// *not* an error and yield δ ≈ 0.
+    pub fn of(w: &DenseMatrix) -> Result<Self, String> {
+        if w.rows != w.cols {
+            return Err(format!("gossip matrix must be square, got {}×{}", w.rows, w.cols));
+        }
+        if w.rows == 0 {
+            return Err("empty gossip matrix".into());
+        }
+        if !w.is_symmetric(1e-9) {
+            return Err("gossip matrix not symmetric (Definition 1 requires W = Wᵀ)".into());
+        }
         let eigenvalues = eig::symmetric_eigenvalues(w);
-        assert!(
-            (eigenvalues[0] - 1.0).abs() < 1e-8,
-            "largest eigenvalue of a doubly stochastic matrix must be 1, got {}",
-            eigenvalues[0]
-        );
+        if (eigenvalues[0] - 1.0).abs() > 1e-8 {
+            return Err(format!(
+                "largest eigenvalue of a doubly stochastic matrix must be 1, got {} — \
+                 check the row/column sums of W",
+                eigenvalues[0]
+            ));
+        }
         // |λ₂| = max over non-principal eigenvalues of |λ|.
         // For a disconnected graph λ₂ = 1 and δ = 0.
         let lambda2_abs = eigenvalues
@@ -38,18 +75,77 @@ impl Spectrum {
             .fold(0.0, f64::max);
         let beta = eigenvalues.iter().map(|l| (1.0 - l).abs()).fold(0.0, f64::max);
         let delta = 1.0 - lambda2_abs;
-        Self { eigenvalues, delta, rho: lambda2_abs, beta }
+        Ok(Self { eigenvalues, delta, rho: lambda2_abs, beta, converged: true })
+    }
+
+    /// Power-iteration estimate from the sparse W — the large-n default
+    /// (O(|E|) per iteration, no dense matrix). Uses the default
+    /// [`PowerOpts`] budget; see [`Spectrum::estimate_with`].
+    pub fn estimate(w: &SparseMixing, seed: u64) -> Result<Self, String> {
+        Self::estimate_with(w, seed, &PowerOpts::default())
+    }
+
+    /// Power-iteration estimate with explicit stopping controls.
+    ///
+    /// Validates Definition 1 structurally (symmetry + unit row sums ⇒
+    /// λ₁ = 1 with eigenvector 1/√n), then estimates |λ₂| as
+    /// √λ_max(W² on 1⊥) and β as λ_max(I − W). Accuracy is governed by
+    /// `opts`: with the defaults the estimate agrees with the Jacobi
+    /// reference to ≤ 1e-6 relative δ on the n ≤ 512 graphs (tested);
+    /// budget-bound callers (benches at n ~ 10⁴ rings) lower `max_iters`
+    /// and accept a coarser δ.
+    pub fn estimate_with(
+        w: &SparseMixing,
+        seed: u64,
+        opts: &PowerOpts,
+    ) -> Result<Self, String> {
+        w.validate(1e-8)?;
+        let n = w.n();
+        let ones = vec![1.0 / (n as f64).sqrt(); n];
+        // ρ² = λ_max of W² restricted to 1⊥: squaring makes the operator
+        // PSD so ±λ eigenvalue pairs (bipartite-ish graphs) cannot stall
+        // the iteration.
+        let mut tmp = vec![0.0; n];
+        let rho_sq = dominant_eigenvalue(n, &[&ones], seed, opts, |x, y| {
+            w.matvec_into(x, &mut tmp);
+            w.matvec_into(&tmp, y);
+        })?;
+        let rho = rho_sq.eigenvalue.max(0.0).sqrt().min(1.0);
+        // β = λ_max of I − W (PSD since λᵢ ≤ 1; the principal eigenvalue
+        // maps to 0, so deflation is only needed for numerical hygiene).
+        let beta_r = dominant_eigenvalue(n, &[&ones], seed ^ 0xBE7A, opts, |x, y| {
+            w.matvec_into(x, y);
+            for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+                *yi = xi - *yi;
+            }
+        })?;
+        let beta = beta_r.eigenvalue.max(0.0);
+        Ok(Self {
+            eigenvalues: Vec::new(),
+            delta: 1.0 - rho,
+            rho,
+            beta,
+            converged: rho_sq.converged && beta_r.converged,
+        })
     }
 }
 
 /// Theoretical CHOCO-Gossip stepsize of Theorem 2:
 /// `γ* = δ²ω / (16δ + δ² + 4β² + 2δβ² − 8δω)`.
-pub fn choco_gamma_star(delta: f64, beta: f64, omega: f64) -> f64 {
+///
+/// Errs (instead of aborting) when the denominator is non-positive —
+/// possible on weighted graphs outside the theorem's assumptions — so
+/// drivers can report the offending configuration.
+pub fn choco_gamma_star(delta: f64, beta: f64, omega: f64) -> Result<f64, String> {
     let denom = 16.0 * delta + delta * delta + 4.0 * beta * beta
         + 2.0 * delta * beta * beta
         - 8.0 * delta * omega;
-    assert!(denom > 0.0, "γ* denominator must be positive (δ={delta}, β={beta}, ω={omega})");
-    delta * delta * omega / denom
+    if denom <= 0.0 {
+        return Err(format!(
+            "γ* undefined: non-positive denominator {denom} (δ={delta}, β={beta}, ω={omega})"
+        ));
+    }
+    Ok(delta * delta * omega / denom)
 }
 
 /// Theoretical linear contraction factor per Theorem 2: `1 − δ²ω/82`.
@@ -68,9 +164,10 @@ mod tests {
     use super::*;
     use crate::topology::graph::Graph;
     use crate::topology::mixing::{mixing_matrix, MixingRule};
+    use crate::util::rng::Rng;
 
     fn spectrum_of(g: &Graph) -> Spectrum {
-        Spectrum::of(&mixing_matrix(g, MixingRule::Uniform))
+        Spectrum::of(&mixing_matrix(g, MixingRule::Uniform)).unwrap()
     }
 
     #[test]
@@ -120,6 +217,20 @@ mod tests {
     }
 
     #[test]
+    fn of_reports_bad_input_instead_of_panicking() {
+        // Non-square.
+        let rect = DenseMatrix::zeros(2, 3);
+        assert!(Spectrum::of(&rect).is_err());
+        // Symmetric but not stochastic: λ₁ ≠ 1 must be an Err, not abort.
+        let mut w = DenseMatrix::zeros(3, 3);
+        for i in 0..3 {
+            w.set(i, i, 0.5);
+        }
+        let err = Spectrum::of(&w).unwrap_err();
+        assert!(err.contains("largest eigenvalue"), "{err}");
+    }
+
+    #[test]
     fn beta_bounded_by_two() {
         for g in [Graph::ring(7), Graph::star(5), Graph::barbell(4)] {
             let s = spectrum_of(&g);
@@ -132,18 +243,135 @@ mod tests {
     fn gamma_star_sane() {
         // ω = 1, δ = 1 (complete graph, no compression): formula gives
         // γ* = 1/(16+1+4+2−8) = 1/15.
-        let g = choco_gamma_star(1.0, 1.0, 1.0);
+        let g = choco_gamma_star(1.0, 1.0, 1.0).unwrap();
         assert!((g - 1.0 / 15.0).abs() < 1e-12);
         // γ* increases with ω.
-        assert!(choco_gamma_star(0.5, 1.0, 0.5) < choco_gamma_star(0.5, 1.0, 1.0));
+        assert!(
+            choco_gamma_star(0.5, 1.0, 0.5).unwrap() < choco_gamma_star(0.5, 1.0, 1.0).unwrap()
+        );
         // rate bound in (0,1)
         let r = choco_rate_bound(0.5, 0.1);
         assert!(r > 0.0 && r < 1.0);
     }
 
     #[test]
+    fn gamma_star_degenerate_is_err_not_abort() {
+        // δ = β = 0 (e.g. the 1-node graph) zeroes the denominator: the
+        // driver must get an Err it can print, not a process abort.
+        let err = choco_gamma_star(0.0, 0.0, 0.5).unwrap_err();
+        assert!(err.contains("denominator"), "{err}");
+    }
+
+    #[test]
     fn barbell_has_tiny_gap() {
         let s = spectrum_of(&Graph::barbell(6));
         assert!(s.delta > 0.0 && s.delta < 0.05, "barbell δ = {}", s.delta);
+    }
+
+    // ---- power-iteration estimator vs Jacobi reference ----------------
+
+    #[test]
+    fn estimate_matches_jacobi_reference() {
+        // The acceptance bar: ≤ 1e-6 *relative* δ agreement on
+        // ring/torus/hypercube/ER (n ≤ 512; sizes here keep debug-mode
+        // Jacobi fast — the release-scale sweep is the #[ignore] test
+        // below).
+        let mut rng = Rng::new(9);
+        let graphs = vec![
+            Graph::ring(96),
+            Graph::torus_square(100),
+            Graph::hypercube(7),
+            Graph::erdos_renyi(96, 0.08, &mut rng),
+        ];
+        for g in graphs {
+            for rule in [MixingRule::Uniform, MixingRule::MetropolisHastings] {
+                let sw = SparseMixing::from_rule(&g, rule);
+                let exact = Spectrum::of(&sw.to_dense()).unwrap();
+                let est = Spectrum::estimate(&sw, 5).unwrap();
+                assert!(
+                    (est.delta - exact.delta).abs() <= 1e-6 * exact.delta.abs().max(1e-12),
+                    "{} {rule:?}: δ est {} vs exact {}",
+                    g.name(),
+                    est.delta,
+                    exact.delta
+                );
+                assert!(
+                    (est.beta - exact.beta).abs() <= 1e-6 * exact.beta.abs().max(1e-12),
+                    "{} {rule:?}: β est {} vs exact {}",
+                    g.name(),
+                    est.beta,
+                    exact.beta
+                );
+                assert!(est.eigenvalues.is_empty());
+                assert!(est.converged, "{} {rule:?}: estimate hit its budget", g.name());
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_hypercube_closed_form() {
+        // hypercube(k) with uniform w = 1/(k+1): λ = (1 + k − 2m)/(k+1),
+        // so δ = 2/(k+1) and β = 1 − (1 − k)/(k+1) = 2k/(k+1).
+        for k in [4u32, 8, 10] {
+            let g = Graph::hypercube(k);
+            let est = Spectrum::estimate(&SparseMixing::uniform(&g), 3).unwrap();
+            let delta = 2.0 / (k as f64 + 1.0);
+            let beta = 2.0 * k as f64 / (k as f64 + 1.0);
+            assert!((est.delta - delta).abs() < 1e-9, "k={k}: δ {}", est.delta);
+            assert!((est.beta - beta).abs() < 1e-9, "k={k}: β {}", est.beta);
+        }
+    }
+
+    #[test]
+    fn estimate_complete_graph() {
+        // W = 11ᵀ/n annihilates 1⊥ → ρ = 0, δ = 1, β = 1.
+        let est = Spectrum::estimate(&SparseMixing::uniform(&Graph::complete(16)), 1).unwrap();
+        assert!((est.delta - 1.0).abs() < 1e-9);
+        assert!((est.beta - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimate_rejects_unstochastic_rows() {
+        let g = Graph::ring(6);
+        let mut lw = crate::topology::mixing::uniform_local_weights(&g);
+        lw[0].self_weight = 0.9;
+        let err = Spectrum::estimate(&SparseMixing::from_local_weights(&lw), 1).unwrap_err();
+        assert!(err.contains("row 0"), "{err}");
+    }
+
+    #[test]
+    #[ignore] // release-scale (n = 512 Jacobi): cargo test --release -- --ignored
+    fn estimate_matches_jacobi_n512() {
+        let mut rng = Rng::new(11);
+        let graphs = vec![
+            Graph::ring(512),
+            Graph::torus_square(484),
+            Graph::hypercube(9),
+            Graph::erdos_renyi(512, 0.02, &mut rng),
+        ];
+        // Tighter stall tolerance than the default: ring-512's λ₂/λ₄ gap
+        // is ~3e-4, so the default 3e-14 stall leaves a systematic
+        // ~5e-7 relative δ error — too close to the 1e-6 bar.
+        let opts = PowerOpts { tol: 5e-15, max_iters: 1_000_000, ..PowerOpts::default() };
+        for g in graphs {
+            let sw = SparseMixing::uniform(&g);
+            let exact = Spectrum::of(&sw.to_dense()).unwrap();
+            let est = Spectrum::estimate_with(&sw, 5, &opts).unwrap();
+            assert!(exact.converged);
+            assert!(
+                (est.delta - exact.delta).abs() <= 1e-6 * exact.delta.abs().max(1e-12),
+                "{}: δ est {} vs exact {}",
+                g.name(),
+                est.delta,
+                exact.delta
+            );
+            assert!(
+                (est.beta - exact.beta).abs() <= 1e-6 * exact.beta.abs().max(1e-12),
+                "{}: β est {} vs exact {}",
+                g.name(),
+                est.beta,
+                exact.beta
+            );
+        }
     }
 }

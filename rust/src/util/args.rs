@@ -1,8 +1,12 @@
 //! Hand-rolled CLI argument parsing (clap is unavailable offline).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional args.
-//! Subcommand dispatch happens in `main.rs`; this module only provides the
-//! flag-bag abstraction plus typed getters with error messages.
+//! Negative numeric values work three ways: `--key=-1.5`, `--key -1.5`
+//! (a single-dash token is never an option), and `--key --1.5` (a
+//! `--`-prefixed token whose body parses as a number is read as the
+//! negative value `-1.5`, not as a stray flag). Subcommand dispatch
+//! happens in `main.rs`; this module only provides the flag-bag
+//! abstraction plus typed getters with error messages.
 
 use std::collections::BTreeMap;
 
@@ -28,17 +32,22 @@ impl Args {
                 if let Some((k, v)) = body.split_once('=') {
                     options.insert(k.to_string(), v.to_string());
                 } else {
-                    // Lookahead: treat the next token as the value unless it
-                    // looks like another option.
-                    match it.peek() {
-                        Some(next) if !next.starts_with("--") => {
-                            let v = it.next().unwrap();
-                            options.insert(body.to_string(), v);
+                    // Lookahead: treat the next token as the value unless
+                    // it introduces another option. A numeric-looking
+                    // `--` token (`--1`, `--0.5e-3`) after a key is a
+                    // *negative* value, not a flag.
+                    let value = match it.peek() {
+                        Some(next) if !next.starts_with("--") => Some(it.next().unwrap()),
+                        Some(next) => {
+                            let neg = negative_numeric(next);
+                            if neg.is_some() {
+                                it.next();
+                            }
+                            neg
                         }
-                        _ => {
-                            options.insert(body.to_string(), "true".to_string());
-                        }
-                    }
+                        None => None,
+                    };
+                    options.insert(body.to_string(), value.unwrap_or_else(|| "true".into()));
                 }
             } else {
                 positional.push(arg);
@@ -98,6 +107,17 @@ impl Args {
     }
 }
 
+/// `--1.5` → `Some("-1.5")`: a `--`-prefixed token whose body parses as a
+/// non-negative number is a negative option value, not another flag.
+fn negative_numeric(tok: &str) -> Option<String> {
+    let body = tok.strip_prefix("--")?;
+    if !body.is_empty() && !body.starts_with('-') && body.parse::<f64>().is_ok() {
+        Some(format!("-{body}"))
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +148,30 @@ mod tests {
     fn negative_number_values() {
         let a = parse(&["--lr=-0.5"]);
         assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn negative_value_via_single_dash_token() {
+        // `-1` does not start with `--`, so it is consumed as the value.
+        let a = parse(&["--shift", "-1"]);
+        assert_eq!(a.f64_or("shift", 0.0).unwrap(), -1.0);
+    }
+
+    #[test]
+    fn negative_value_via_double_dash_numeric_token() {
+        // Regression: `--shift --1` used to parse as the flag shift=true
+        // plus a stray flag named "1"; a numeric-looking `--` token is a
+        // negative value.
+        let a = parse(&["--shift", "--1", "--full"]);
+        assert_eq!(a.f64_or("shift", 0.0).unwrap(), -1.0);
+        assert!(!a.has("1"));
+        assert!(a.flag("full"));
+        let b = parse(&["--lr", "--0.5e-3"]);
+        assert_eq!(b.f64_or("lr", 0.0).unwrap(), -0.5e-3);
+        // usize getters reject the now-negative value with an error, not
+        // silent misparsing.
+        let c = parse(&["--nodes", "--9"]);
+        assert!(c.usize_or("nodes", 1).is_err());
     }
 
     #[test]

@@ -95,13 +95,13 @@ fn thm2_bound_across_configs() {
     for (graph, d) in [(Graph::ring(6), 16usize), (Graph::torus2d(2, 3), 12)] {
         let p = problem(graph, d, 9);
         let w = mixing_matrix(&p.graph, MixingRule::Uniform);
-        let spec = Spectrum::of(&w);
+        let spec = Spectrum::of(&w).unwrap();
         for op in [
             Box::new(RandK { k: 2 }) as Box<dyn Compressor>,
             Box::new(TopK { k: 2 }),
         ] {
             let omega = op.omega(d);
-            let gamma = choco::topology::choco_gamma_star(spec.delta, spec.beta, omega);
+            let gamma = choco::topology::choco_gamma_star(spec.delta, spec.beta, omega).unwrap();
             let name = format!("{} on {}", op.name(), p.graph.name());
             let mut r = SyncRunner::new(
                 make_nodes(&Scheme::Choco { gamma, op }, &p.x0, &p.lw),
@@ -168,7 +168,7 @@ fn disconnected_graph_never_converges() {
     let graph = Graph::disconnected(4);
     let n = graph.n();
     let w = mixing_matrix(&graph, MixingRule::Uniform);
-    let spec = Spectrum::of(&w);
+    let spec = Spectrum::of(&w).unwrap();
     assert!(spec.delta.abs() < 1e-9);
     let lw = local_weights(&graph, &w);
     let mut rng = Rng::new(5);

@@ -1,13 +1,15 @@
 //! Property-based tests (proptest-lite) over the core invariants:
-//! compression contraction, wire round-trips, gossip-matrix structure,
-//! and CHOCO average preservation under random graphs/operators/steps.
+//! compression contraction, wire round-trips, gossip-matrix structure
+//! (dense reference vs sparse default), data partitioning, and CHOCO
+//! average preservation under random graphs/operators/steps.
 
 use choco::compress::{
     codec, wire, Compressed, Compressor, DropP, Identity, Payload, QsgdS, RandK, ScaledSign, TopK,
 };
 use choco::consensus::{make_nodes, Scheme, SyncRunner};
+use choco::data::{partition_indices, Dataset, Features, PartitionKind};
 use choco::linalg::vecops;
-use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule, Spectrum};
+use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule, SparseMixing, Spectrum};
 use choco::util::prop::{all_close, check, close, Gen};
 use choco::util::rng::Rng;
 
@@ -182,13 +184,93 @@ fn prop_mixing_matrix_valid() {
             if !w.is_doubly_stochastic(1e-9) {
                 return Err(format!("{}: not doubly stochastic under {rule:?}", graph.name()));
             }
-            let s = Spectrum::of(&w);
+            let s = Spectrum::of(&w)?;
             if s.delta <= 0.0 {
                 return Err(format!("{}: δ = {} under {rule:?}", graph.name(), s.delta));
             }
             if s.beta > 2.0 + 1e-9 {
                 return Err(format!("β = {} > 2", s.beta));
             }
+        }
+        Ok(())
+    });
+}
+
+/// The sparse CSR gossip matrix is entry-for-entry bit-identical to the
+/// dense reference under every weight rule, on random graphs — the
+/// guarantee that lets drivers switch to the O(|E|) path without changing
+/// a single trajectory.
+#[test]
+fn prop_sparse_mixing_matches_dense_bitwise() {
+    check("sparse_mixing_matches_dense", CASES, |g| {
+        let n = g.usize_in(3, 14);
+        let graph = random_connected_graph(g, n);
+        for rule in [MixingRule::Uniform, MixingRule::MetropolisHastings, MixingRule::Lazy] {
+            let dense = mixing_matrix(&graph, rule);
+            let sparse = SparseMixing::from_rule(&graph, rule);
+            for i in 0..graph.n() {
+                for j in 0..graph.n() {
+                    if dense.get(i, j).to_bits() != sparse.get(i, j).to_bits() {
+                        return Err(format!(
+                            "{} {rule:?}: W[{i}][{j}] dense {} vs sparse {}",
+                            graph.name(),
+                            dense.get(i, j),
+                            sparse.get(i, j)
+                        ));
+                    }
+                }
+            }
+            sparse.validate(1e-9)?;
+        }
+        Ok(())
+    });
+}
+
+/// `partition_indices` invariants: chunk sizes differ by ≤ 1 and cover
+/// every index exactly once; the sorted regime is label-contiguous across
+/// the worker order; the shuffled regime is a permutation; and both are
+/// deterministic per seed.
+#[test]
+fn prop_partition_indices() {
+    check("partition_indices", CASES, |g| {
+        let n_workers = g.usize_in(1, 12);
+        let m = n_workers + g.usize_in(0, 80);
+        let labels: Vec<f64> =
+            (0..m).map(|_| if g.rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let rows: Vec<Vec<f64>> = (0..m).map(|i| vec![i as f64]).collect();
+        let ds = Dataset {
+            features: Features::Dense { rows, dim: 1 },
+            labels: labels.clone(),
+            name: "prop".into(),
+        };
+        let seed = g.rng.next_u64();
+        for kind in [PartitionKind::Shuffled, PartitionKind::Sorted] {
+            let parts = partition_indices(&ds, n_workers, kind, seed);
+            if parts.len() != n_workers {
+                return Err(format!("{kind:?}: {} workers, wanted {n_workers}", parts.len()));
+            }
+            let min = parts.iter().map(|p| p.len()).min().unwrap();
+            let max = parts.iter().map(|p| p.len()).max().unwrap();
+            if max - min > 1 {
+                return Err(format!("{kind:?}: chunk sizes differ by {} > 1", max - min));
+            }
+            // permutation: every index exactly once
+            let mut all: Vec<usize> = parts.concat();
+            all.sort_unstable();
+            if all != (0..m).collect::<Vec<_>>() {
+                return Err(format!("{kind:?}: not a permutation of 0..{m}"));
+            }
+            // determinism per seed
+            if parts != partition_indices(&ds, n_workers, kind, seed) {
+                return Err(format!("{kind:?}: not deterministic for seed {seed}"));
+            }
+        }
+        // sorted regime: labels are non-decreasing across the worker
+        // order, so at most one worker straddles the −1/+1 boundary.
+        let sorted = partition_indices(&ds, n_workers, PartitionKind::Sorted, seed);
+        let seq: Vec<f64> = sorted.iter().flatten().map(|&i| labels[i]).collect();
+        if seq.windows(2).any(|w| w[0] > w[1]) {
+            return Err("sorted partition is not label-contiguous".into());
         }
         Ok(())
     });
@@ -254,7 +336,7 @@ fn prop_thm1_bound_random_graphs() {
         let n = g.usize_in(4, 10);
         let graph = random_connected_graph(g, n);
         let w = mixing_matrix(&graph, MixingRule::Uniform);
-        let spec = Spectrum::of(&w);
+        let spec = Spectrum::of(&w)?;
         let lw = local_weights(&graph, &w);
         let d = 6;
         let x0: Vec<Vec<f64>> = (0..n).map(|_| g.vec_f64_exact(d, 2.0)).collect();
