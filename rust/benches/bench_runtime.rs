@@ -12,7 +12,7 @@
 //!
 //! `CHOCO_BENCH_FAST=1` shrinks round counts for CI.
 
-use choco::benchlib::{black_box, Harness};
+use choco::benchlib::{black_box, compare_scale_baseline, Harness};
 use choco::compress::QsgdS;
 use choco::consensus::{make_nodes, GossipNode, Scheme};
 use choco::coordinator::{LinkModel, RoundEngine, ShardedEngine};
@@ -20,7 +20,7 @@ use choco::linalg::PowerOpts;
 use choco::models::Objective;
 use choco::runtime::{Manifest, PjrtEngine, Tensor};
 use choco::topology::{uniform_local_weights, Graph, SparseMixing, Spectrum};
-use choco::util::json::Json;
+use choco::util::json::{self, Json};
 use choco::util::rng::Rng;
 
 fn gossip_nodes(g: &Graph, d: usize, seed: u64) -> Vec<Box<dyn GossipNode>> {
@@ -144,6 +144,46 @@ fn gossip_scaling_sweep() {
     match std::fs::write(out, doc.to_pretty()) {
         Ok(()) => println!("wrote {out} ({} scaling rows)", graphs.len()),
         Err(e) => eprintln!("bench_runtime: could not write {out}: {e}"),
+    }
+    diff_against_baseline(&doc, fast);
+}
+
+/// Advisory regression gate: warn when rounds/sec fall more than 30% below
+/// the checked-in floor. Throughput floors are machine-dependent, so this
+/// prints warnings rather than failing; fast-mode round counts are too
+/// noisy to compare at all.
+fn diff_against_baseline(doc: &Json, fast: bool) {
+    const BASELINE: &str = "BENCH_scale.baseline.json";
+    const TOLERANCE: f64 = 0.30;
+    if fast {
+        println!("fast mode: skipping the {BASELINE} regression diff");
+        return;
+    }
+    let text = match std::fs::read_to_string(BASELINE) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("no {BASELINE} here — run from rust/ to enable the regression diff");
+            return;
+        }
+    };
+    match json::parse(&text) {
+        Ok(base) => {
+            let warnings = compare_scale_baseline(doc, &base, TOLERANCE);
+            if warnings.is_empty() {
+                println!("baseline diff: all rows within {:.0}% of {BASELINE}", TOLERANCE * 100.0);
+            } else {
+                for w in &warnings {
+                    println!("WARNING: {w}");
+                }
+                println!(
+                    "baseline diff: {} figure(s) >{:.0}% below {BASELINE} — investigate, or \
+                     refresh the baseline from a trusted large-n-smoke artifact",
+                    warnings.len(),
+                    TOLERANCE * 100.0
+                );
+            }
+        }
+        Err(e) => eprintln!("bench_runtime: unparseable {BASELINE}: {e}"),
     }
 }
 

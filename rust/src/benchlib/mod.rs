@@ -7,6 +7,7 @@
 //! h.report();
 //! ```
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::time::Instant;
 
@@ -120,9 +121,102 @@ impl Harness {
     }
 }
 
+/// Extract `(topology, n, serial_rps, sharded_rps)` rows from a
+/// `BENCH_scale.json`-shaped document, skipping malformed entries.
+fn scale_rows(doc: &Json) -> Vec<(String, f64, f64, f64)> {
+    doc.get("rows")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|r| {
+            Some((
+                r.get("topology")?.as_str()?.to_string(),
+                r.get("n")?.as_f64()?,
+                r.get("serial_rps")?.as_f64()?,
+                r.get("sharded_rps")?.as_f64()?,
+            ))
+        })
+        .collect()
+}
+
+/// Diff a fresh `BENCH_scale.json` document against a checked-in baseline:
+/// one warning per rounds/sec figure more than `tolerance` (relative) below
+/// the baseline, keyed by `(topology, n)`, plus one per baseline row the
+/// fresh run no longer covers. Throughput is machine-dependent, so callers
+/// print these as advisories rather than failing the bench.
+pub fn compare_scale_baseline(fresh: &Json, baseline: &Json, tolerance: f64) -> Vec<String> {
+    let mut warnings = Vec::new();
+    let fresh_rows = scale_rows(fresh);
+    for (topo, n, base_serial, base_sharded) in scale_rows(baseline) {
+        let Some((_, _, serial, sharded)) =
+            fresh_rows.iter().find(|(t, fn_, _, _)| *t == topo && *fn_ == n)
+        else {
+            warnings.push(format!("baseline row {topo} (n={n}) missing from this run"));
+            continue;
+        };
+        for (what, got, base) in
+            [("serial_rps", *serial, base_serial), ("sharded_rps", *sharded, base_sharded)]
+        {
+            if base > 0.0 && got < base * (1.0 - tolerance) {
+                warnings.push(format!(
+                    "{topo} (n={n}): {what} regressed {:.0}% ({got:.1} vs baseline {base:.1})",
+                    (1.0 - got / base) * 100.0
+                ));
+            }
+        }
+    }
+    warnings
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn scale_doc(rows: Vec<(&str, f64, f64, f64)>) -> Json {
+        Json::obj(vec![(
+            "rows",
+            Json::Arr(
+                rows.into_iter()
+                    .map(|(t, n, serial, sharded)| {
+                        Json::obj(vec![
+                            ("topology", Json::Str(t.to_string())),
+                            ("n", Json::Num(n)),
+                            ("serial_rps", Json::Num(serial)),
+                            ("sharded_rps", Json::Num(sharded)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    #[test]
+    fn baseline_diff_flags_only_real_regressions() {
+        let base = scale_doc(vec![("ring1024", 1024.0, 100.0, 200.0)]);
+        // within tolerance: 30% floor, fresh is 25% down — no warning
+        let ok = scale_doc(vec![("ring1024", 1024.0, 75.0, 180.0)]);
+        assert!(compare_scale_baseline(&ok, &base, 0.30).is_empty());
+        // serial collapsed by 50% — exactly one warning, naming the figure
+        let bad = scale_doc(vec![("ring1024", 1024.0, 50.0, 180.0)]);
+        let w = compare_scale_baseline(&bad, &base, 0.30);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("serial_rps") && w[0].contains("50%"), "{w:?}");
+    }
+
+    #[test]
+    fn baseline_diff_reports_dropped_rows_and_tolerates_malformed_ones() {
+        let base = scale_doc(vec![
+            ("ring1024", 1024.0, 100.0, 200.0),
+            ("torus32x32", 1024.0, 100.0, 200.0),
+        ]);
+        let fresh = scale_doc(vec![("ring1024", 1024.0, 100.0, 200.0)]);
+        let w = compare_scale_baseline(&fresh, &base, 0.30);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("torus32x32") && w[0].contains("missing"), "{w:?}");
+        // a doc with no usable rows yields no spurious warnings against itself
+        let empty = Json::obj(vec![("rows", Json::Arr(vec![Json::Null]))]);
+        assert!(compare_scale_baseline(&empty, &empty, 0.30).is_empty());
+    }
 
     #[test]
     fn measures_something() {

@@ -1,0 +1,508 @@
+//! The event-driven asynchronous gossip engine.
+//!
+//! Each node runs on its own local clock: it fires a gossip step, its
+//! broadcast travels every out-edge with a per-link delay drawn from the
+//! [`LatencyModel`], and the node schedules its next fire `compute_s ×
+//! straggler-multiplier` seconds later. Receivers fold messages into
+//! their freshest x̂ replicas the instant the messages land — there is no
+//! barrier, no round, no global clock, only the queue. This is the
+//! asynchronous CHOCO variant: stale-but-latest replica gossip, exactly
+//! what a real deployment of the paper's algorithm does between
+//! heartbeats.
+//!
+//! See the module root ([`super`]) for the determinism contract and the
+//! proof sketch of the zero-latency BSP equivalence that
+//! `tests/engine_equivalence.rs` pins.
+
+use super::models::{AsyncConfig, CHURN_SALT};
+use super::queue::{EventQueue, Phase};
+use crate::compress::Compressed;
+use crate::consensus::GossipNode;
+use crate::coordinator::metrics::{Accounting, Trace};
+use crate::coordinator::network::NetworkSim;
+use crate::coordinator::phases;
+use crate::coordinator::round::MetricFn;
+use crate::topology::Graph;
+use crate::util::rng::Rng;
+use std::rc::Rc;
+
+/// What the queue carries. Broadcast payloads are `Rc`-shared across the
+/// out-edges of one fire (one allocation per broadcast, not per edge).
+enum Event {
+    /// Node `node` fires its next local gossip step. `epoch` lazily
+    /// cancels fires scheduled before the node's last leave: a stale
+    /// fire's epoch no longer matches and it is skipped on pop.
+    Fire { node: usize, epoch: u64 },
+    /// An in-flight broadcast reaches `to`.
+    Deliver { from: usize, to: usize, msg: Rc<Compressed> },
+    /// Node `node` folds its inbox into the local update for step `step`.
+    /// Always scheduled at the same timestamp as the fire that produced
+    /// it (phase ordering runs it after every same-instant delivery).
+    Update { node: usize, step: usize },
+    /// Churn: node goes offline.
+    Leave { node: usize },
+    /// Churn: node comes back online and resumes firing.
+    Join { node: usize },
+}
+
+/// Deterministic discrete-event runtime over the same [`GossipNode`]
+/// population the BSP engines drive.
+pub struct EventEngine<'g> {
+    pub nodes: Vec<Box<dyn GossipNode>>,
+    pub graph: &'g Graph,
+    pub acct: Accounting,
+    /// When set, every broadcast is additionally run through the wire
+    /// codec and measured frame sizes accumulate in `acct.encoded_bits`,
+    /// exactly as in the BSP engines.
+    pub measure_wire: bool,
+    /// Local gossip steps fired (broadcasts), totalled over all nodes.
+    pub fires: u64,
+    /// Messages that reached an online receiver.
+    pub deliveries: u64,
+    /// Messages lost to the keyed link-loss model.
+    pub drops: u64,
+    /// Messages that arrived while their receiver was offline.
+    pub discarded_offline: u64,
+    /// Leave events that actually took a node offline.
+    pub churn_events: u64,
+    cfg: AsyncConfig,
+    rngs: Vec<Rng>,
+    churn_rngs: Vec<Rng>,
+    net: NetworkSim,
+    queue: EventQueue<Event>,
+    now: f64,
+    /// Per-node local step counter (the async analogue of the round
+    /// index; also the drop/jitter key for that node's broadcasts).
+    steps: Vec<usize>,
+    alive: Vec<bool>,
+    epoch: Vec<u64>,
+    mult: Vec<f64>,
+}
+
+impl<'g> EventEngine<'g> {
+    /// Build the engine and schedule the initial events: one step-0 fire
+    /// per node at t = 0 **in node order** (the stable tie-break then
+    /// keeps same-instant broadcasts in ascending node order — required
+    /// for the BSP equivalence), plus each node's first leave when churn
+    /// is active.
+    ///
+    /// Panics on an invalid `cfg` ([`AsyncConfig::validate`]).
+    pub fn new(nodes: Vec<Box<dyn GossipNode>>, graph: &'g Graph, cfg: AsyncConfig) -> Self {
+        assert_eq!(nodes.len(), graph.n(), "one node per graph vertex");
+        cfg.validate().expect("invalid AsyncConfig");
+        let n = nodes.len();
+        let rngs = (0..n).map(|i| Rng::for_stream(cfg.seed, i as u64)).collect();
+        let mut churn_rngs: Vec<Rng> =
+            (0..n).map(|i| Rng::for_stream(cfg.seed ^ CHURN_SALT, i as u64)).collect();
+        let mult = (0..n).map(|i| cfg.stragglers.multiplier_for(cfg.seed, i)).collect();
+        let net = NetworkSim::new(cfg.link.clone(), cfg.seed);
+        let mut queue = EventQueue::new();
+        for i in 0..n {
+            queue.push(0.0, Phase::Fire, Event::Fire { node: i, epoch: 0 });
+        }
+        if cfg.churn.active() {
+            for (i, rng) in churn_rngs.iter_mut().enumerate() {
+                let up = cfg.churn.uptime(rng);
+                queue.push(up, Phase::Churn, Event::Leave { node: i });
+            }
+        }
+        Self {
+            nodes,
+            graph,
+            acct: Accounting::default(),
+            measure_wire: false,
+            fires: 0,
+            deliveries: 0,
+            drops: 0,
+            discarded_offline: 0,
+            churn_events: 0,
+            cfg,
+            rngs,
+            churn_rngs,
+            net,
+            queue,
+            now: 0.0,
+            steps: vec![0; n],
+            alive: vec![true; n],
+            epoch: vec![0; n],
+            mult,
+        }
+    }
+
+    /// Simulated time of the last processed event.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Process one event. Returns `false` when the queue is drained.
+    fn step_event(&mut self) -> bool {
+        let Some(s) = self.queue.pop() else {
+            return false;
+        };
+        self.now = s.time;
+        match s.event {
+            Event::Fire { node: i, epoch } => {
+                if !self.alive[i] || epoch != self.epoch[i] || self.steps[i] >= self.cfg.rounds {
+                    return true;
+                }
+                let t = self.steps[i];
+                let graph = self.graph;
+                let msg = phases::broadcast_one(self.nodes[i].as_mut(), t, &mut self.rngs[i]);
+                if self.measure_wire {
+                    self.acct.encoded_bits += phases::sender_encoded_bits(&msg, graph.degree(i));
+                }
+                let msg = Rc::new(msg);
+                for &j in graph.neighbors(i) {
+                    // attempted transmissions are charged even when lost,
+                    // exactly like phases::deliver_edge
+                    self.acct.bits += msg.wire_bits;
+                    self.acct.messages += 1;
+                    if self.net.dropped(t, i, j) {
+                        self.drops += 1;
+                    } else {
+                        let delay = self.cfg.latency.delay(&self.net, t, i, j, msg.wire_bits);
+                        self.queue.push(
+                            self.now + delay,
+                            Phase::Deliver,
+                            Event::Deliver { from: i, to: j, msg: Rc::clone(&msg) },
+                        );
+                    }
+                }
+                // the update runs this same instant, after every
+                // same-instant delivery (phase ordering)
+                self.queue.push(self.now, Phase::Update, Event::Update { node: i, step: t });
+                self.steps[i] += 1;
+                self.fires += 1;
+                if self.steps[i] < self.cfg.rounds {
+                    let dt = self.cfg.compute_s * self.mult[i];
+                    self.queue.push(
+                        self.now + dt,
+                        Phase::Fire,
+                        Event::Fire { node: i, epoch: self.epoch[i] },
+                    );
+                }
+            }
+            Event::Deliver { from, to, msg } => {
+                if self.alive[to] {
+                    self.nodes[to].receive(from, &msg);
+                    self.deliveries += 1;
+                } else {
+                    self.discarded_offline += 1;
+                }
+            }
+            Event::Update { node: i, step } => {
+                // a leave can never slip between a fire and its update:
+                // both carry the same timestamp, and same-instant churn
+                // sorts *before* the fire — so the pending broadcast
+                // state is always consistent here
+                phases::update_one(self.nodes[i].as_mut(), step);
+            }
+            Event::Leave { node: i } => {
+                if self.steps[i] >= self.cfg.rounds {
+                    // node already finished its budget — stop churning it
+                    return true;
+                }
+                if self.alive[i] {
+                    self.alive[i] = false;
+                    self.epoch[i] += 1;
+                    self.churn_events += 1;
+                    let down = self.cfg.churn.downtime(&mut self.churn_rngs[i]);
+                    self.queue.push(self.now + down, Phase::Churn, Event::Join { node: i });
+                }
+            }
+            Event::Join { node: i } => {
+                self.alive[i] = true;
+                if self.steps[i] < self.cfg.rounds {
+                    let resume = Event::Fire { node: i, epoch: self.epoch[i] };
+                    self.queue.push(self.now, Phase::Fire, resume);
+                    let up = self.cfg.churn.uptime(&mut self.churn_rngs[i]);
+                    self.queue.push(self.now + up, Phase::Churn, Event::Leave { node: i });
+                }
+            }
+        }
+        true
+    }
+
+    /// Drain the queue: every node fires its full step budget (churn only
+    /// pauses a node, so the run always terminates), then accounting is
+    /// finalized — `sim_time_s` is the drain time, `rounds` the largest
+    /// per-node step count.
+    pub fn run(&mut self) {
+        let start = std::time::Instant::now();
+        while self.step_event() {}
+        self.acct.sim_time_s = self.now;
+        self.acct.rounds = self.steps.iter().copied().max().unwrap_or(0);
+        self.acct.cpu_time_s += start.elapsed().as_secs_f64();
+    }
+
+    /// Drain the queue while sampling `metric` on a fixed wall-clock grid
+    /// (`every_s` simulated seconds): the returned trace has columns
+    /// `time_s, fires, bits, metric`, one row per grid point — the
+    /// wall-clock-to-ε curve `repro async` plots. Rows record the state
+    /// with *every* event before the grid time processed and none after
+    /// it. Stops early once the metric falls below `stop_below` (> 0) or
+    /// leaves the finite range; a final row at the stop/drain time is
+    /// always appended.
+    pub fn run_checkpointed(
+        &mut self,
+        name: &str,
+        every_s: f64,
+        stop_below: f64,
+        mut metric: MetricFn<'_>,
+    ) -> Trace {
+        assert!(every_s > 0.0 && every_s.is_finite(), "bad checkpoint interval {every_s}");
+        let start = std::time::Instant::now();
+        let mut trace = Trace::new(name, &["time_s", "fires", "bits", "metric"]);
+        let m0 = metric(&self.nodes);
+        trace.push(vec![0.0, self.fires as f64, self.acct.bits as f64, m0]);
+        let mut next_cp = every_s;
+        let mut stopped = !m0.is_finite() || (stop_below > 0.0 && m0 < stop_below);
+        while !stopped {
+            let Some(t_next) = self.queue.peek_time() else {
+                break;
+            };
+            while t_next > next_cp {
+                // no unprocessed event precedes next_cp: the state at
+                // that instant is final — record it
+                let m = metric(&self.nodes);
+                trace.push(vec![next_cp, self.fires as f64, self.acct.bits as f64, m]);
+                if !m.is_finite() || (stop_below > 0.0 && m < stop_below) {
+                    stopped = true;
+                    break;
+                }
+                next_cp += every_s;
+            }
+            if stopped {
+                break;
+            }
+            self.step_event();
+        }
+        let m = metric(&self.nodes);
+        trace.push(vec![self.now, self.fires as f64, self.acct.bits as f64, m]);
+        self.acct.sim_time_s = self.now;
+        self.acct.rounds = self.steps.iter().copied().max().unwrap_or(0);
+        self.acct.cpu_time_s += start.elapsed().as_secs_f64();
+        trace
+    }
+
+    /// Current iterates.
+    pub fn iterates(&self) -> Vec<Vec<f64>> {
+        self.nodes.iter().map(|n| n.x().to_vec()).collect()
+    }
+
+    /// Mean iterate x̄.
+    pub fn mean(&self) -> Vec<f64> {
+        crate::linalg::vecops::mean_of(&self.iterates())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::models::{ChurnModel, LatencyModel, StragglerModel};
+    use super::*;
+    use crate::compress::{QsgdS, TopK};
+    use crate::consensus::{make_nodes, Scheme};
+    use crate::coordinator::{LinkModel, RoundEngine};
+    use crate::linalg::vecops;
+    use crate::topology::{local_weights, mixing_matrix, LocalWeights, MixingRule};
+
+    type Setup = (Vec<Vec<f64>>, Vec<LocalWeights>, Graph);
+
+    fn setup(n: usize, d: usize, seed: u64) -> Setup {
+        let g = Graph::ring(n);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let mut rng = Rng::new(seed);
+        let x0: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect();
+        (x0, lw, g)
+    }
+
+    fn topk_nodes(
+        x0: &[Vec<f64>],
+        lw: &[LocalWeights],
+        gamma: f64,
+        k: usize,
+    ) -> Vec<Box<dyn GossipNode>> {
+        make_nodes(&Scheme::Choco { gamma, op: Box::new(TopK { k }) }, x0, lw)
+    }
+
+    fn err_of(xs: &[Vec<f64>], target: &[f64]) -> f64 {
+        xs.iter().map(|x| vecops::dist_sq(x, target)).sum::<f64>() / xs.len() as f64
+    }
+
+    #[test]
+    fn bsp_equivalent_config_matches_serial_engine() {
+        // In-module sanity check of the tentpole guarantee (the full
+        // differential matrix lives in tests/engine_equivalence.rs).
+        let (x0, lw, g) = setup(7, 6, 3);
+        let scheme = || Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 2 }) };
+        let rounds = 25;
+        let mut serial =
+            RoundEngine::new(make_nodes(&scheme(), &x0, &lw), &g, 11, LinkModel::default());
+        serial.measure_wire = true;
+        for _ in 0..rounds {
+            serial.step();
+        }
+        let mut event = EventEngine::new(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            AsyncConfig::bsp_equivalent(rounds, 11),
+        );
+        event.measure_wire = true;
+        event.run();
+        for (a, b) in event.iterates().iter().zip(serial.iterates().iter()) {
+            assert_eq!(vecops::max_abs_diff(a, b), 0.0);
+        }
+        assert_eq!(event.acct.bits, serial.acct.bits);
+        assert_eq!(event.acct.messages, serial.acct.messages);
+        assert_eq!(event.acct.encoded_bits, serial.acct.encoded_bits);
+        assert_eq!(event.acct.rounds, serial.acct.rounds);
+        assert_eq!(event.fires, (7 * rounds) as u64);
+        assert_eq!(event.deliveries, event.acct.messages);
+        // zero latency, unit compute: the clock ends at the last fire
+        assert_eq!(event.now(), (rounds - 1) as f64);
+    }
+
+    #[test]
+    fn latency_jitter_reorders_but_still_converges() {
+        let (x0, lw, g) = setup(8, 6, 5);
+        let target = vecops::mean_of(&x0);
+        let mut cfg = AsyncConfig::bsp_equivalent(120, 7);
+        // jitter > compute: consecutive broadcasts genuinely overtake
+        cfg.latency = LatencyModel {
+            base_s: 0.2,
+            edge_spread_s: 1.5,
+            jitter_s: 2.5,
+            bandwidth_bps: f64::INFINITY,
+        };
+        let nodes =
+            make_nodes(&Scheme::Choco { gamma: 0.2, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw);
+        let mut e = EventEngine::new(nodes, &g, cfg);
+        e.run();
+        assert_eq!(e.fires, 8 * 120);
+        assert_eq!(e.deliveries, e.acct.messages, "no drops configured");
+        let e1 = err_of(&e.iterates(), &target);
+        assert!(e1.is_finite());
+        assert!(e1 < err_of(&x0, &target) * 0.5, "async CHOCO made no progress: {e1}");
+        // messages outlive the last fire: the clock runs past it
+        assert!(e.acct.sim_time_s > 119.0);
+    }
+
+    #[test]
+    fn uniform_stragglers_dilate_the_clock_without_changing_the_trajectory() {
+        // multiplier on *every* node = pure time dilation: same event
+        // order, same trajectory, 3× the simulated wall-clock.
+        let (x0, lw, g) = setup(6, 4, 9);
+        let scheme = || Scheme::Choco { gamma: 0.3, op: Box::new(TopK { k: 2 }) };
+        let rounds = 15;
+        let mut base = EventEngine::new(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            AsyncConfig::bsp_equivalent(rounds, 4),
+        );
+        base.run();
+        let mut cfg = AsyncConfig::bsp_equivalent(rounds, 4);
+        cfg.stragglers = StragglerModel { fraction: 1.0, multiplier: 3.0 };
+        let mut slow = EventEngine::new(make_nodes(&scheme(), &x0, &lw), &g, cfg);
+        slow.run();
+        for (a, b) in slow.iterates().iter().zip(base.iterates().iter()) {
+            assert_eq!(vecops::max_abs_diff(a, b), 0.0);
+        }
+        assert_eq!(base.acct.sim_time_s, (rounds - 1) as f64);
+        assert_eq!(slow.acct.sim_time_s, 3.0 * (rounds - 1) as f64);
+    }
+
+    #[test]
+    fn partial_stragglers_desynchronize_fire_counts_over_time() {
+        // Half the nodes 4× slower, zero latency: after the run every
+        // node has fired its full budget (the engine drains), but the
+        // stragglers' steps happen at 4× the timestamps.
+        let (x0, lw, g) = setup(10, 4, 21);
+        let mut cfg = AsyncConfig::bsp_equivalent(12, 21);
+        cfg.stragglers = StragglerModel { fraction: 0.5, multiplier: 4.0 };
+        let mut e = EventEngine::new(topk_nodes(&x0, &lw, 0.2, 2), &g, cfg);
+        e.run();
+        assert_eq!(e.fires, 10 * 12, "every node must finish its budget");
+        assert!(e.acct.sim_time_s >= 11.0, "clock at least the fast-node finish time");
+        let finals = e.iterates();
+        assert!(finals.iter().all(|x| x.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn churn_pauses_nodes_but_every_step_completes() {
+        let (x0, lw, g) = setup(6, 4, 13);
+        let target = vecops::mean_of(&x0);
+        let mut cfg = AsyncConfig::bsp_equivalent(40, 13);
+        cfg.churn = ChurnModel { rate: 0.5, mean_down_s: 2.0 };
+        let mut e = EventEngine::new(topk_nodes(&x0, &lw, 0.2, 2), &g, cfg);
+        e.run();
+        // churn pauses but never cancels: the full budget always fires
+        assert_eq!(e.fires, 6 * 40);
+        assert_eq!(e.acct.rounds, 40);
+        assert!(e.churn_events > 0, "hazard 0.5/s over a ≥ 39 s run must produce leaves");
+        assert!(e.acct.sim_time_s >= 39.0, "downtime must stretch the clock");
+        let e1 = err_of(&e.iterates(), &target);
+        assert!(e1.is_finite());
+    }
+
+    #[test]
+    fn certain_loss_drops_every_delivery_but_charges_every_bit() {
+        let (x0, lw, g) = setup(5, 4, 17);
+        let mut cfg = AsyncConfig::bsp_equivalent(10, 17);
+        cfg.link = LinkModel { drop_prob: 1.0, ..Default::default() };
+        let mut e = EventEngine::new(topk_nodes(&x0, &lw, 0.2, 2), &g, cfg);
+        e.run();
+        assert_eq!(e.deliveries, 0);
+        assert_eq!(e.drops, e.acct.messages);
+        assert_eq!(e.acct.messages, 5 * 2 * 10);
+        assert!(e.acct.bits > 0, "attempted bits are charged even when every message drops");
+    }
+
+    #[test]
+    fn checkpointed_trace_samples_the_wall_clock_grid() {
+        let (x0, lw, g) = setup(6, 4, 19);
+        let target = vecops::mean_of(&x0);
+        let mut e =
+            EventEngine::new(topk_nodes(&x0, &lw, 0.3, 2), &g, AsyncConfig::bsp_equivalent(30, 19));
+        let trace = e.run_checkpointed(
+            "choco_async",
+            1.0,
+            0.0,
+            Box::new(move |nodes| {
+                nodes.iter().map(|n| vecops::dist_sq(n.x(), &target)).sum::<f64>()
+                    / nodes.len() as f64
+            }),
+        );
+        // rows: t=0, the interior grid points, and the final drain row
+        assert!(trace.rows.len() >= 30, "got {} rows", trace.rows.len());
+        let times = trace.column("time_s");
+        assert!(times.windows(2).all(|w| w[1] >= w[0]), "time column must be monotone");
+        let fires = trace.column("fires");
+        assert_eq!(*fires.last().unwrap(), (6 * 30) as f64);
+        let m = trace.column("metric");
+        assert!(m.last().unwrap() < &(m[0] * 0.5), "metric must fall along the grid");
+        // early stop: a generous threshold ends the run before the budget
+        let nodes2 = topk_nodes(&x0, &lw, 0.3, 2);
+        let t2 = vecops::mean_of(&x0);
+        let mut e2 = EventEngine::new(nodes2, &g, AsyncConfig::bsp_equivalent(500, 19));
+        let tr2 = e2.run_checkpointed(
+            "choco_async_stop",
+            1.0,
+            1e-3,
+            Box::new(move |nodes| {
+                nodes.iter().map(|n| vecops::dist_sq(n.x(), &t2)).sum::<f64>()
+                    / nodes.len() as f64
+            }),
+        );
+        assert!(
+            *tr2.column("fires").last().unwrap() < (6 * 500) as f64,
+            "stop_below must end the run before the full budget"
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Event-driven asynchronous gossip runtime.
+//!
+//! The BSP runtimes ([`super::round`], [`super::sharded`], [`super::actor`])
+//! advance in lockstep rounds; this module replaces the round barrier with
+//! a discrete-event simulation: a timestamped priority queue drives nodes
+//! that fire gossip steps on their own local clocks, messages that travel
+//! per-edge latency distributions (and reorder, drop, or arrive at dead
+//! nodes in flight), stragglers that compute slower than their peers, and
+//! churn that takes nodes offline mid-run. This is ROADMAP open item 2:
+//! the paper's O(1/(δ²ω) log 1/ε) linear-convergence claim, stress-tested
+//! in the asynchronous regime a real deployment lives in.
+//!
+//! # Determinism contract
+//!
+//! A run is a pure function of ([`AsyncConfig`], topology, initial
+//! iterates). Three mechanisms make that hold:
+//!
+//! 1. **Seeded event queue with a stable, total tie-break.** The queue
+//!    pops the least `(timestamp, phase, sequence)` triple
+//!    ([`queue::Scheduled`]): timestamps compare via `f64::total_cmp`
+//!    (every pushed time is asserted finite), same-instant events order by
+//!    [`Phase`] (churn → fire → deliver → update), and same-instant
+//!    same-phase events drain in push (FIFO) order via a monotone
+//!    sequence counter. No heap-internal ordering ever leaks into the
+//!    trajectory; replaying a seed replays the identical event sequence.
+//! 2. **Keyed randomness, never consumed in arrival order.** Drop
+//!    decisions reuse the BSP engines' pure
+//!    [`NetworkSim::dropped`](super::network::NetworkSim::dropped)
+//!    function keyed on `(seed, sender step, edge)`; latency spreads and
+//!    jitter draw from
+//!    [`NetworkSim::edge_stream`](super::network::NetworkSim::edge_stream)
+//!    under distinct salts; straggler election and churn up/down times use
+//!    per-node [`Rng::for_stream`](crate::util::rng::Rng::for_stream)
+//!    streams. Nothing depends on how the queue interleaved other events.
+//! 3. **BSP equivalence in the degenerate limit.** Under
+//!    [`AsyncConfig::bsp_equivalent`] (zero latency, no stragglers, no
+//!    churn, unit compute) every node fires its step-`t` broadcast at
+//!    integer time `t` in ascending node order (FIFO tie-break, by
+//!    induction from the seeded t = 0 fires), deliveries land the same
+//!    instant in ascending sender order — exactly the serial engine's
+//!    sorted-neighbor fold order — and updates run after all deliveries
+//!    (phase order). The trajectory, `bits`, `messages`, and
+//!    `encoded_bits` are then *bit-identical* to `RoundEngine` /
+//!    `ShardedEngine`, which `tests/engine_equivalence.rs` enforces
+//!    exactly (`==`, no tolerance). A dropped message is "no event" here
+//!    versus an explicit zero-delivery there; the two are equivalent
+//!    because a [`Payload::Zero`](crate::compress::Payload) delivery is a
+//!    no-op for every accumulate-on-receive node.
+//!
+//! # `repro async` → paper conventions
+//!
+//! The CLI experiment (`experiments/async_gossip.rs`) sweeps latency
+//! spread, straggler fraction, drop rate, and churn rate, and reports
+//! **simulated wall-clock to ε** instead of the paper's
+//! iterations-to-ε x-axis (Figures 1–3 count rounds and transmitted
+//! bits, which are architecture-independent; wall-clock is the quantity
+//! asynchrony actually moves). The consensus metric is the paper's
+//! `(1/n) Σ_i ‖x_i − x̄₀‖²`, targets are relative to the initial error
+//! (ε = ε_rel · e₀), and bits are still accounted identically to the BSP
+//! engines, so the `BENCH_async.json` artifact is comparable against
+//! `BENCH_scale.json` rows round-for-round in the zero-latency limit.
+
+mod engine;
+mod models;
+mod queue;
+
+pub use engine::EventEngine;
+pub use models::{AsyncConfig, ChurnModel, LatencyModel, StragglerModel};
+pub use queue::{EventQueue, Phase, Scheduled};

@@ -1,0 +1,368 @@
+//! Clock / latency / straggler / churn models for the event-driven
+//! runtime.
+//!
+//! All randomness is *keyed*, never consumed in delivery order: per-edge
+//! draws go through [`NetworkSim::edge_stream`] (pure in
+//! `(seed, salt, step, from, to)`) and per-node draws through
+//! [`Rng::for_stream`] with a model-specific salt. Two runs with the same
+//! [`AsyncConfig`] therefore sample identical latencies, identical
+//! straggler sets, and identical up/down times — the same property that
+//! makes the BSP engines' loss patterns shard-independent.
+
+use crate::coordinator::network::{LinkModel, NetworkSim};
+use crate::util::rng::Rng;
+
+/// Salt for the fixed per-edge component of the latency distribution.
+const EDGE_LATENCY_SALT: u64 = 0x4544_4745_4C41_54; // "EDGELAT"
+/// Salt for the per-message jitter component.
+const JITTER_SALT: u64 = 0x4A49_5454_4552; // "JITTER"
+/// Salt for the straggler assignment stream.
+const STRAGGLER_SALT: u64 = 0x5354_5241_4747; // "STRAGG"
+/// Salt for the per-node churn (uptime/downtime) streams.
+pub(crate) const CHURN_SALT: u64 = 0x4348_5552_4E; // "CHURN"
+
+/// Per-link latency distribution: a message sent on edge `(from, to)` at
+/// the sender's local step `t` is delayed by
+///
+/// ```text
+/// base_s                                     (uniform floor)
+///   + U_edge(from, to) · edge_spread_s       (fixed per edge — "slow links")
+///   + U_msg(t, from, to) · jitter_s          (fresh per message — reordering)
+///   + bits / bandwidth_bps                   (serialization, if finite)
+/// ```
+///
+/// with `U ∈ [0, 1)` keyed draws. `edge_spread_s` models heterogeneous
+/// links (a fixed draw per edge, the same every round); `jitter_s` models
+/// queueing noise and is what makes messages *reorder* in flight: two
+/// broadcasts from the same sender can overtake each other whenever
+/// `jitter_s > compute_s`.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Deterministic per-message floor, seconds.
+    pub base_s: f64,
+    /// Scale of the fixed per-edge latency component, seconds.
+    pub edge_spread_s: f64,
+    /// Scale of the per-message jitter component, seconds.
+    pub jitter_s: f64,
+    /// Serialization bandwidth, bits/second (`f64::INFINITY` = free).
+    pub bandwidth_bps: f64,
+}
+
+impl LatencyModel {
+    /// The degenerate model under which every delay is exactly `0.0` —
+    /// the BSP-equivalent limit used by the differential harness.
+    pub fn zero() -> Self {
+        Self { base_s: 0.0, edge_spread_s: 0.0, jitter_s: 0.0, bandwidth_bps: f64::INFINITY }
+    }
+
+    /// Delay for a `bits`-sized message on `(from, to)` at sender step
+    /// `t`. Pure in the network seed and the arguments.
+    pub fn delay(&self, net: &NetworkSim, t: usize, from: usize, to: usize, bits: u64) -> f64 {
+        let mut d = self.base_s;
+        if self.edge_spread_s > 0.0 {
+            // step key 0: the edge component is fixed across the run
+            d += net.edge_stream(EDGE_LATENCY_SALT, 0, from, to).next_f64() * self.edge_spread_s;
+        }
+        if self.jitter_s > 0.0 {
+            d += net.edge_stream(JITTER_SALT, t, from, to).next_f64() * self.jitter_s;
+        }
+        if self.bandwidth_bps.is_finite() {
+            d += bits as f64 / self.bandwidth_bps;
+        }
+        d
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        let fields = [
+            ("base_s", self.base_s),
+            ("edge_spread_s", self.edge_spread_s),
+            ("jitter_s", self.jitter_s),
+        ];
+        for (name, v) in fields {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("LatencyModel::{name} must be finite and ≥ 0, got {v}"));
+            }
+        }
+        if self.bandwidth_bps <= 0.0 {
+            return Err(format!(
+                "LatencyModel::bandwidth_bps must be positive, got {}",
+                self.bandwidth_bps
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        Self::zero()
+    }
+}
+
+/// Slow-compute stragglers: a keyed `fraction` of nodes run their local
+/// gossip step `multiplier`× slower than the base compute time. The
+/// assignment is a pure function of `(seed, node)`, so every engine and
+/// every run with the same seed elects the same stragglers.
+#[derive(Debug, Clone)]
+pub struct StragglerModel {
+    /// Expected fraction of straggling nodes in `[0, 1]`.
+    pub fraction: f64,
+    /// Compute-time multiplier applied to stragglers (≥ 1).
+    pub multiplier: f64,
+}
+
+impl StragglerModel {
+    /// No stragglers.
+    pub fn none() -> Self {
+        Self { fraction: 0.0, multiplier: 1.0 }
+    }
+
+    /// This node's compute multiplier (1.0 for non-stragglers).
+    pub fn multiplier_for(&self, seed: u64, node: usize) -> f64 {
+        if self.fraction <= 0.0 {
+            return 1.0;
+        }
+        if Rng::for_stream(seed ^ STRAGGLER_SALT, node as u64).bernoulli(self.fraction) {
+            self.multiplier
+        } else {
+            1.0
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.fraction) {
+            return Err(format!(
+                "StragglerModel::fraction must be in [0, 1], got {}",
+                self.fraction
+            ));
+        }
+        if !self.multiplier.is_finite() || self.multiplier < 1.0 {
+            return Err(format!(
+                "StragglerModel::multiplier must be finite and ≥ 1, got {}",
+                self.multiplier
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for StragglerModel {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Node churn: each node alternates exponentially-distributed online
+/// periods (leave hazard `rate` per simulated second) with
+/// exponentially-distributed offline periods (mean `mean_down_s`). While
+/// offline a node neither fires nor receives — in-flight messages
+/// addressed to it are discarded, exactly like a crashed process.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnModel {
+    /// Leave hazard rate per node per simulated second (0 = no churn).
+    pub rate: f64,
+    /// Mean offline duration, seconds.
+    pub mean_down_s: f64,
+}
+
+impl ChurnModel {
+    /// No churn.
+    pub fn none() -> Self {
+        Self { rate: 0.0, mean_down_s: 0.0 }
+    }
+
+    pub fn active(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Draw the next online duration from this node's churn stream.
+    pub fn uptime(&self, rng: &mut Rng) -> f64 {
+        debug_assert!(self.active());
+        -(1.0 - rng.next_f64()).ln() / self.rate
+    }
+
+    /// Draw the next offline duration from this node's churn stream.
+    pub fn downtime(&self, rng: &mut Rng) -> f64 {
+        -(1.0 - rng.next_f64()).ln() * self.mean_down_s
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if !self.rate.is_finite() || self.rate < 0.0 {
+            return Err(format!("ChurnModel::rate must be finite and ≥ 0, got {}", self.rate));
+        }
+        if !self.mean_down_s.is_finite() || self.mean_down_s < 0.0 {
+            return Err(format!(
+                "ChurnModel::mean_down_s must be finite and ≥ 0, got {}",
+                self.mean_down_s
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Full configuration of one event-driven run.
+///
+/// `link.drop_prob` is shared with the BSP engines (the same keyed
+/// [`NetworkSim::dropped`] function decides losses); `link.latency_s` /
+/// `link.bandwidth_bps` are *not* used here — message timing comes from
+/// [`LatencyModel`], which generalizes them to heterogeneous per-edge
+/// distributions.
+#[derive(Debug, Clone)]
+pub struct AsyncConfig {
+    /// Local gossip steps each node fires (the async analogue of BSP
+    /// rounds: in the zero-latency limit, step `t` *is* round `t`).
+    pub rounds: usize,
+    pub seed: u64,
+    /// Base local compute time per gossip step, seconds.
+    pub compute_s: f64,
+    /// Link model shared with the BSP engines (drop decisions).
+    pub link: LinkModel,
+    pub latency: LatencyModel,
+    pub stragglers: StragglerModel,
+    pub churn: ChurnModel,
+}
+
+impl AsyncConfig {
+    /// The configuration the differential harness pins to the BSP
+    /// engines: zero latency, no stragglers, no churn, unit compute — at
+    /// integer time `t` every alive node fires its step-`t` broadcast,
+    /// every message lands the same instant, every node updates.
+    pub fn bsp_equivalent(rounds: usize, seed: u64) -> Self {
+        Self {
+            rounds,
+            seed,
+            compute_s: 1.0,
+            link: LinkModel::default(),
+            latency: LatencyModel::zero(),
+            stragglers: StragglerModel::none(),
+            churn: ChurnModel::none(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.compute_s.is_finite() || self.compute_s <= 0.0 {
+            return Err(format!(
+                "AsyncConfig::compute_s must be finite and > 0, got {}",
+                self.compute_s
+            ));
+        }
+        self.latency.validate()?;
+        self.stragglers.validate()?;
+        self.churn.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_latency_is_exactly_zero() {
+        // The BSP-equivalence proof needs delays of *exactly* 0.0 —
+        // any epsilon would push deliveries past the update phase.
+        let net = NetworkSim::new(LinkModel::default(), 7);
+        let m = LatencyModel::zero();
+        for t in 0..20 {
+            assert_eq!(m.delay(&net, t, 0, 1, 1 << 20), 0.0);
+        }
+    }
+
+    #[test]
+    fn delay_components_are_keyed_and_deterministic() {
+        let net = NetworkSim::new(LinkModel::default(), 7);
+        let m = LatencyModel {
+            base_s: 0.5,
+            edge_spread_s: 2.0,
+            jitter_s: 1.0,
+            bandwidth_bps: f64::INFINITY,
+        };
+        // pure: same key, same delay, any call order
+        let d1 = m.delay(&net, 3, 0, 1, 64);
+        let _ = m.delay(&net, 9, 4, 5, 64);
+        assert_eq!(m.delay(&net, 3, 0, 1, 64), d1);
+        assert!(d1 >= 0.5 && d1 < 0.5 + 2.0 + 1.0);
+        // the edge component is fixed across steps; jitter varies
+        let mk = |edge_spread_s: f64, jitter_s: f64| LatencyModel {
+            base_s: 0.0,
+            edge_spread_s,
+            jitter_s,
+            bandwidth_bps: f64::INFINITY,
+        };
+        let spread_only = mk(2.0, 0.0);
+        assert_eq!(spread_only.delay(&net, 0, 0, 1, 0), spread_only.delay(&net, 5, 0, 1, 0));
+        let jitter_only = mk(0.0, 1.0);
+        assert_ne!(jitter_only.delay(&net, 0, 0, 1, 0), jitter_only.delay(&net, 5, 0, 1, 0));
+        // finite bandwidth adds serialization time
+        let bw = LatencyModel {
+            base_s: 0.0,
+            edge_spread_s: 0.0,
+            jitter_s: 0.0,
+            bandwidth_bps: 1e6,
+        };
+        assert!((bw.delay(&net, 0, 0, 1, 1_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_assignment_keyed_by_node() {
+        let m = StragglerModel { fraction: 0.3, multiplier: 8.0 };
+        let mults: Vec<f64> = (0..200).map(|i| m.multiplier_for(5, i)).collect();
+        let slow = mults.iter().filter(|&&x| x == 8.0).count();
+        let fast = mults.iter().filter(|&&x| x == 1.0).count();
+        assert_eq!(slow + fast, 200, "multiplier must be exactly 1 or 8");
+        assert!(slow > 20 && slow < 120, "~30% of 200 expected, got {slow}");
+        // deterministic per (seed, node); seed-sensitive
+        assert_eq!(m.multiplier_for(5, 17), m.multiplier_for(5, 17));
+        let other: Vec<f64> = (0..200).map(|i| m.multiplier_for(6, i)).collect();
+        assert_ne!(mults, other);
+        // edge fractions
+        assert_eq!(StragglerModel::none().multiplier_for(5, 3), 1.0);
+        let all = StragglerModel { fraction: 1.0, multiplier: 4.0 };
+        assert!((0..50).all(|i| all.multiplier_for(5, i) == 4.0));
+    }
+
+    #[test]
+    fn churn_draws_are_positive_with_the_right_scale() {
+        let m = ChurnModel { rate: 0.1, mean_down_s: 5.0 };
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mut up_sum = 0.0;
+        let mut down_sum = 0.0;
+        for _ in 0..n {
+            let u = m.uptime(&mut rng);
+            let d = m.downtime(&mut rng);
+            assert!(u >= 0.0 && u.is_finite());
+            assert!(d >= 0.0 && d.is_finite());
+            up_sum += u;
+            down_sum += d;
+        }
+        // exponential means: 1/rate = 10, mean_down_s = 5
+        assert!((up_sum / n as f64 - 10.0).abs() < 0.5, "mean uptime {}", up_sum / n as f64);
+        assert!((down_sum / n as f64 - 5.0).abs() < 0.25, "mean downtime {}", down_sum / n as f64);
+        assert!(!ChurnModel::none().active());
+        assert!(m.active());
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let ok = AsyncConfig::bsp_equivalent(10, 1);
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.compute_s = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.stragglers = StragglerModel { fraction: 1.5, multiplier: 2.0 };
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.stragglers = StragglerModel { fraction: 0.5, multiplier: 0.5 };
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.churn = ChurnModel { rate: -1.0, mean_down_s: 1.0 };
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.latency.base_s = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.latency.bandwidth_bps = 0.0;
+        assert!(bad.validate().is_err());
+    }
+}

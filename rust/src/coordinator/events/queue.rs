@@ -1,0 +1,197 @@
+//! Timestamped priority queue — the heart of the event-driven runtime.
+//!
+//! A [`BinaryHeap`] of [`Scheduled`] entries, popped earliest-first with a
+//! *stable, total* tie-break so that a given set of pushes always drains
+//! in exactly one order:
+//!
+//! 1. `time` — simulated seconds, compared with [`f64::total_cmp`] (every
+//!    pushed time is asserted finite, so the total order is the usual
+//!    numeric one);
+//! 2. `phase` — a coarse ordering of event kinds at equal timestamps
+//!    ([`Phase`]); this is what lets the zero-latency configuration
+//!    reproduce BSP rounds bit-exactly: at integer time `t`, churn is
+//!    resolved first, then every node broadcasts, then every in-flight
+//!    message lands, then every node applies its update;
+//! 3. `seq` — a monotone push counter, so same-time same-phase events pop
+//!    in push (FIFO) order regardless of heap internals.
+//!
+//! The tie-break is part of the determinism contract documented at the
+//! module root ([`super`]): replaying a run with the same seed performs
+//! the identical event sequence.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Same-timestamp ordering of event kinds, coarsest first. The numeric
+/// order is load-bearing (see the zero-latency equivalence argument in
+/// [`super::engine::EventEngine`]): membership changes resolve before
+/// broadcasts, broadcasts before deliveries, deliveries before updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Node joins/leaves take effect before anything else this instant.
+    Churn = 0,
+    /// A node fires a local gossip step (broadcast).
+    Fire = 1,
+    /// An in-flight message reaches its receiver.
+    Deliver = 2,
+    /// A node folds its inbox into the local update.
+    Update = 3,
+}
+
+/// One queued event with its scheduling key.
+#[derive(Debug)]
+pub struct Scheduled<E> {
+    pub time: f64,
+    pub phase: Phase,
+    /// Monotone push counter — the final, total tie-break.
+    pub seq: u64,
+    pub event: E,
+}
+
+impl<E> Scheduled<E> {
+    fn key(&self) -> (f64, Phase, u64) {
+        (self.time, self.phase, self.seq)
+    }
+}
+
+// Manual ordering impls: `f64` is not `Ord`, and the heap must pop the
+// *smallest* key from std's max-heap, so the comparison is reversed.
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        let (ta, pa, sa) = self.key();
+        let (tb, pb, sb) = other.key();
+        // reversed on every component: BinaryHeap is a max-heap
+        tb.total_cmp(&ta).then_with(|| pb.cmp(&pa)).then_with(|| sb.cmp(&sa))
+    }
+}
+
+/// Deterministic event queue: earliest `(time, phase, seq)` pops first.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    next_seq: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `event` at `time` (must be finite — NaN would poison the
+    /// total order). Returns the sequence number assigned.
+    pub fn push(&mut self, time: f64, phase: Phase, event: E) -> u64 {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { time, phase, seq, event });
+        seq
+    }
+
+    /// Pop the earliest scheduled entry.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        self.heap.pop()
+    }
+
+    /// Timestamp of the next entry without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Phase::Fire, "c");
+        q.push(1.0, Phase::Fire, "a");
+        q.push(2.0, Phase::Fire, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|s| s.event)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn equal_time_orders_by_phase() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Phase::Update, "update");
+        q.push(1.0, Phase::Deliver, "deliver");
+        q.push(1.0, Phase::Fire, "fire");
+        q.push(1.0, Phase::Churn, "churn");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|s| s.event)).collect();
+        assert_eq!(order, vec!["churn", "fire", "deliver", "update"]);
+    }
+
+    #[test]
+    fn equal_time_and_phase_is_fifo() {
+        // The stable (timestamp, sequence) tie-break: same-key events
+        // drain in push order — this is what makes same-instant node
+        // broadcasts happen in ascending node order.
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(2.5, Phase::Deliver, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|s| s.event)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_pushes_and_pops_stay_ordered() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Phase::Fire, 1);
+        q.push(5.0, Phase::Fire, 5);
+        assert_eq!(q.pop().unwrap().event, 1);
+        // push an earlier event after popping: still pops first
+        q.push(2.0, Phase::Fire, 2);
+        q.push(2.0, Phase::Churn, 20);
+        assert_eq!(q.pop().unwrap().event, 20);
+        assert_eq!(q.pop().unwrap().event, 2);
+        assert_eq!(q.pop().unwrap().event, 5);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sequence_numbers_are_monotone() {
+        let mut q = EventQueue::new();
+        let a = q.push(1.0, Phase::Fire, ());
+        let b = q.push(0.5, Phase::Fire, ());
+        assert!(b > a, "seq must grow with pushes, not with times");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Phase::Fire, ());
+    }
+}

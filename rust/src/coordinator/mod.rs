@@ -1,8 +1,9 @@
 //! L3 coordinator: drives nodes (consensus schemes or optimizers) over a
 //! communication graph, accounting every transmitted bit.
 //!
-//! Three runtimes execute the same [`crate::consensus::GossipNode`]
-//! objects, all driving rounds through the shared [`phases`] module:
+//! Four runtimes execute the same [`crate::consensus::GossipNode`]
+//! objects. Three are synchronous and drive rounds through the shared
+//! [`phases`] module:
 //!
 //! * [`round::RoundEngine`] — the serial reference: deterministic
 //!   synchronous BSP rounds with a pluggable link model
@@ -17,7 +18,15 @@
 //!   distributed actors. Guarded by [`ActorConfig::max_threads`] so it
 //!   refuses node counts that would oversubscribe the host.
 //!
-//! **Equivalence guarantee.** For a given seed, all three runtimes
+//! The fourth, [`events::EventEngine`], is asynchronous: a deterministic
+//! discrete-event runtime where nodes fire gossip steps on their own
+//! local clocks and messages carry per-edge latency, reorder in flight,
+//! drop, straggle, and survive churn. Configured with zero latency, no
+//! stragglers, and no churn ([`events::AsyncConfig::bsp_equivalent`]) it
+//! degenerates to BSP rounds and joins the equivalence guarantee below;
+//! see [`events`] for its determinism contract.
+//!
+//! **Equivalence guarantee.** For a given seed, all three BSP runtimes
 //! produce *bit-identical* iterates (the actor runtime in value mode; its
 //! serialize mode deliberately narrows to f32 on the wire) and identical
 //! idealized/measured bit accounting, for every shard count and worker
@@ -26,11 +35,12 @@
 //! rather than delivery order ([`network::NetworkSim::dropped`]); the
 //! actor runtime has no link model — its channels never drop — so lossy
 //! experiments belong on the engines. The differential harness in
-//! `tests/engine_equivalence.rs` enforces all of this for CHOCO-GOSSIP
-//! and CHOCO-SGD on ring and torus topologies with shard counts
-//! {1, 2, 7, n}.
+//! `tests/engine_equivalence.rs` enforces all of this — including the
+//! event engine's zero-latency limit — for CHOCO-GOSSIP and CHOCO-SGD on
+//! ring and torus topologies with shard counts {1, 2, 7, n}.
 
 pub mod actor;
+pub mod events;
 pub mod metrics;
 pub mod network;
 pub mod phases;
@@ -38,6 +48,7 @@ pub mod round;
 pub mod sharded;
 
 pub use actor::{run_actors, ActorConfig, ActorResult, DEFAULT_MAX_NODE_THREADS};
+pub use events::{AsyncConfig, ChurnModel, EventEngine, LatencyModel, StragglerModel};
 pub use metrics::{Accounting, Trace};
 pub use network::{LinkModel, NetworkSim};
 pub use round::{RoundConfig, RoundEngine};

@@ -13,18 +13,36 @@
 //!
 //! Drop decisions are *keyed*: [`NetworkSim::dropped`] is a pure function
 //! of `(seed, round, from, to)`, not of a stateful RNG consumed in
-//! delivery order. Every engine — serial and sharded worker-pool —
-//! therefore sees the identical loss pattern for a given seed no matter
-//! how it partitions or orders the edges, which is what lets the
-//! differential harness demand bit-identical trajectories even with loss
-//! enabled. The per-edge delivery itself (accounting + zero synthesis on
-//! a drop) lives in one place, [`super::phases::deliver_edge`].
+//! delivery order. Every engine — serial, sharded worker-pool, and the
+//! event-driven [`super::events`] runtime — therefore sees the identical
+//! loss pattern for a given seed no matter how it partitions, orders, or
+//! *times* the edges, which is what lets the differential harness demand
+//! bit-identical trajectories even with loss enabled. The event engine
+//! keys `round` by the **sender's local step counter**, which in the
+//! zero-latency limit coincides with the BSP round index — so the exact
+//! same messages are lost whether rounds are lockstep or free-running.
+//! The keying itself is a pinned contract
+//! (`drop_keying_golden_pattern` below fails on any change to the fold
+//! chain, the seed constant, or the Bernoulli draw).
+//!
+//! [`NetworkSim::edge_stream`] generalizes the same keying to arbitrary
+//! per-(step, edge) decisions: it hands out a fresh generator seeded from
+//! `(seed, salt, round, from, to)`, which the event runtime's latency
+//! models use for per-edge spreads and per-message jitter without
+//! perturbing the drop pattern (different salt ⇒ independent stream).
+//!
+//! Per-edge delivery semantics for the BSP engines (accounting + zero
+//! synthesis on a drop) live in one place, [`super::phases::deliver_edge`];
+//! the event runtime instead skips the delivery event entirely — for
+//! accumulate-on-receive nodes the two are equivalent, because a
+//! [`crate::compress::Payload::Zero`] delivery is a no-op by construction.
 //!
 //! Accounting note: a *dropped* message charges the sender's attempted
-//! `wire_bits` but the synthesized zero placeholder carries `wire_bits: 0`
-//! — nothing reached the receiver, so nothing is double-counted. This is
-//! distinct from a compressor that *chooses* to send nothing (`drop_p`
-//! miss): that ships a real 1-byte zero frame and claims
+//! `wire_bits` but nothing reaches the receiver (the BSP engines deliver
+//! a synthesized zero placeholder with `wire_bits: 0`, the event engine
+//! delivers nothing) — so nothing is double-counted. This is distinct
+//! from a compressor that *chooses* to send nothing (`drop_p` miss): that
+//! ships a real 1-byte zero frame and claims
 //! [`crate::compress::codec::ZERO_FRAME_BITS`].
 
 use crate::util::rng::{Rng, SplitMix64};
@@ -72,17 +90,36 @@ impl NetworkSim {
         Self { model, seed: fold(seed, 0x4E45_5453_494D) } // "NETSIM"
     }
 
+    /// The pinned per-(round, edge) key: three fold steps over the
+    /// pre-folded seed. Both [`Self::dropped`] and [`Self::edge_stream`]
+    /// derive from this single chain.
+    #[inline]
+    fn edge_key(&self, t: usize, from: usize, to: usize) -> u64 {
+        fold(fold(fold(self.seed, t as u64), from as u64), to as u64)
+    }
+
     /// Is round-`t`'s message on the directed edge `from → to` lost?
     ///
     /// Pure in `(seed, t, from, to)` — independent of how many other links
     /// were examined first, so shards can evaluate their own edges in
-    /// parallel and still agree with the serial engine bit-for-bit.
+    /// parallel (and the event runtime can evaluate them at arbitrary
+    /// simulated times) and still agree with the serial engine
+    /// bit-for-bit.
     pub fn dropped(&self, t: usize, from: usize, to: usize) -> bool {
         if self.model.drop_prob <= 0.0 {
             return false;
         }
-        let key = fold(fold(fold(self.seed, t as u64), from as u64), to as u64);
-        Rng::new(key).bernoulli(self.model.drop_prob)
+        Rng::new(self.edge_key(t, from, to)).bernoulli(self.model.drop_prob)
+    }
+
+    /// A fresh generator keyed by `(seed, salt, t, from, to)` — the
+    /// general form of the per-edge decision function. Distinct salts
+    /// yield independent streams over the same edge key, so e.g. latency
+    /// jitter draws never consume (or shift) the drop decisions. Pure:
+    /// calling this in any order, any number of times, returns generators
+    /// in identical states.
+    pub fn edge_stream(&self, salt: u64, t: usize, from: usize, to: usize) -> Rng {
+        Rng::new(fold(self.edge_key(t, from, to), salt))
     }
 }
 
@@ -170,6 +207,57 @@ mod tests {
         assert!(fwd > 0 && rev > 0);
         let agree = (0..200).filter(|&t| sim.dropped(t, 0, 1) == sim.dropped(t, 1, 0)).count();
         assert!(agree < 200, "reverse link decisions identical to forward");
+    }
+
+    #[test]
+    fn drop_keying_golden_pattern() {
+        // Regression pin on the exact (seed, round, from, to) keying.
+        // The event-driven runtime replays drop decisions from each
+        // sender's *local* step counter, long after (and in a different
+        // order than) the BSP engines would — loss determinism across
+        // runtimes holds only while this key chain (NETSIM constant,
+        // three fold steps, xoshiro bernoulli) stays bit-stable. The
+        // expected values were computed from an independent
+        // reimplementation of the SplitMix64/xoshiro256++ chain.
+        let sim = NetworkSim::new(LinkModel { drop_prob: 0.3, ..Default::default() }, 11);
+        let got_25: Vec<bool> = (0..16).map(|t| sim.dropped(t, 2, 5)).collect();
+        assert_eq!(
+            got_25,
+            vec![
+                false, false, true, true, true, false, false, true, false, false, true, true,
+                false, false, false, false
+            ],
+            "drop pattern for edge 2→5 changed — the (seed, round, edge) keying is a contract"
+        );
+        let got_52: Vec<bool> = (0..16).map(|t| sim.dropped(t, 5, 2)).collect();
+        assert_eq!(
+            got_52,
+            vec![
+                true, false, false, true, true, true, true, false, false, true, false, false,
+                false, true, false, false
+            ],
+            "drop pattern for edge 5→2 changed — the (seed, round, edge) keying is a contract"
+        );
+    }
+
+    #[test]
+    fn edge_stream_is_keyed_and_salt_independent() {
+        let sim = NetworkSim::new(LinkModel { drop_prob: 0.3, ..Default::default() }, 11);
+        // pure: identical state for identical keys, any call order
+        let a = sim.edge_stream(7, 3, 0, 1).next_u64();
+        let _ = sim.edge_stream(9, 8, 4, 2).next_u64();
+        assert_eq!(sim.edge_stream(7, 3, 0, 1).next_u64(), a);
+        // every key component matters
+        assert_ne!(sim.edge_stream(8, 3, 0, 1).next_u64(), a, "salt ignored");
+        assert_ne!(sim.edge_stream(7, 4, 0, 1).next_u64(), a, "round ignored");
+        assert_ne!(sim.edge_stream(7, 3, 1, 0).next_u64(), a, "edge direction ignored");
+        // consuming edge_stream draws must not perturb drop decisions
+        let before: Vec<bool> = (0..32).map(|t| sim.dropped(t, 2, 5)).collect();
+        for t in 0..32 {
+            let _ = sim.edge_stream(0xABCD, t, 2, 5).next_f64();
+        }
+        let after: Vec<bool> = (0..32).map(|t| sim.dropped(t, 2, 5)).collect();
+        assert_eq!(before, after);
     }
 
     #[test]

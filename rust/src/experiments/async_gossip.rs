@@ -1,0 +1,278 @@
+//! `repro async` — asynchronous CHOCO-GOSSIP under latency, stragglers,
+//! loss, and churn (the event-driven runtime's headline experiment).
+//!
+//! The paper reports iterations-to-ε and bits-to-ε (Figures 1–3) because
+//! those are architecture-independent; asynchrony moves a different axis,
+//! **simulated wall-clock to ε**, which this driver sweeps: a baseline
+//! BSP-equivalent run, three latency spreads, two straggler mixes, two
+//! drop rates, and two churn rates, all on the same torus / CHOCO
+//! (qsgd_16) configuration. Consensus error is the paper's
+//! `(1/n) Σ ‖x_i − x̄₀‖²` and ε is relative to the initial error, so rows
+//! are comparable across scenarios. Emits `results/async_gossip.csv`
+//! (full wall-clock curves) and a machine-readable `BENCH_async.json` in
+//! the working directory — uploaded as a CI artifact alongside
+//! `BENCH_scale.json` by the large-n-smoke job.
+
+use super::{consensus_metric, summarize, write_traces, ExpOptions};
+use crate::compress::QsgdS;
+use crate::consensus::{make_nodes, Scheme};
+use crate::coordinator::{
+    AsyncConfig, ChurnModel, EventEngine, LatencyModel, LinkModel, StragglerModel, Trace,
+};
+use crate::linalg::vecops;
+use crate::topology::{uniform_local_weights, Graph, LocalWeights};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// CHOCO stepsize for the swept configuration (γ = 0.4 is the tuned value
+/// the scale bench uses for qsgd_16 on tori).
+const GAMMA: f64 = 0.4;
+/// Wall-clock sampling grid, simulated seconds (= the base compute time,
+/// so the baseline logs once per BSP-equivalent round).
+const CHECKPOINT_S: f64 = 1.0;
+
+/// One scenario's summary: where the wall-clock curve crossed ε (NaN if
+/// it never did within the step budget) and the run totals.
+#[derive(Debug, Clone)]
+pub struct AsyncRow {
+    pub scenario: String,
+    pub time_to_eps_s: f64,
+    pub fires_to_eps: f64,
+    pub bits_to_eps: f64,
+    pub final_metric: f64,
+    pub sim_time_s: f64,
+    pub fires: u64,
+    pub bits: u64,
+    pub drops: u64,
+    pub discarded_offline: u64,
+}
+
+/// The swept configurations: ≥3 latency spreads and ≥2 churn rates per
+/// the acceptance criteria, plus stragglers and loss.
+fn scenarios(seed: u64, rounds: usize) -> Vec<(String, AsyncConfig)> {
+    let base = AsyncConfig::bsp_equivalent(rounds, seed);
+    let mut out = vec![("baseline".to_string(), base.clone())];
+    for spread in [0.5, 2.0, 8.0] {
+        let mut c = base.clone();
+        c.latency = LatencyModel {
+            base_s: 0.1,
+            edge_spread_s: spread,
+            jitter_s: spread / 2.0,
+            bandwidth_bps: f64::INFINITY,
+        };
+        out.push((format!("latency_{spread}"), c));
+    }
+    for (frac, label) in [(0.05, "5pct"), (0.2, "20pct")] {
+        let mut c = base.clone();
+        c.stragglers = StragglerModel { fraction: frac, multiplier: 8.0 };
+        out.push((format!("stragglers_{label}"), c));
+    }
+    for (p, label) in [(0.05, "5pct"), (0.2, "20pct")] {
+        let mut c = base.clone();
+        c.link = LinkModel { drop_prob: p, ..Default::default() };
+        out.push((format!("drop_{label}"), c));
+    }
+    for rate in [0.005, 0.02] {
+        let mut c = base.clone();
+        c.churn = ChurnModel { rate, mean_down_s: 5.0 };
+        out.push((format!("churn_{rate}"), c));
+    }
+    out
+}
+
+/// Run one scenario to its step budget (early-stopping at ε) and extract
+/// the ε-crossing from the wall-clock trace.
+fn run_scenario(
+    g: &Graph,
+    x0: &[Vec<f64>],
+    lw: &[LocalWeights],
+    target: &[f64],
+    cfg: AsyncConfig,
+    name: &str,
+    eps: f64,
+) -> (Trace, AsyncRow) {
+    let nodes =
+        make_nodes(&Scheme::Choco { gamma: GAMMA, op: Box::new(QsgdS { s: 16 }) }, x0, lw);
+    let mut engine = EventEngine::new(nodes, g, cfg);
+    let trace =
+        engine.run_checkpointed(name, CHECKPOINT_S, eps, consensus_metric(target.to_vec()));
+    let times = trace.column("time_s");
+    let fires = trace.column("fires");
+    let bits = trace.column("bits");
+    let metric = trace.column("metric");
+    let mut row = AsyncRow {
+        scenario: name.to_string(),
+        time_to_eps_s: f64::NAN,
+        fires_to_eps: f64::NAN,
+        bits_to_eps: f64::NAN,
+        final_metric: *metric.last().expect("non-empty trace"),
+        sim_time_s: engine.acct.sim_time_s,
+        fires: engine.fires,
+        bits: engine.acct.bits,
+        drops: engine.drops,
+        discarded_offline: engine.discarded_offline,
+    };
+    if let Some(i) = metric.iter().position(|&m| m <= eps) {
+        row.time_to_eps_s = times[i];
+        row.fires_to_eps = fires[i];
+        row.bits_to_eps = bits[i];
+    }
+    (trace, row)
+}
+
+/// The `repro async` driver.
+pub fn async_gossip(opts: &ExpOptions) -> Result<Vec<AsyncRow>, String> {
+    let g = Graph::torus_square(256);
+    let d = 16;
+    let rounds = opts.iters(400, 1200);
+    let eps_rel = if opts.full { 1e-2 } else { 3e-2 };
+    let lw = uniform_local_weights(&g);
+    let mut rng = Rng::new(opts.seed);
+    let x0: Vec<Vec<f64>> = (0..g.n())
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let target = vecops::mean_of(&x0);
+    let e0 = x0.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / g.n() as f64;
+    let eps = eps_rel * e0;
+    opts.say(&format!(
+        "== repro async: CHOCO-GOSSIP (qsgd_16, γ={GAMMA}) on {}, n={}, d={d}, \
+         budget {rounds} steps/node, ε = {eps_rel:.0e}·e₀ = {eps:.3e} ==",
+        g.name(),
+        g.n()
+    ));
+    opts.say(&format!(
+        "{:<18} {:>10} {:>10} {:>12} {:>12} {:>9}",
+        "scenario", "time→ε(s)", "fires→ε", "bits→ε", "final err", "sim(s)"
+    ));
+
+    let mut traces = Vec::new();
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for (name, cfg) in scenarios(opts.seed, rounds) {
+        let knobs = (
+            cfg.latency.edge_spread_s,
+            cfg.stragglers.fraction,
+            cfg.link.drop_prob,
+            cfg.churn.rate,
+        );
+        let (trace, row) = run_scenario(&g, &x0, &lw, &target, cfg, &name, eps);
+        opts.say(&format!(
+            "{:<18} {:>10.1} {:>10.0} {:>12.3e} {:>12.3e} {:>9.1}",
+            row.scenario,
+            row.time_to_eps_s,
+            row.fires_to_eps,
+            row.bits_to_eps,
+            row.final_metric,
+            row.sim_time_s
+        ));
+        json_rows.push(Json::obj(vec![
+            ("scenario", Json::Str(row.scenario.clone())),
+            ("latency_spread_s", Json::Num(knobs.0)),
+            ("straggler_fraction", Json::Num(knobs.1)),
+            ("drop_prob", Json::Num(knobs.2)),
+            ("churn_rate", Json::Num(knobs.3)),
+            ("time_to_eps_s", Json::Num(row.time_to_eps_s)),
+            ("fires_to_eps", Json::Num(row.fires_to_eps)),
+            ("bits_to_eps", Json::Num(row.bits_to_eps)),
+            ("final_metric", Json::Num(row.final_metric)),
+            ("sim_time_s", Json::Num(row.sim_time_s)),
+            ("fires", Json::Num(row.fires as f64)),
+            ("bits", Json::Num(row.bits as f64)),
+            ("drops", Json::Num(row.drops as f64)),
+            ("discarded_offline", Json::Num(row.discarded_offline as f64)),
+        ]));
+        traces.push(trace);
+        rows.push(row);
+    }
+
+    summarize(opts, "async_gossip", &traces);
+    write_traces(opts, "async_gossip", &traces)?;
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("repro_async".into())),
+        ("topology", Json::Str(g.name().to_string())),
+        ("n", Json::Num(g.n() as f64)),
+        ("d", Json::Num(d as f64)),
+        ("steps_per_node", Json::Num(rounds as f64)),
+        ("eps_rel", Json::Num(eps_rel)),
+        ("e0", Json::Num(e0)),
+        ("eps", Json::Num(eps)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("full", Json::Bool(opts.full)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let out = "BENCH_async.json";
+    std::fs::write(out, doc.to_pretty()).map_err(|e| format!("write {out}: {e}"))?;
+    opts.say(&format!("wrote {out} ({} scenario rows)", rows.len()));
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scenario plumbing end-to-end at toy scale, no file writes.
+    #[test]
+    fn scenarios_cover_the_acceptance_grid() {
+        let sc = scenarios(1, 10);
+        let names: Vec<&str> = sc.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"baseline"));
+        assert_eq!(names.iter().filter(|n| n.starts_with("latency_")).count(), 3);
+        assert_eq!(names.iter().filter(|n| n.starts_with("churn_")).count(), 2);
+        assert_eq!(names.iter().filter(|n| n.starts_with("drop_")).count(), 2);
+        assert_eq!(names.iter().filter(|n| n.starts_with("stragglers_")).count(), 2);
+        for (name, cfg) in &sc {
+            assert!(cfg.validate().is_ok(), "scenario {name} invalid");
+        }
+    }
+
+    #[test]
+    fn toy_sweep_crosses_eps_on_the_baseline() {
+        let g = Graph::torus_square(36);
+        let d = 4;
+        let lw = uniform_local_weights(&g);
+        let mut rng = Rng::new(7);
+        let x0: Vec<Vec<f64>> = (0..g.n())
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect();
+        let target = vecops::mean_of(&x0);
+        let e0 =
+            x0.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / g.n() as f64;
+        let eps = 0.25 * e0;
+        let rounds = 80;
+
+        let base = AsyncConfig::bsp_equivalent(rounds, 7);
+        let (trace, row) = run_scenario(&g, &x0, &lw, &target, base, "baseline", eps);
+        assert!(row.time_to_eps_s.is_finite(), "baseline never crossed ε: {row:?}");
+        assert!(row.fires_to_eps > 0.0);
+        assert!(row.bits_to_eps > 0.0);
+        assert_eq!(trace.columns, vec!["time_s", "fires", "bits", "metric"]);
+
+        // a latency-heavy scenario still produces a finite, falling curve
+        let mut lat = AsyncConfig::bsp_equivalent(rounds, 7);
+        lat.latency = LatencyModel {
+            base_s: 0.1,
+            edge_spread_s: 2.0,
+            jitter_s: 1.0,
+            bandwidth_bps: f64::INFINITY,
+        };
+        let (_, lrow) = run_scenario(&g, &x0, &lw, &target, lat, "latency_2", eps);
+        assert!(lrow.final_metric.is_finite());
+        assert!(lrow.final_metric < e0, "latency run made no progress");
+
+        // churn completes every node's budget and discards offline mail
+        let mut ch = AsyncConfig::bsp_equivalent(rounds, 7);
+        ch.churn = ChurnModel { rate: 0.05, mean_down_s: 2.0 };
+        let (_, crow) = run_scenario(&g, &x0, &lw, &target, ch, "churn", eps);
+        assert!(crow.final_metric.is_finite());
+        assert!(crow.fires <= (36 * rounds) as u64);
+    }
+}

@@ -5,6 +5,7 @@
 //! sparklines. Defaults are CI-scale (one core, minutes); `--full` runs
 //! paper-scale iteration counts.
 
+pub mod async_gossip;
 pub mod consensus_exps;
 pub mod sgd_exps;
 pub mod e2e;

@@ -16,7 +16,9 @@ use choco::compress::parse_compressor;
 use choco::consensus::{make_nodes, Scheme};
 use choco::coordinator::Trace;
 use choco::data::PartitionKind;
-use choco::experiments::{self, consensus_exps, large_scale, sgd_exps, speedup, tables, ExpOptions};
+use choco::experiments::{
+    self, async_gossip, consensus_exps, large_scale, sgd_exps, speedup, tables, ExpOptions,
+};
 use choco::optim::{OptimScheme, Schedule};
 use choco::topology::{choco_gamma_star, Graph, SparseMixing, Spectrum};
 use choco::util::args::Args;
@@ -50,7 +52,8 @@ fn main() {
 
 const USAGE: &str = "usage: choco <repro|spectrum|consensus|train|e2e|artifacts> [flags]
   repro <id|all>   reproduce a paper figure/table (fig2..fig9, table1..table4, speedup),
-                   or 'scale' — sharded vs serial CHOCO-GOSSIP at n=1024..16384
+                   'scale' — sharded vs serial CHOCO-GOSSIP at n=1024..16384,
+                   or 'async' — event-driven CHOCO under latency/stragglers/loss/churn
   spectrum         print δ, β for a topology
   consensus        run one consensus experiment
   train            run one decentralized training experiment
@@ -73,7 +76,7 @@ fn cmd_repro(args: &Args) -> Result<(), String> {
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .ok_or("repro: which figure? (fig2..fig9, table1..table4, speedup, all)")?;
+        .ok_or("repro: which figure? (fig2..fig9, table1..table4, speedup, scale, async, all)")?;
     let run_one = |id: &str| -> Result<(), String> {
         match id {
             "fig2" => consensus_exps::fig2(&opts).map(|_| ()),
@@ -98,13 +101,14 @@ fn cmd_repro(args: &Args) -> Result<(), String> {
             "table4" => sgd_exps::table4(&opts, "epsilon").map(|_| ()),
             "speedup" => speedup::speedup(&opts).map(|_| ()),
             "scale" => large_scale::large_scale(&opts).map(|_| ()),
+            "async" => async_gossip::async_gossip(&opts).map(|_| ()),
             other => Err(format!("unknown experiment id '{other}'")),
         }
     };
     if id == "all" {
         for id in [
             "table1", "table2", "fig2", "fig3", "table3", "fig4", "fig5", "fig6", "fig7",
-            "fig8", "fig9", "table4", "speedup", "scale",
+            "fig8", "fig9", "table4", "speedup", "scale", "async",
         ] {
             run_one(id)?;
         }

@@ -331,6 +331,26 @@ mod tests {
     }
 
     #[test]
+    fn estimate_reports_unconverged_on_near_degenerate_ring() {
+        // Large rings have λ₂ separated from λ₄ by only O(1/n²): a
+        // starved power-iteration budget cannot resolve the gap, and the
+        // estimator must *say so* — `converged = false` with a finite,
+        // flagged δ — rather than return a silently stalled estimate
+        // that drivers would feed into γ* (the PR 3 follow-up; both
+        // `spectrum` and `consensus --gamma auto` gate on this flag).
+        let g = Graph::ring(2048);
+        let opts = PowerOpts { max_iters: 60, ..PowerOpts::default() };
+        let s = Spectrum::estimate_with(&SparseMixing::uniform(&g), 3, &opts).unwrap();
+        assert!(!s.converged, "60 iterations cannot certify ring-2048's spectrum");
+        // the uncertified value is still a finite, in-range number
+        assert!(s.delta.is_finite(), "δ = {}", s.delta);
+        assert!(s.delta > 0.0 && s.delta <= 1.0, "δ = {}", s.delta);
+        // (certifying ring-2048 for real takes ~10⁵ power iterations —
+        // the release-mode `estimate_matches_jacobi_n512` covers the
+        // converged path at scale.)
+    }
+
+    #[test]
     fn estimate_rejects_unstochastic_rows() {
         let g = Graph::ring(6);
         let mut lw = crate::topology::mixing::uniform_local_weights(&g);

@@ -1,9 +1,12 @@
 //! Integration: the two runtimes (round engine vs threaded actors) agree,
 //! accounting is exact, and failure injection behaves as documented.
 
-use choco::compress::{QsgdS, TopK};
-use choco::consensus::{make_nodes, Scheme};
-use choco::coordinator::{run_actors, ActorConfig, LinkModel, RoundConfig, RoundEngine};
+use choco::compress::{Compressed, Payload, QsgdS, TopK};
+use choco::consensus::{make_nodes, GossipNode, Scheme};
+use choco::coordinator::{
+    run_actors, ActorConfig, AsyncConfig, EventEngine, LinkModel, RoundConfig, RoundEngine,
+    ShardedEngine,
+};
 use choco::linalg::vecops;
 use choco::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
 use choco::topology::{local_weights, mixing_matrix, Graph, MixingRule};
@@ -260,4 +263,88 @@ fn engine_survives_divergence() {
     // but the trace must exist and all logged rows be ordered.
     let iters = trace.column("iter");
     assert!(iters.windows(2).all(|w| w[1] > w[0]));
+}
+
+/// The actor runtime's thread-cap guard, driven from the event runtime's
+/// config type: a population the actor runtime refuses (n > max_threads)
+/// runs fine — and trajectory-equal to the serial oracle — on the event
+/// engine, which needs one thread regardless of n.
+#[test]
+fn actor_cap_refusal_names_the_alternatives_event_engine_accepts() {
+    let g = Graph::ring(8);
+    let w = mixing_matrix(&g, MixingRule::Uniform);
+    let lw = local_weights(&g, &w);
+    let (x0, _) = x0s(8, 6, 19);
+    let scheme = || Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 2 }) };
+    let cfg = AsyncConfig::bsp_equivalent(25, 21);
+
+    let err = run_actors(
+        make_nodes(&scheme(), &x0, &lw),
+        &g,
+        &ActorConfig { rounds: cfg.rounds, seed: cfg.seed, max_threads: 4, ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(err.contains("8 nodes"), "error should name the node count: {err}");
+    assert!(err.contains("max_threads"), "error should name the knob: {err}");
+    assert!(err.contains("ShardedEngine"), "error should point at the large-n runtime: {err}");
+
+    // the same population and seed, single-threaded on the event queue
+    let mut event = EventEngine::new(make_nodes(&scheme(), &x0, &lw), &g, cfg.clone());
+    event.run();
+    let mut serial =
+        RoundEngine::new(make_nodes(&scheme(), &x0, &lw), &g, cfg.seed, cfg.link.clone());
+    for _ in 0..cfg.rounds {
+        serial.step();
+    }
+    for (a, b) in event.iterates().iter().zip(serial.iterates().iter()) {
+        assert_eq!(vecops::max_abs_diff(a, b), 0.0, "event engine drifted from serial");
+    }
+}
+
+/// A node that behaves until a chosen round, then panics in its broadcast
+/// phase — exercising the sharded engine's worker panic guard.
+struct PanicNode {
+    id: usize,
+    x: Vec<f64>,
+}
+
+impl GossipNode for PanicNode {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+    fn begin_round(&mut self, t: usize, _rng: &mut Rng) -> Compressed {
+        if t >= 2 && self.id == 5 {
+            panic!("injected worker panic at round {t}");
+        }
+        Compressed { dim: self.x.len(), payload: Payload::Dense(self.x.clone()), wire_bits: 64 }
+    }
+    fn receive(&mut self, _from: usize, _msg: &Compressed) {}
+    fn end_round(&mut self, _t: usize) {}
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+}
+
+/// A panic on a worker thread must resurface on the caller thread with
+/// its original payload — not deadlock the barrier or get swallowed.
+#[test]
+fn sharded_engine_rethrows_worker_panics() {
+    let g = Graph::ring(8);
+    // rounds/seed drawn from an event-runtime config, per the shared
+    // population-sizing convention
+    let cfg = AsyncConfig::bsp_equivalent(5, 1);
+    let nodes: Vec<Box<dyn GossipNode>> = (0..8)
+        .map(|i| Box::new(PanicNode { id: i, x: vec![0.0; 4] }) as Box<dyn GossipNode>)
+        .collect();
+    let mut e = ShardedEngine::with_shards(nodes, &g, cfg.seed, cfg.link.clone(), 4);
+    let result =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.run_rounds(cfg.rounds)));
+    assert!(result.is_err(), "worker panic must propagate to the caller");
+    let payload = result.unwrap_err();
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("injected worker panic"), "panic payload lost: {msg:?}");
 }

@@ -1,16 +1,21 @@
-//! Differential trajectory harness: the three runtimes (serial
-//! `RoundEngine`, worker-pool `ShardedEngine`, threaded actor runtime)
+//! Differential trajectory harness: the four runtimes (serial
+//! `RoundEngine`, worker-pool `ShardedEngine`, threaded actor runtime,
+//! and the event-driven `EventEngine` in its zero-latency BSP limit)
 //! must be bit-for-bit interchangeable.
 //!
 //! For CHOCO-GOSSIP and CHOCO-SGD, on ring and torus topologies, with
 //! shard counts {1, 2, 7, n}: identical iterates (exact `==`, no
 //! tolerance), identical `Accounting.bits`/`messages`/`encoded_bits`,
 //! identical simulated time — and the same with link loss enabled,
-//! because drop decisions key on (round, edge), not arrival order.
+//! because drop decisions key on (round, edge), not arrival order. The
+//! event engine is compared on everything except simulated time (its
+//! clock counts local compute, not per-round slowest-link transfers).
 
 use choco::compress::{QsgdS, TopK};
 use choco::consensus::{make_nodes, GossipNode, Scheme};
-use choco::coordinator::{run_actors, ActorConfig, LinkModel, RoundEngine, ShardedEngine};
+use choco::coordinator::{
+    run_actors, ActorConfig, AsyncConfig, EventEngine, LinkModel, RoundEngine, ShardedEngine,
+};
 use choco::linalg::vecops;
 use choco::optim::{make_optim_nodes, GradientSource, NativeGrad, OptimScheme, Schedule};
 use choco::topology::{local_weights, mixing_matrix, Graph, LocalWeights, MixingRule};
@@ -77,6 +82,27 @@ where
             engine.acct.sim_time_s, serial.acct.sim_time_s,
             "{what} shards={shards}: sim time"
         );
+    }
+
+    // Event-driven engine in the BSP-equivalent limit (zero latency, no
+    // stragglers, no churn): same trajectory and accounting, including
+    // with link loss — drop decisions key on the sender's local step,
+    // which coincides with the round index here. Simulated time is not
+    // compared: the event clock counts local compute, not link transfers.
+    {
+        let mut cfg = AsyncConfig::bsp_equivalent(rounds, seed);
+        cfg.link = link.clone();
+        let mut event = EventEngine::new(mk(), g, cfg);
+        event.measure_wire = true;
+        event.run();
+        assert_bit_identical(&event.iterates(), &oracle, &format!("{what} event-engine"));
+        assert_eq!(event.acct.bits, serial.acct.bits, "{what} event-engine: bits");
+        assert_eq!(event.acct.messages, serial.acct.messages, "{what} event-engine: messages");
+        assert_eq!(
+            event.acct.encoded_bits, serial.acct.encoded_bits,
+            "{what} event-engine: encoded_bits"
+        );
+        assert_eq!(event.acct.rounds, serial.acct.rounds, "{what} event-engine: rounds");
     }
 
     // Actor runtime: value mode, only meaningful without link loss (the
@@ -258,4 +284,67 @@ fn large_n_smoke_sharded_choco_gossip_n4096() {
     // and the actor runtime refuses this scale with a clear error
     let err = run_actors(mk(), &g, &ActorConfig { rounds: 1, ..Default::default() }).unwrap_err();
     assert!(err.contains("4096"), "guard error should name the node count: {err}");
+}
+
+/// Event engine vs ShardedEngine at n = 4096: the zero-latency BSP limit
+/// must stay bit-identical at scale, for both CHOCO-GOSSIP and CHOCO-SGD
+/// on ring and torus (release-mode CI smoke; the acceptance criterion for
+/// the event-driven runtime).
+#[test]
+#[ignore = "large-n smoke: run in release mode (CI job), ~seconds, too slow for debug tier-1"]
+fn large_n_smoke_event_engine_bsp_limit_n4096() {
+    fn event_vs_sharded(
+        g: &Graph,
+        seed: u64,
+        rounds: usize,
+        mk: &dyn Fn() -> Vec<Box<dyn GossipNode>>,
+        what: &str,
+    ) {
+        let mut sharded = ShardedEngine::new(mk(), g, seed, LinkModel::default());
+        sharded.measure_wire = true;
+        sharded.run_rounds(rounds);
+        let mut event = EventEngine::new(mk(), g, AsyncConfig::bsp_equivalent(rounds, seed));
+        event.measure_wire = true;
+        event.run();
+        assert_bit_identical(&event.iterates(), &sharded.iterates(), what);
+        assert_eq!(event.acct.bits, sharded.acct.bits, "{what}: bits");
+        assert_eq!(event.acct.messages, sharded.acct.messages, "{what}: messages");
+        assert_eq!(event.acct.encoded_bits, sharded.acct.encoded_bits, "{what}: encoded_bits");
+        assert_eq!(event.acct.rounds, sharded.acct.rounds, "{what}: rounds");
+    }
+
+    let n = 4096;
+    let d = 8;
+    let rounds = 5;
+    for g in [Graph::ring(n), Graph::torus_square(n)] {
+        let lw = choco::topology::uniform_local_weights(&g);
+        let x0 = x0s(n, d, 4097);
+
+        // CHOCO-GOSSIP (randomized quantizer: exercises RNG streams)
+        let mk_gossip = || {
+            make_nodes(&Scheme::Choco { gamma: 0.4, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw)
+        };
+        event_vs_sharded(&g, 11, rounds, &mk_gossip, &format!("n=4096 gossip on {}", g.name()));
+
+        // CHOCO-SGD (stochastic gradients + shared accumulator receive)
+        let mk_sgd = || {
+            let sources: Vec<Box<dyn GradientSource>> = (0..n)
+                .map(|i| {
+                    Box::new(NativeGrad {
+                        objective: Box::new(choco::models::QuadraticConsensus::new(
+                            vec![(i % 7) as f64; d],
+                            0.5,
+                        )),
+                    }) as Box<dyn GradientSource>
+                })
+                .collect();
+            let scheme = OptimScheme::ChocoSgd {
+                schedule: Schedule::Const(0.05),
+                gamma: 0.3,
+                op: Box::new(TopK { k: 2 }),
+            };
+            make_optim_nodes(&scheme, sources, &x0, &lw)
+        };
+        event_vs_sharded(&g, 12, rounds, &mk_sgd, &format!("n=4096 sgd on {}", g.name()));
+    }
 }
