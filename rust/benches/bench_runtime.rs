@@ -10,7 +10,11 @@
 //! 2. **PJRT artifact latency** — gradient round trips vs the native
 //!    implementations. Skipped when artifacts aren't built.
 //!
-//! `CHOCO_BENCH_FAST=1` shrinks round counts for CI.
+//! `CHOCO_BENCH_FAST=1` shrinks round counts for CI. The sweep diffs its
+//! rows against `BENCH_scale.baseline.json`; by default regressions are
+//! advisory warnings, but `--strict` (or `CHOCO_BENCH_STRICT=1`) turns a
+//! >30% rounds/sec drop into a non-zero exit — the CI large-n-smoke job
+//! runs this mode.
 
 use choco::benchlib::{black_box, compare_scale_baseline, Harness};
 use choco::compress::QsgdS;
@@ -69,7 +73,9 @@ fn delta_estimate(g: &Graph, max_iters: usize) -> f64 {
         .unwrap_or(f64::NAN)
 }
 
-fn gossip_scaling_sweep() {
+/// Returns the number of baseline-regression warnings (0 when the diff
+/// is clean, skipped, or unavailable) so `main` can gate `--strict` on it.
+fn gossip_scaling_sweep() -> usize {
     let fast = std::env::var("CHOCO_BENCH_FAST").is_ok();
     let d = 64;
     let rounds = if fast { 5 } else { 30 };
@@ -145,25 +151,26 @@ fn gossip_scaling_sweep() {
         Ok(()) => println!("wrote {out} ({} scaling rows)", graphs.len()),
         Err(e) => eprintln!("bench_runtime: could not write {out}: {e}"),
     }
-    diff_against_baseline(&doc, fast);
+    diff_against_baseline(&doc, fast)
 }
 
-/// Advisory regression gate: warn when rounds/sec fall more than 30% below
-/// the checked-in floor. Throughput floors are machine-dependent, so this
-/// prints warnings rather than failing; fast-mode round counts are too
-/// noisy to compare at all.
-fn diff_against_baseline(doc: &Json, fast: bool) {
+/// Regression gate: warn when rounds/sec fall more than 30% below the
+/// checked-in floor, and return the warning count. Throughput floors are
+/// machine-dependent, so by default warnings are advisory; `--strict`
+/// (see `main`) turns a non-zero count into a failing exit. Fast-mode
+/// round counts are too noisy to compare at all.
+fn diff_against_baseline(doc: &Json, fast: bool) -> usize {
     const BASELINE: &str = "BENCH_scale.baseline.json";
     const TOLERANCE: f64 = 0.30;
     if fast {
         println!("fast mode: skipping the {BASELINE} regression diff");
-        return;
+        return 0;
     }
     let text = match std::fs::read_to_string(BASELINE) {
         Ok(t) => t,
         Err(_) => {
             println!("no {BASELINE} here — run from rust/ to enable the regression diff");
-            return;
+            return 0;
         }
     };
     match json::parse(&text) {
@@ -182,8 +189,12 @@ fn diff_against_baseline(doc: &Json, fast: bool) {
                     TOLERANCE * 100.0
                 );
             }
+            warnings.len()
         }
-        Err(e) => eprintln!("bench_runtime: unparseable {BASELINE}: {e}"),
+        Err(e) => {
+            eprintln!("bench_runtime: unparseable {BASELINE}: {e}");
+            0
+        }
     }
 }
 
@@ -294,6 +305,18 @@ fn pjrt_benches() {
 }
 
 fn main() {
-    gossip_scaling_sweep();
+    // `cargo bench --bench bench_runtime -- --strict` (libtest-style args
+    // land after the `--`), or CHOCO_BENCH_STRICT=1 for environments that
+    // can't thread argv through.
+    let strict = std::env::args().any(|a| a == "--strict")
+        || std::env::var("CHOCO_BENCH_STRICT").is_ok();
+    let regressions = gossip_scaling_sweep();
     pjrt_benches();
+    if strict && regressions > 0 {
+        eprintln!(
+            "bench_runtime: --strict and {regressions} rounds/sec figure(s) regressed >30% \
+             below BENCH_scale.baseline.json"
+        );
+        std::process::exit(1);
+    }
 }

@@ -40,14 +40,33 @@ use crate::util::rng::Rng;
 
 /// Result of compressing a d-vector: a sparse/dense/quantized payload plus
 /// the number of bits this message costs on the wire.
-#[derive(Debug, Clone)]
+///
+/// `Clone` is implemented by hand so that `clone_from` reuses the
+/// destination's payload buffers when the payload family matches — the
+/// sharded engine's arena slots and the gossip nodes' retained own-message
+/// copies are family-stable across rounds, so steady-state cloning never
+/// touches the allocator. The cloned *value* is always identical to what
+/// `#[derive(Clone)]` would produce.
+#[derive(Debug)]
 pub struct Compressed {
     pub dim: usize,
     pub payload: Payload,
     pub wire_bits: u64,
 }
 
-#[derive(Debug, Clone)]
+impl Clone for Compressed {
+    fn clone(&self) -> Self {
+        Self { dim: self.dim, payload: self.payload.clone(), wire_bits: self.wire_bits }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.dim = src.dim;
+        self.wire_bits = src.wire_bits;
+        self.payload.clone_from(&src.payload);
+    }
+}
+
+#[derive(Debug)]
 pub enum Payload {
     /// Nothing transmitted (drop_p miss) — decodes to the zero vector and
     /// costs a single byte on the wire ([`codec::ZERO_FRAME_BITS`]).
@@ -65,7 +84,68 @@ pub enum Payload {
     SignBitmap { scale: f64, negatives: Vec<u8> },
 }
 
+impl Clone for Payload {
+    fn clone(&self) -> Self {
+        match self {
+            Payload::Zero => Payload::Zero,
+            Payload::Dense(v) => Payload::Dense(v.clone()),
+            Payload::Sparse { indices, values } => {
+                Payload::Sparse { indices: indices.clone(), values: values.clone() }
+            }
+            Payload::Quantized { scale, bits_per_coord, levels } => Payload::Quantized {
+                scale: *scale,
+                bits_per_coord: *bits_per_coord,
+                levels: levels.clone(),
+            },
+            Payload::SignBitmap { scale, negatives } => {
+                Payload::SignBitmap { scale: *scale, negatives: negatives.clone() }
+            }
+        }
+    }
+
+    /// Family-stable buffer reuse: when `self` and `src` hold the same
+    /// variant, the destination vectors are overwritten in place
+    /// (`Vec::clone_from` keeps their capacity); otherwise falls back to a
+    /// fresh clone.
+    fn clone_from(&mut self, src: &Self) {
+        match (self, src) {
+            (Payload::Zero, Payload::Zero) => {}
+            (Payload::Dense(dst), Payload::Dense(s)) => dst.clone_from(s),
+            (
+                Payload::Sparse { indices: di, values: dv },
+                Payload::Sparse { indices: si, values: sv },
+            ) => {
+                di.clone_from(si);
+                dv.clone_from(sv);
+            }
+            (
+                Payload::Quantized { scale: dsc, bits_per_coord: db, levels: dl },
+                Payload::Quantized { scale: ssc, bits_per_coord: sb, levels: sl },
+            ) => {
+                *dsc = *ssc;
+                *db = *sb;
+                dl.clone_from(sl);
+            }
+            (
+                Payload::SignBitmap { scale: dsc, negatives: dn },
+                Payload::SignBitmap { scale: ssc, negatives: sn },
+            ) => {
+                *dsc = *ssc;
+                dn.clone_from(sn);
+            }
+            (dst, s) => *dst = s.clone(),
+        }
+    }
+}
+
 impl Compressed {
+    /// An empty placeholder (`dim` 0, zero payload, zero claimed bits) —
+    /// the initial state of arena slots and retained own-message buffers
+    /// before their first round.
+    pub fn empty() -> Self {
+        Self { dim: 0, payload: Payload::Zero, wire_bits: 0 }
+    }
+
     /// Materialize as a dense vector.
     pub fn to_dense(&self) -> Vec<f64> {
         let mut out = vec![0.0; self.dim];
@@ -132,6 +212,17 @@ pub trait Compressor: Send + Sync {
 
     /// Compress `x`. Randomized operators draw from `rng`.
     fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed;
+
+    /// Compress `x` into `out`, reusing `out`'s payload buffers when the
+    /// payload family already matches (the arena hot path — zero heap
+    /// traffic in steady state). Implementations must consume `rng` and
+    /// produce bytes exactly as [`Compressor::compress`] would: engines
+    /// mix the two entry points and stay bit-identical. The default
+    /// materializes through `compress` (allocating); operators with
+    /// family-stable output override it.
+    fn compress_into(&self, x: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        *out = self.compress(x, rng);
+    }
 
     /// True if `E Q(x) = x` (needed by the Q1-G / Q2-G baselines).
     fn is_unbiased(&self) -> bool {

@@ -7,6 +7,18 @@ const F32_BITS: u64 = 32;
 /// Shared-seed handshake cost charged to every randomized sparse message.
 const SEED_BITS: u64 = 64;
 
+/// Overwrite `out`'s payload with a dense copy of `x`, reusing the
+/// destination vector when the payload is already dense (arena hot path).
+fn set_dense(out: &mut Compressed, x: &[f64]) {
+    match &mut out.payload {
+        Payload::Dense(v) => {
+            v.clear();
+            v.extend_from_slice(x);
+        }
+        p => *p = Payload::Dense(x.to_vec()),
+    }
+}
+
 /// Exact communication: Q(x) = x, ω = 1. Used by E-G and plain DSGD.
 #[derive(Debug, Clone, Copy)]
 pub struct Identity;
@@ -24,12 +36,16 @@ impl Compressor for Identity {
         1.0
     }
 
-    fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
-        Compressed {
-            dim: x.len(),
-            payload: Payload::Dense(x.to_vec()),
-            wire_bits: F32_BITS * x.len() as u64,
-        }
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, x: &[f64], _rng: &mut Rng, out: &mut Compressed) {
+        out.dim = x.len();
+        out.wire_bits = F32_BITS * x.len() as u64;
+        set_dense(out, x);
     }
 
     fn is_unbiased(&self) -> bool {
@@ -108,19 +124,32 @@ impl Compressor for TopK {
         (self.k.min(d)) as f64 / d as f64
     }
 
-    fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, x: &[f64], _rng: &mut Rng, out: &mut Compressed) {
         let d = x.len();
         let k = self.k.min(d);
         let idx = top_k_indices(x, k);
-        let values: Vec<f64> = idx.iter().map(|&i| x[i]).collect();
         let index_bits = (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64;
-        Compressed {
-            dim: d,
-            payload: Payload::Sparse {
-                indices: idx.into_iter().map(|i| i as u32).collect(),
-                values,
-            },
-            wire_bits: (F32_BITS + index_bits) * k as u64,
+        out.dim = d;
+        out.wire_bits = (F32_BITS + index_bits) * k as u64;
+        match &mut out.payload {
+            Payload::Sparse { indices, values } => {
+                indices.clear();
+                values.clear();
+                indices.extend(idx.iter().map(|&i| i as u32));
+                values.extend(idx.iter().map(|&i| x[i]));
+            }
+            p => {
+                *p = Payload::Sparse {
+                    indices: idx.iter().map(|&i| i as u32).collect(),
+                    values: idx.iter().map(|&i| x[i]).collect(),
+                }
+            }
         }
     }
 }
@@ -238,15 +267,20 @@ impl Compressor for QsgdS {
     }
 
     fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, x: &[f64], rng: &mut Rng, out: &mut Compressed) {
         let d = x.len();
         let norm = crate::linalg::vecops::norm2(x);
         let bits_per_coord = (32 - (self.s.max(2) - 1).leading_zeros()) as u64; // ⌈log2(s)⌉
+        out.dim = d;
         if norm == 0.0 {
-            return Compressed {
-                dim: d,
-                payload: Payload::Zero,
-                wire_bits: super::codec::ZERO_FRAME_BITS,
-            };
+            out.payload = Payload::Zero;
+            out.wire_bits = super::codec::ZERO_FRAME_BITS;
+            return;
         }
         let s = self.s as f64;
         let tau = self.tau(d);
@@ -254,18 +288,29 @@ impl Compressor for QsgdS {
         // Hot path (perf pass, EXPERIMENTS.md §Perf): hoist the 1/norm
         // division out of the loop.
         let inv_norm_s = s / norm;
-        let mut levels = Vec::with_capacity(d);
-        for &xi in x {
-            // the argument is nonnegative, so integer truncation == floor;
-            // cap at i32::MAX so pathological s values can't wrap the sign
-            let mag = ((xi.abs() * inv_norm_s + rng.next_f64()) as u32)
-                .min(i32::MAX as u32) as i32;
-            levels.push(if xi < 0.0 { -mag } else { mag });
-        }
-        Compressed {
-            dim: d,
-            payload: Payload::Quantized { scale, bits_per_coord: bits_per_coord as u8, levels },
-            wire_bits: (1 + bits_per_coord) * d as u64 + F32_BITS,
+        out.wire_bits = (1 + bits_per_coord) * d as u64 + F32_BITS;
+        let mut fill = |levels: &mut Vec<i32>| {
+            for &xi in x {
+                // the argument is nonnegative, so integer truncation ==
+                // floor; cap at i32::MAX so pathological s values can't
+                // wrap the sign
+                let mag =
+                    ((xi.abs() * inv_norm_s + rng.next_f64()) as u32).min(i32::MAX as u32) as i32;
+                levels.push(if xi < 0.0 { -mag } else { mag });
+            }
+        };
+        match &mut out.payload {
+            Payload::Quantized { scale: sc, bits_per_coord: b, levels } => {
+                *sc = scale;
+                *b = bits_per_coord as u8;
+                levels.clear();
+                fill(levels);
+            }
+            p => {
+                let mut levels = Vec::with_capacity(d);
+                fill(&mut levels);
+                *p = Payload::Quantized { scale, bits_per_coord: bits_per_coord as u8, levels };
+            }
         }
     }
 }
@@ -291,19 +336,24 @@ impl Compressor for DropP {
     }
 
     fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, x: &[f64], rng: &mut Rng, out: &mut Compressed) {
         let d = x.len();
+        out.dim = d;
         if rng.bernoulli(self.p) {
-            Compressed {
-                dim: d,
-                payload: Payload::Dense(x.to_vec()),
-                wire_bits: F32_BITS * d as u64,
-            }
+            out.wire_bits = F32_BITS * d as u64;
+            set_dense(out, x);
         } else {
             // A miss still ships a frame so the receiver can stay in
             // lockstep: exactly one byte (the zero frame), and the claim
             // matches the encoder (the old claim of 1 bit was not
             // achievable — there is no sub-byte wire).
-            Compressed { dim: d, payload: Payload::Zero, wire_bits: super::codec::ZERO_FRAME_BITS }
+            out.payload = Payload::Zero;
+            out.wire_bits = super::codec::ZERO_FRAME_BITS;
         }
     }
 }
@@ -333,20 +383,33 @@ impl Compressor for ScaledSign {
         1.0 / d as f64
     }
 
-    fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, x: &[f64], _rng: &mut Rng, out: &mut Compressed) {
         let d = x.len();
         let l1: f64 = x.iter().map(|v| v.abs()).sum();
         let scale = (l1 / d as f64) as f32 as f64;
-        let mut negatives = vec![0u8; d.div_ceil(8)];
-        for (i, &v) in x.iter().enumerate() {
-            if v < 0.0 {
-                negatives[i / 8] |= 1 << (i % 8);
+        let bytes = d.div_ceil(8);
+        out.dim = d;
+        out.wire_bits = d as u64 + F32_BITS;
+        match &mut out.payload {
+            Payload::SignBitmap { scale: sc, negatives } => {
+                *sc = scale;
+                negatives.clear();
+                negatives.resize(bytes, 0);
             }
+            p => *p = Payload::SignBitmap { scale, negatives: vec![0u8; bytes] },
         }
-        Compressed {
-            dim: d,
-            payload: Payload::SignBitmap { scale, negatives },
-            wire_bits: d as u64 + F32_BITS,
+        if let Payload::SignBitmap { negatives, .. } = &mut out.payload {
+            for (i, &v) in x.iter().enumerate() {
+                if v < 0.0 {
+                    negatives[i / 8] |= 1 << (i % 8);
+                }
+            }
         }
     }
 }
@@ -387,8 +450,14 @@ impl Compressor for Rescaled {
     }
 
     fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
-        let mut c = self.inner.compress(x, rng);
-        match &mut c.payload {
+        let mut out = Compressed::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, x: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        self.inner.compress_into(x, rng, out);
+        match &mut out.payload {
             Payload::Zero => {}
             Payload::Dense(v) => v.iter_mut().for_each(|v| *v *= self.factor),
             Payload::Sparse { values, .. } => values.iter_mut().for_each(|v| *v *= self.factor),
@@ -399,7 +468,6 @@ impl Compressor for Rescaled {
             Payload::Quantized { scale, .. } => *scale = (*scale * self.factor) as f32 as f64,
             Payload::SignBitmap { scale, .. } => *scale = (*scale * self.factor) as f32 as f64,
         }
-        c
     }
 
     fn is_unbiased(&self) -> bool {
@@ -636,6 +704,76 @@ mod tests {
             let c = ScaledSign.compress(&x, &mut r);
             assert!(dist_sq(&c.to_dense(), &x) <= n2 * (1.0 - 1.0 / 64.0) + 1e-9);
         }
+    }
+
+    #[test]
+    fn compress_into_is_bit_identical_to_compress() {
+        // The arena path must produce exactly the bytes of the allocating
+        // path — same payload, same wire claim, same RNG consumption —
+        // whether the destination starts empty, holds a foreign payload
+        // family, or is reused across calls. Debug formatting is exact
+        // structural equality here.
+        let mut x = vec![0.0; 37];
+        rng().fill_gaussian(&mut x);
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(TopK { k: 5 }),
+            Box::new(QsgdS { s: 16 }),
+            Box::new(DropP { p: 0.5 }),
+            Box::new(ScaledSign),
+            Box::new(Rescaled::new(QsgdS { s: 4 }, 1.7)),
+            Box::new(RandK { k: 5 }), // default compress_into path
+        ];
+        for op in &ops {
+            for round in 0..3 {
+                let seed = 1000 + round;
+                let reference = op.compress(&x, &mut Rng::new(seed));
+                // polluted destination: a foreign family with live buffers
+                let mut out = ScaledSign.compress(&x, &mut Rng::new(seed));
+                op.compress_into(&x, &mut Rng::new(seed), &mut out);
+                assert_eq!(
+                    format!("{reference:?}"),
+                    format!("{out:?}"),
+                    "{}: fresh-into differs",
+                    op.name()
+                );
+                // reused destination: same family, buffers recycled
+                op.compress_into(&x, &mut Rng::new(seed), &mut out);
+                assert_eq!(
+                    format!("{reference:?}"),
+                    format!("{out:?}"),
+                    "{}: reuse-into differs",
+                    op.name()
+                );
+                // rng advanced identically on both paths
+                let mut ra = Rng::new(seed);
+                let mut rb = Rng::new(seed);
+                let _ = op.compress(&x, &mut ra);
+                op.compress_into(&x, &mut rb, &mut Compressed::empty());
+                assert_eq!(ra.next_u64(), rb.next_u64(), "{}: rng drift", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn clone_from_reuses_buffers_and_matches_clone() {
+        let mut x = vec![0.0; 29];
+        rng().fill_gaussian(&mut x);
+        let src = QsgdS { s: 16 }.compress(&x, &mut rng());
+        let mut dst = QsgdS { s: 16 }.compress(&x, &mut Rng::new(7));
+        let cap_before = match &dst.payload {
+            Payload::Quantized { levels, .. } => levels.capacity(),
+            _ => unreachable!(),
+        };
+        dst.clone_from(&src);
+        assert_eq!(format!("{src:?}"), format!("{dst:?}"));
+        if let Payload::Quantized { levels, .. } = &dst.payload {
+            assert_eq!(levels.capacity(), cap_before, "clone_from reallocated");
+        }
+        // cross-family falls back to a plain clone
+        let mut other = ScaledSign.compress(&x, &mut rng());
+        other.clone_from(&src);
+        assert_eq!(format!("{src:?}"), format!("{other:?}"));
     }
 
     #[test]

@@ -29,8 +29,12 @@ pub struct ChocoNode {
     weights: LocalWeights,
     gamma: f64,
     op: Box<dyn Compressor>,
-    /// Own broadcast of the current round (applied in end_round).
-    pending_own: Option<Compressed>,
+    /// Own broadcast of the current round (applied in end_round). The
+    /// buffer persists across rounds — compressed in place each round so
+    /// steady-state rounds never touch the allocator.
+    own_msg: Compressed,
+    /// Guards against end_round without a matching begin_round.
+    own_fresh: bool,
     /// Reusable scratch (perf pass: avoids two d-vector allocations per
     /// node per round).
     diff_buf: Vec<f64>,
@@ -49,7 +53,8 @@ impl ChocoNode {
             weights,
             gamma,
             op: op.clone_box(),
-            pending_own: None,
+            own_msg: Compressed::empty(),
+            own_fresh: false,
             diff_buf: vec![0.0; d],
             accum_buf: vec![0.0; d],
         }
@@ -69,12 +74,18 @@ impl GossipNode for ChocoNode {
         self.x.len()
     }
 
-    fn begin_round(&mut self, _t: usize, rng: &mut Rng) -> Compressed {
+    fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.begin_round_into(t, rng, &mut out);
+        out
+    }
+
+    fn begin_round_into(&mut self, _t: usize, rng: &mut Rng, out: &mut Compressed) {
         self.diff_buf.copy_from_slice(&self.x);
         crate::linalg::vecops::axpy(-1.0, &self.xhat_self, &mut self.diff_buf);
-        let msg = self.op.compress(&self.diff_buf, rng);
-        self.pending_own = Some(msg.clone());
-        msg
+        self.op.compress_into(&self.diff_buf, rng, &mut self.own_msg);
+        self.own_fresh = true;
+        out.clone_from(&self.own_msg);
     }
 
     fn receive(&mut self, from: usize, msg: &Compressed) {
@@ -84,8 +95,9 @@ impl GossipNode for ChocoNode {
 
     fn end_round(&mut self, _t: usize) {
         // x̂ᵢ ← x̂ᵢ + qᵢ (own slot).
-        let own = self.pending_own.take().expect("end_round before begin_round");
-        own.add_into(1.0, &mut self.xhat_self);
+        assert!(self.own_fresh, "end_round before begin_round");
+        self.own_fresh = false;
+        self.own_msg.add_into(1.0, &mut self.xhat_self);
         // xᵢ ← xᵢ + γ Σⱼ w_ij (x̂ⱼ − x̂ᵢ); the self term is zero.
         crate::linalg::vecops::zero(&mut self.accum_buf);
         let mut wsum = 0.0;

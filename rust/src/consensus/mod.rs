@@ -34,6 +34,16 @@ pub trait GossipNode: Send {
     /// Compute the message this node broadcasts in round `t`.
     fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed;
 
+    /// Like [`GossipNode::begin_round`], but writes the round-`t` message
+    /// into `out`, reusing `out`'s payload buffers when the payload family
+    /// is stable across rounds (the sharded engine's arena hot path).
+    /// Overrides must consume `rng` identically to `begin_round` so the
+    /// two entry points stay bit-for-bit interchangeable; the default
+    /// materializes through `begin_round` (allocating).
+    fn begin_round_into(&mut self, t: usize, rng: &mut Rng, out: &mut Compressed) {
+        *out = self.begin_round(t, rng);
+    }
+
     /// Deliver neighbor `from`'s round-`t` broadcast.
     fn receive(&mut self, from: usize, msg: &Compressed);
 

@@ -10,9 +10,14 @@
 //!   (latency/bandwidth/loss); the engine behind every figure driver and
 //!   the trajectory oracle for the other two;
 //! * [`sharded::ShardedEngine`] — the large-n runtime: partitions the
-//!   vertex set across a pool of scoped worker threads with
-//!   double-buffered message slots and one barrier per round; runs
-//!   10k+-node graphs at full core utilization;
+//!   vertex set across a *persistent parked worker pool* (threads spawned
+//!   once per engine, woken by a condvar epoch handshake per
+//!   `run_rounds`/`step` call) with double-buffered per-slot message
+//!   arenas and one barrier per round; an edge-cut-aware BFS relabeling
+//!   pre-pass keeps each worker's deliveries shard-local even on
+//!   Erdős–Rényi labelings. Steady-state rounds perform zero heap
+//!   allocations (`tests/zero_alloc.rs`); runs 10⁵-node graphs at full
+//!   core utilization;
 //! * [`actor`] — one thread per node with per-edge FIFO channels and real
 //!   serialized messages; proves the node implementations work as actual
 //!   distributed actors. Guarded by [`ActorConfig::max_threads`] so it
@@ -37,7 +42,23 @@
 //! experiments belong on the engines. The differential harness in
 //! `tests/engine_equivalence.rs` enforces all of this — including the
 //! event engine's zero-latency limit — for CHOCO-GOSSIP and CHOCO-SGD on
-//! ring and torus topologies with shard counts {1, 2, 7, n}.
+//! ring, torus, and (relabeled) Erdős–Rényi topologies with shard counts
+//! {1, 2, 7, n}.
+//!
+//! Two mechanisms inside the sharded engine deserve an explicit
+//! determinism statement, because they exist purely for speed:
+//!
+//! * **relabeling is a pure pre-pass** — it permutes which worker drives
+//!   which vertex and where its broadcast slot lives, never what any node
+//!   computes. RNG streams, link-drop decisions, and the per-receiver
+//!   delivery order (ascending *original* neighbor id — the float
+//!   accumulation order) all key on original vertex ids;
+//! * **arenas never change observable payload bytes** —
+//!   [`crate::consensus::GossipNode::begin_round_into`] must write
+//!   exactly the bytes `begin_round` returns while consuming the RNG
+//!   identically; compressors uphold the same contract for
+//!   `compress_into` vs `compress`, and both are pinned by unit tests at
+//!   each layer.
 
 pub mod actor;
 pub mod events;

@@ -44,8 +44,14 @@ pub struct RoundAcct {
     /// `measure_wire`).
     pub encoded_bits: u64,
     /// Largest single-message `wire_bits` seen on any link this round;
-    /// `None` when no message moved. Determines the BSP round time.
+    /// `None` when no message moved. Determines the BSP round time when
+    /// no measured value is available.
     pub max_link_bits: Option<u64>,
+    /// Largest *measured* codec-frame bits placed on any link this round
+    /// (only filled under `measure_wire`, by [`RoundAcct::note_sender_encoded`]).
+    /// When present it supersedes `max_link_bits` for the round time: the
+    /// slowest link ships real frames, not idealized claims.
+    pub max_link_encoded_bits: Option<u64>,
 }
 
 impl RoundAcct {
@@ -55,23 +61,44 @@ impl RoundAcct {
         self.bits += other.bits;
         self.messages += other.messages;
         self.encoded_bits += other.encoded_bits;
-        self.max_link_bits = match (self.max_link_bits, other.max_link_bits) {
-            (Some(a), Some(b)) => Some(a.max(b)),
-            (a, None) => a,
-            (None, b) => b,
-        };
+        self.max_link_bits = merge_max(self.max_link_bits, other.max_link_bits);
+        self.max_link_encoded_bits =
+            merge_max(self.max_link_encoded_bits, other.max_link_encoded_bits);
+    }
+
+    /// Sender-side wire measurement: encode `msg`'s codec frame once,
+    /// charge it to every out-edge, and track the largest measured frame
+    /// for the round-time bound. An isolated vertex (degree 0) places
+    /// nothing on any link and contributes to neither figure.
+    pub fn note_sender_encoded(&mut self, msg: &Compressed, degree: usize) {
+        let frame = crate::compress::codec::encoded_bits(msg);
+        self.encoded_bits += frame * degree as u64;
+        if degree > 0 {
+            self.max_link_encoded_bits = merge_max(self.max_link_encoded_bits, Some(frame));
+        }
     }
 
     /// Commit one merged round into the engine-level [`Accounting`]:
     /// counters add up, and the round's simulated duration is the transfer
     /// time of the largest message (BSP: the slowest link gates the round).
+    /// Under `measure_wire` the measured codec frame gates the round;
+    /// without measurement the idealized `wire_bits` claim is the best
+    /// estimate available.
     pub fn commit(&self, model: &LinkModel, acct: &mut Accounting) {
         acct.bits += self.bits;
         acct.messages += self.messages;
         acct.encoded_bits += self.encoded_bits;
-        if let Some(mb) = self.max_link_bits {
+        if let Some(mb) = self.max_link_encoded_bits.or(self.max_link_bits) {
             acct.sim_time_s += model.transfer_time(mb);
         }
+    }
+}
+
+fn merge_max(a: Option<u64>, b: Option<u64>) -> Option<u64> {
+    match (a, b) {
+        (Some(a), Some(b)) => Some(a.max(b)),
+        (a, None) => a,
+        (None, b) => b,
     }
 }
 
@@ -80,6 +107,15 @@ impl RoundAcct {
 #[inline]
 pub fn broadcast_one(node: &mut dyn GossipNode, t: usize, rng: &mut Rng) -> Compressed {
     node.begin_round(t, rng)
+}
+
+/// Phase 1 for one node, written into an arena slot: identical bytes and
+/// RNG consumption to [`broadcast_one`], but the slot's payload buffers
+/// are reused when the payload family is round-stable (the sharded
+/// engine's zero-alloc hot path).
+#[inline]
+pub fn broadcast_into(node: &mut dyn GossipNode, t: usize, rng: &mut Rng, out: &mut Compressed) {
+    node.begin_round_into(t, rng, out);
 }
 
 /// Phase 1 for a slice of nodes (the serial engine's whole population, or
@@ -206,9 +242,21 @@ mod tests {
 
     #[test]
     fn round_acct_merge_is_order_independent() {
-        let a = RoundAcct { bits: 10, messages: 2, encoded_bits: 12, max_link_bits: Some(7) };
-        let b = RoundAcct { bits: 5, messages: 1, encoded_bits: 6, max_link_bits: Some(9) };
-        let c = RoundAcct { bits: 0, messages: 0, encoded_bits: 0, max_link_bits: None };
+        let a = RoundAcct {
+            bits: 10,
+            messages: 2,
+            encoded_bits: 12,
+            max_link_bits: Some(7),
+            max_link_encoded_bits: Some(20),
+        };
+        let b = RoundAcct {
+            bits: 5,
+            messages: 1,
+            encoded_bits: 6,
+            max_link_bits: Some(9),
+            max_link_encoded_bits: None,
+        };
+        let c = RoundAcct::default();
         let mut ab = a;
         ab.merge(&b);
         ab.merge(&c);
@@ -220,12 +268,19 @@ mod tests {
         assert_eq!(ab.encoded_bits, cb.encoded_bits);
         assert_eq!(ab.max_link_bits, cb.max_link_bits);
         assert_eq!(ab.max_link_bits, Some(9));
+        assert_eq!(ab.max_link_encoded_bits, cb.max_link_encoded_bits);
+        assert_eq!(ab.max_link_encoded_bits, Some(20));
     }
 
     #[test]
     fn commit_uses_slowest_link_for_round_time() {
         let model = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6, drop_prob: 0.0 };
-        let ra = RoundAcct { bits: 1500, messages: 2, encoded_bits: 0, max_link_bits: Some(1000) };
+        let ra = RoundAcct {
+            bits: 1500,
+            messages: 2,
+            max_link_bits: Some(1000),
+            ..Default::default()
+        };
         let mut acct = Accounting::default();
         ra.commit(&model, &mut acct);
         assert_eq!(acct.bits, 1500);
@@ -235,6 +290,44 @@ mod tests {
         let mut empty = Accounting::default();
         RoundAcct::default().commit(&model, &mut empty);
         assert_eq!(empty.sim_time_s, 0.0);
+    }
+
+    #[test]
+    fn commit_prefers_measured_link_time_under_measure_wire() {
+        // Satellite bugfix: with measure_wire on, the round time must come
+        // from the measured codec frame, not the idealized wire_bits claim.
+        let model = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6, drop_prob: 0.0 };
+        // idealized-only round (measure_wire off): claimed max gates
+        let idealized = RoundAcct { max_link_bits: Some(1000), ..Default::default() };
+        let mut acct = Accounting::default();
+        idealized.commit(&model, &mut acct);
+        assert!((acct.sim_time_s - (1e-3 + 1000.0 / 1e6)).abs() < 1e-12);
+        // measured round (measure_wire on): codec frame gates, even though
+        // the idealized claim is still tracked alongside
+        let measured = RoundAcct {
+            max_link_bits: Some(1000),
+            max_link_encoded_bits: Some(1600),
+            ..Default::default()
+        };
+        let mut acct = Accounting::default();
+        measured.commit(&model, &mut acct);
+        assert!((acct.sim_time_s - (1e-3 + 1600.0 / 1e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn note_sender_encoded_tracks_measured_max() {
+        let msg = Compressed { dim: 4, payload: Payload::Dense(vec![1.0; 4]), wire_bits: 128 };
+        let frame = crate::compress::codec::encoded_bits(&msg);
+        assert!(frame > 0);
+        let mut ra = RoundAcct::default();
+        ra.note_sender_encoded(&msg, 3);
+        assert_eq!(ra.encoded_bits, frame * 3);
+        assert_eq!(ra.max_link_encoded_bits, Some(frame));
+        // an isolated vertex encodes nothing onto any link
+        let mut lone = RoundAcct::default();
+        lone.note_sender_encoded(&msg, 0);
+        assert_eq!(lone.encoded_bits, 0);
+        assert_eq!(lone.max_link_encoded_bits, None);
     }
 
     #[test]

@@ -80,7 +80,7 @@ impl<'g> RoundEngine<'g> {
         let mut ra = RoundAcct::default();
         if self.measure_wire {
             for (i, msg) in msgs.iter().enumerate() {
-                ra.encoded_bits += phases::sender_encoded_bits(msg, self.graph.degree(i));
+                ra.note_sender_encoded(msg, self.graph.degree(i));
             }
         }
         for (i, node) in self.nodes.iter_mut().enumerate() {
@@ -235,6 +235,37 @@ mod tests {
             RoundEngine::new(make_nodes(&scheme, &x0, &lw), &g, 21, LinkModel::default());
         plain.step();
         assert_eq!(plain.acct.encoded_bits, 0);
+    }
+
+    #[test]
+    fn measured_round_time_gates_on_codec_frames() {
+        // Satellite bugfix pin: under measure_wire the BSP round time is
+        // the transfer time of the largest *measured* codec frame. Frames
+        // carry a fixed header on top of the idealized claim, so the
+        // measured clock must run strictly ahead of the idealized one.
+        let g = Graph::ring(5);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let (x0, _) = x0s(5, 64, 8);
+        let scheme = Scheme::Choco { gamma: 0.2, op: Box::new(crate::compress::QsgdS { s: 16 }) };
+        let mut measured =
+            RoundEngine::new(make_nodes(&scheme, &x0, &lw), &g, 21, LinkModel::default());
+        measured.measure_wire = true;
+        let mut plain =
+            RoundEngine::new(make_nodes(&scheme, &x0, &lw), &g, 21, LinkModel::default());
+        for _ in 0..5 {
+            measured.step();
+            plain.step();
+        }
+        // identical trajectory and idealized counters either way
+        assert_eq!(measured.acct.bits, plain.acct.bits);
+        assert_eq!(measured.acct.messages, plain.acct.messages);
+        assert!(
+            measured.acct.sim_time_s > plain.acct.sim_time_s,
+            "measured {} vs idealized {}",
+            measured.acct.sim_time_s,
+            plain.acct.sim_time_s
+        );
     }
 
     #[test]

@@ -1,52 +1,74 @@
-//! Sharded worker-pool BSP engine for large-n gossip.
+//! Sharded persistent-pool BSP engine for large-n gossip.
 //!
 //! The serial [`super::round::RoundEngine`] steps nodes one at a time and
 //! the [`super::actor`] runtime spawns one OS thread per node — neither
 //! reaches the large-n regimes where the paper's O(1/(nT)) rate pays off.
-//! This engine partitions the vertex set into contiguous shards and runs
-//! each shard on a scoped worker thread, while remaining **bit-identical**
-//! to the serial engine for every shard count:
+//! This engine partitions the vertex set into contiguous *schedule
+//! chunks* and runs each chunk on a long-lived parked worker thread,
+//! while remaining **bit-identical** to the serial engine for every shard
+//! count. Three mechanisms keep per-round overhead O(1):
 //!
-//! * each node keeps its own RNG stream `Rng::for_stream(seed, i)`,
-//!   exactly as the serial engine seeds it, so broadcast randomness does
-//!   not depend on which worker drives the node;
-//! * broadcasts land in double-buffered per-node message slots (no mpsc
-//!   channels, no per-message allocation beyond the message itself); a
-//!   [`Barrier`] separates the broadcast phase from the update phase, and
-//!   the two slot banks alternate so one barrier per round suffices — a
-//!   worker writing round `t+1` into bank `(t+1) % 2` can never race a
-//!   straggler still reading bank `t % 2`, and nobody rewrites bank
-//!   `t % 2` until the next barrier has proven all its readers done;
-//! * link-loss decisions key on `(round, edge)`
+//! * **parked worker pool** — threads are spawned once per engine and
+//!   reused by every `step()`/`run_rounds()` call. Dispatch is a
+//!   mutex/condvar epoch handshake (no channels: channel sends allocate),
+//!   so `run_traced`'s `log_every` chunking and single-round `step()`
+//!   calls pay no spin-up;
+//! * **slot arenas** — broadcasts land in double-buffered per-slot
+//!   message buffers that persist across rounds and calls. Nodes compress
+//!   into them in place ([`GossipNode::begin_round_into`]), and payload
+//!   families are round-stable for every compressor, so steady-state
+//!   rounds perform zero heap allocations (pinned by
+//!   `tests/zero_alloc.rs`);
+//! * **edge-cut-aware relabeling** — a BFS pre-pass
+//!   ([`crate::topology::relabel::schedule_order`]) reorders the schedule
+//!   when that cuts fewer edges than the natural vertex order, so
+//!   Erdős–Rényi labelings stop being pessimal for contiguous chunks.
+//!
+//! Determinism contract (pinned by `tests/engine_equivalence.rs` for
+//! shard counts {1, 2, 7, n} on ring/torus/ER, relabeled runs included):
+//!
+//! * each node keeps its own RNG stream `Rng::for_stream(seed, i)` keyed
+//!   by the **original** vertex id, exactly as the serial engine seeds
+//!   it, so broadcast randomness does not depend on scheduling;
+//! * relabeling is a pure pre-pass: it permutes which worker drives which
+//!   vertex and where its slot lives, never what any node computes —
+//!   deliveries iterate in-edges in ascending *original* neighbor id (the
+//!   serial accumulation order) via a permutation-aware CSR view
+//!   ([`crate::topology::ShardView`]);
+//! * arenas never change observable payload bytes: `begin_round_into`
+//!   writes exactly the bytes `begin_round` returns;
+//! * a [`Barrier`] separates the broadcast phase from the update phase,
+//!   and the two slot banks alternate on the absolute round parity, so
+//!   one barrier per round suffices — a worker writing round `t+1` into
+//!   bank `(t+1) % 2` can never race a straggler still reading bank
+//!   `t % 2`, and nobody rewrites bank `t % 2` until the next barrier
+//!   has proven all its readers done;
+//! * link-loss decisions key on `(round, edge)` in original ids
 //!   ([`super::network::NetworkSim::dropped`]), so shards evaluate their
 //!   own in-edges independently yet agree with the serial order;
-//! * accounting accumulates per shard in [`RoundAcct`] and merges with
+//! * accounting accumulates per worker in [`RoundAcct`] and merges with
 //!   order-independent operations only, so `Accounting.bits`,
 //!   `messages`, `encoded_bits` and `sim_time_s` match the serial engine
 //!   exactly.
-//!
-//! The differential harness (`tests/engine_equivalence.rs`) pins all of
-//! the above for shard counts {1, 2, 7, n}; `benches/bench_runtime.rs`
-//! reports the rounds/sec scaling against the serial engine at n up to
-//! 16384.
 
 use super::metrics::{Accounting, Trace};
 use super::network::{LinkModel, NetworkSim};
 use super::phases::{self, RoundAcct};
 use super::round::{MetricFn, RoundConfig};
-use crate::compress::{Compressed, Payload};
+use crate::compress::Compressed;
 use crate::consensus::GossipNode;
-use crate::topology::Graph;
+use crate::topology::{relabel, Graph, ShardView};
 use crate::util::rng::Rng;
 use std::cell::UnsafeCell;
-use std::sync::Barrier;
+use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard};
 
-/// One bank of per-node broadcast slots.
+/// One bank of per-slot broadcast arenas (slot `p` holds the current
+/// message of the vertex scheduled at position `p`).
 ///
-/// Safety protocol (upheld by [`ShardedEngine::run_rounds`]): during a
-/// broadcast phase each worker writes only the slots of its own vertices;
-/// a barrier separates all writes from all reads; the bank is not written
-/// again until a subsequent barrier has retired every reader.
+/// Safety protocol (upheld by the worker loop): during a broadcast phase
+/// each worker writes only the slots of its own schedule range; a barrier
+/// separates all writes from all reads; the bank is not written again
+/// until a subsequent barrier has retired every reader.
 struct SlotBank {
     slots: Vec<UnsafeCell<Compressed>>,
 }
@@ -57,30 +79,284 @@ unsafe impl Sync for SlotBank {}
 
 impl SlotBank {
     fn new(n: usize) -> Self {
-        Self {
-            slots: (0..n)
-                .map(|_| {
-                    UnsafeCell::new(Compressed { dim: 0, payload: Payload::Zero, wire_bits: 0 })
-                })
-                .collect(),
-        }
+        Self { slots: (0..n).map(|_| UnsafeCell::new(Compressed::empty())).collect() }
     }
 
-    /// Safety: caller must be the unique writer of index `i` this phase,
+    /// Safety: caller must be the unique writer of slot `p` this phase,
     /// with no concurrent readers (readers wait at the phase barrier).
-    unsafe fn write(&self, i: usize, msg: Compressed) {
-        *self.slots[i].get() = msg;
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slot_mut(&self, p: usize) -> &mut Compressed {
+        &mut *self.slots[p].get()
     }
 
     /// Safety: caller must be past the barrier that retired all writers of
     /// this bank, with no writer active until the next barrier.
-    unsafe fn read(&self, i: usize) -> &Compressed {
-        &*self.slots[i].get()
+    unsafe fn read(&self, p: usize) -> &Compressed {
+        &*self.slots[p].get()
     }
 }
 
-/// Worker-pool BSP engine: same API surface as [`super::round::RoundEngine`]
-/// (step / run / iterates / accounting), same trajectories bit-for-bit.
+/// Vertex partition for `n` nodes under a requested shard count:
+/// `(chunk, workers)` — contiguous schedule chunks of `chunk` slots, one
+/// worker per chunk. Invariants (property-tested below): for n ≥ 1,
+/// `workers ≤ min(shards.max(1), n)`, `chunk × workers ≥ n`, and every
+/// worker's range is non-empty; n = 0 uses no workers at all.
+fn partition_for(shards: usize, n: usize) -> (usize, usize) {
+    if n == 0 {
+        return (0, 0);
+    }
+    let shards = shards.max(1).min(n);
+    let chunk = n.div_ceil(shards);
+    (chunk, n.div_ceil(chunk))
+}
+
+/// Raw-pointer view of one `run_rounds` job, shared with the parked
+/// workers. Every pointer stays valid — and the slot/shard aliasing
+/// protocol holds for `nodes`/`banks`/`accts` — until all workers post
+/// completion for the job ([`WorkerPool::run`] blocks on exactly that).
+struct RunCtx {
+    nodes: *mut Box<dyn GossipNode>,
+    rngs: *mut Rng,
+    order: *const usize,
+    n: usize,
+    view: *const ShardView,
+    graph: *const Graph,
+    net: *const NetworkSim,
+    banks: *const [SlotBank; 2],
+    accts: *mut RoundAcct,
+    k: usize,
+    t0: usize,
+    measure_wire: bool,
+}
+
+/// Job mailbox: a bumped epoch tells parked workers a new job is
+/// published; `ctx` is only dereferenced under a fresh epoch.
+struct JobCell {
+    epoch: u64,
+    shutdown: bool,
+    ctx: *const RunCtx,
+}
+
+// Safety: the raw ctx pointer is only dereferenced by workers between job
+// publication and the completion handshake, while the dispatching thread
+// keeps the pointee alive (`WorkerPool::run` blocks until every worker
+// reports done).
+unsafe impl Send for JobCell {}
+
+#[derive(Default)]
+struct DoneCell {
+    finished: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct PoolState {
+    job: Mutex<JobCell>,
+    job_cv: Condvar,
+    done: Mutex<DoneCell>,
+    done_cv: Condvar,
+    /// One slot per worker; exactly one wait per worker per round.
+    barrier: Barrier,
+}
+
+/// Long-lived parked worker pool: threads are spawned once per
+/// [`ShardedEngine`] and reused across every `step()`/`run_rounds()`
+/// call, parking on a condvar between jobs.
+struct WorkerPool {
+    state: Arc<PoolState>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A worker panic is caught before it can poison anything, but a
+    // panicking dispatch path must still shut down cleanly in Drop.
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn wait_on<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked threads; worker `w` owns schedule slots
+    /// `[w·chunk, min((w+1)·chunk, n))` for the lifetime of the pool.
+    fn spawn(chunk: usize, workers: usize, n: usize) -> Self {
+        let state = Arc::new(PoolState {
+            job: Mutex::new(JobCell { epoch: 0, shutdown: false, ctx: std::ptr::null() }),
+            job_cv: Condvar::new(),
+            done: Mutex::new(DoneCell::default()),
+            done_cv: Condvar::new(),
+            barrier: Barrier::new(workers.max(1)),
+        });
+        let threads = (0..workers)
+            .map(|w| {
+                let state = Arc::clone(&state);
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(n);
+                std::thread::spawn(move || worker_loop(&state, w, lo, hi))
+            })
+            .collect();
+        Self { state, threads }
+    }
+
+    fn workers(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Publish `ctx` to the pool and block until every worker finishes
+    /// the job. Returns the first panic payload caught, if any.
+    ///
+    /// Safety: everything `ctx` points to must stay valid for the whole
+    /// call, and the slot/shard protocol (disjoint writes,
+    /// barrier-separated reads) must hold for its `nodes`/`banks`/`accts`
+    /// pointers.
+    unsafe fn run(&self, ctx: &RunCtx) -> Option<Box<dyn std::any::Any + Send>> {
+        if self.threads.is_empty() {
+            return None;
+        }
+        {
+            let mut done = lock(&self.state.done);
+            done.finished = 0;
+            done.panic = None;
+        }
+        {
+            let mut job = lock(&self.state.job);
+            job.epoch += 1;
+            job.ctx = ctx as *const RunCtx;
+            self.state.job_cv.notify_all();
+        }
+        let mut done = lock(&self.state.done);
+        while done.finished < self.threads.len() {
+            done = wait_on(&self.state.done_cv, done);
+        }
+        done.panic.take()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut job = lock(&self.state.job);
+            job.shutdown = true;
+            self.state.job_cv.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Body of one parked worker: wait for a job epoch, run this worker's
+/// schedule range through all `k` rounds, report completion (or the
+/// caught panic payload), park again. The barrier protocol matches the
+/// scoped-thread predecessor: exactly one wait per round, and a
+/// panicking worker pays its remaining waits so siblings never deadlock.
+fn worker_loop(state: &PoolState, w: usize, lo: usize, hi: usize) {
+    let mut seen = 0u64;
+    loop {
+        let ctx_ptr = {
+            let mut job = lock(&state.job);
+            while !job.shutdown && job.epoch == seen {
+                job = wait_on(&state.job_cv, job);
+            }
+            if job.shutdown {
+                return;
+            }
+            seen = job.epoch;
+            job.ctx
+        };
+        // Safety: the dispatching thread keeps the ctx (and everything it
+        // points to) alive until this worker bumps `finished` below.
+        let ctx = unsafe { &*ctx_ptr };
+        let waited = std::cell::Cell::new(0usize);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_shard(ctx, &state.barrier, w, lo, hi, &waited);
+        }));
+        if result.is_err() {
+            // Siblings finish their k rounds against stale (but valid)
+            // slot contents; the dispatcher discards the job when the
+            // panic resurfaces there.
+            for _ in waited.get()..ctx.k {
+                state.barrier.wait();
+            }
+        }
+        let mut done = lock(&state.done);
+        done.finished += 1;
+        if let Err(payload) = result {
+            done.panic.get_or_insert(payload);
+        }
+        state.done_cv.notify_all();
+    }
+}
+
+/// Run one worker's schedule slots `[lo, hi)` through all `k` rounds of
+/// a job. `waited` counts barrier waits so the panic path can settle the
+/// remainder.
+fn run_shard(
+    ctx: &RunCtx,
+    barrier: &Barrier,
+    w: usize,
+    lo: usize,
+    hi: usize,
+    waited: &std::cell::Cell<usize>,
+) {
+    // Safety: shared read-only state for the duration of the job.
+    let graph = unsafe { &*ctx.graph };
+    let net = unsafe { &*ctx.net };
+    let view = unsafe { &*ctx.view };
+    let banks = unsafe { &*ctx.banks };
+    let order = unsafe { std::slice::from_raw_parts(ctx.order, ctx.n) };
+    for r in 0..ctx.k {
+        let t = ctx.t0 + r;
+        // Banks alternate on the *absolute* round parity: they persist
+        // across calls, so `step(); step();` and `run_rounds(2)` must
+        // pick the same bank sequence.
+        let bank = &banks[t % 2];
+        let mut ra = RoundAcct::default();
+        // Phase 1: broadcast this worker's schedule slots. Slot p belongs
+        // to original vertex order[p]; RNG streams and degrees key on the
+        // original id, so relabeling never changes the bytes produced.
+        for p in lo..hi {
+            let i = order[p];
+            // Safety: vertex i appears exactly once in the schedule and
+            // this worker owns slots [lo, hi) exclusively; the dispatcher
+            // does not touch nodes/rngs while the job is live.
+            let node = unsafe { &mut *ctx.nodes.add(i) };
+            let rng = unsafe { &mut *ctx.rngs.add(i) };
+            // Safety: unique writer of slot p this phase; readers are
+            // held at the barrier below.
+            let slot = unsafe { bank.slot_mut(p) };
+            phases::broadcast_into(node.as_mut(), t, rng, slot);
+            if ctx.measure_wire {
+                ra.note_sender_encoded(slot, graph.degree(i));
+            }
+        }
+        barrier.wait();
+        waited.set(waited.get() + 1);
+        // Phase 2+3: deliver in-edges and update. In-edges arrive in
+        // ascending *original* neighbor id — the serial accumulation
+        // order — while slot lookups stay schedule-local. Reads of this
+        // bank are safe until the *other* bank's next barrier retires
+        // them (double buffering).
+        for p in lo..hi {
+            let i = order[p];
+            let node = unsafe { &mut *ctx.nodes.add(i) };
+            for &(j, jslot) in view.in_edges(p) {
+                // Safety: all writers of `bank` passed the barrier; no
+                // writer touches it again before the next barrier.
+                let msg = unsafe { bank.read(jslot as usize) };
+                phases::deliver_edge(node.as_mut(), net, t, j as usize, i, msg, &mut ra);
+            }
+            phases::update_one(node.as_mut(), t);
+        }
+        // Safety: this worker is the unique writer of row w of the
+        // workers × k accounting grid.
+        unsafe { *ctx.accts.add(w * ctx.k + r) = ra };
+    }
+}
+
+/// Persistent-pool BSP engine: same API surface as
+/// [`super::round::RoundEngine`] (step / run / iterates / accounting),
+/// same trajectories bit-for-bit.
 pub struct ShardedEngine<'g> {
     pub nodes: Vec<Box<dyn GossipNode>>,
     pub graph: &'g Graph,
@@ -89,10 +365,23 @@ pub struct ShardedEngine<'g> {
     /// codec and measured frame sizes accumulate in `acct.encoded_bits`
     /// next to the idealized `acct.bits`, exactly as in the serial engine.
     pub measure_wire: bool,
-    shards: usize,
     rngs: Vec<Rng>,
     net: NetworkSim,
     t: usize,
+    /// Schedule permutation: slot `p` is original vertex `order[p]`
+    /// (edge-cut-aware relabel pre-pass; identity when BFS cuts no fewer
+    /// edges than the natural order).
+    order: Vec<usize>,
+    /// Permutation-aware adjacency: per slot, (original neighbor,
+    /// neighbor slot) in-edge pairs.
+    view: ShardView,
+    /// Persistent double-buffered broadcast arenas, reused across every
+    /// round of every call.
+    banks: [SlotBank; 2],
+    /// Persistent workers × k accounting grid (grown only when a call
+    /// asks for more rounds than any call before it).
+    accts: Vec<RoundAcct>,
+    pool: WorkerPool,
 }
 
 impl<'g> ShardedEngine<'g> {
@@ -121,160 +410,90 @@ impl<'g> ShardedEngine<'g> {
         } else {
             shards
         };
-        let rngs = (0..nodes.len()).map(|i| Rng::for_stream(seed, i as u64)).collect();
+        let n = nodes.len();
+        let (chunk, workers) = partition_for(shards, n);
+        let order = relabel::schedule_order(graph, chunk.max(1));
+        let pos = relabel::inverse(&order);
+        let view = ShardView::build(graph, &order, &pos);
+        let rngs = (0..n).map(|i| Rng::for_stream(seed, i as u64)).collect();
         Self {
             nodes,
             graph,
             acct: Accounting::default(),
             measure_wire: false,
-            shards,
             rngs,
             net: NetworkSim::new(link, seed),
             t: 0,
+            order,
+            view,
+            banks: [SlotBank::new(n), SlotBank::new(n)],
+            accts: Vec::new(),
+            pool: WorkerPool::spawn(chunk, workers, n),
         }
     }
 
-    /// Vertex partition for `n` nodes under the configured shard count:
-    /// `(chunk, workers)` — contiguous chunks of `chunk` vertices, one
-    /// worker per chunk. Single source of truth for `run_rounds` and
-    /// [`Self::worker_count`].
-    fn partition(&self, n: usize) -> (usize, usize) {
-        let shards = self.shards.max(1).min(n);
-        let chunk = n.div_ceil(shards);
-        (chunk, n.div_ceil(chunk))
-    }
-
-    /// Number of worker threads a round will actually use (the requested
-    /// shard count clamped to the node count).
+    /// Number of worker threads in the persistent pool (the requested
+    /// shard count clamped to the node count) — exactly the threads
+    /// every `run_rounds` call uses.
     pub fn worker_count(&self) -> usize {
-        let n = self.nodes.len();
-        if n == 0 {
-            return 0;
-        }
-        self.partition(n).1
+        self.pool.workers()
     }
 
-    /// One BSP round. Returns the bits shipped this round.
+    /// One BSP round — a single-round dispatch on the persistent pool,
+    /// no per-call spin-up. Returns the bits shipped this round.
     pub fn step(&mut self) -> u64 {
         let before = self.acct.bits;
         self.run_rounds(1);
         self.acct.bits - before
     }
 
-    /// Run `k` BSP rounds on the worker pool: one scoped thread per shard,
-    /// persistent across all `k` rounds, one barrier per round.
+    /// Run `k` BSP rounds on the persistent pool: one parked worker per
+    /// schedule chunk, one barrier per round, zero steady-state
+    /// allocations.
     pub fn run_rounds(&mut self, k: usize) {
         let n = self.nodes.len();
+        assert_eq!(n, self.order.len(), "node population changed after construction");
         if k == 0 || n == 0 {
             self.t += k;
             self.acct.rounds += k;
             return;
         }
         let start = std::time::Instant::now();
-        let (chunk, workers) = self.partition(n);
-        let banks = [SlotBank::new(n), SlotBank::new(n)];
-        let barrier = Barrier::new(workers);
-        let t0 = self.t;
-        let measure_wire = self.measure_wire;
-        let graph = self.graph;
-        let net = &self.net;
-        let per_worker: Vec<Vec<RoundAcct>> = std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(workers);
-            for (w, (nodes, rngs)) in
-                self.nodes.chunks_mut(chunk).zip(self.rngs.chunks_mut(chunk)).enumerate()
-            {
-                let base = w * chunk;
-                let banks = &banks;
-                let barrier = &barrier;
-                handles.push(s.spawn(move || {
-                    // Each round performs exactly one barrier.wait(); if a
-                    // node panics, this worker must still serve its
-                    // remaining waits or every sibling deadlocks at the
-                    // barrier and the panic is never reported. Count the
-                    // waits done, catch the unwind, pay the rest, rethrow.
-                    let waited = std::cell::Cell::new(0usize);
-                    let body = std::panic::AssertUnwindSafe(|| {
-                        let mut rounds: Vec<RoundAcct> = Vec::with_capacity(k);
-                        for r in 0..k {
-                            let t = t0 + r;
-                            let bank = &banks[r % 2];
-                            let mut ra = RoundAcct::default();
-                            // Phase 1: broadcast this shard's vertices.
-                            for (li, node) in nodes.iter_mut().enumerate() {
-                                let msg =
-                                    phases::broadcast_one(node.as_mut(), t, &mut rngs[li]);
-                                if measure_wire {
-                                    ra.encoded_bits += phases::sender_encoded_bits(
-                                        &msg,
-                                        graph.degree(base + li),
-                                    );
-                                }
-                                // Safety: this worker is the unique writer
-                                // of its own vertices' slots; readers are
-                                // held at the barrier below.
-                                unsafe { bank.write(base + li, msg) };
-                            }
-                            barrier.wait();
-                            waited.set(waited.get() + 1);
-                            // Phase 2+3: deliver in-edges and update.
-                            // Reads of this bank are safe until the
-                            // *other* bank's next barrier retires them
-                            // (double buffering).
-                            for (li, node) in nodes.iter_mut().enumerate() {
-                                let i = base + li;
-                                for &j in graph.neighbors(i) {
-                                    // Safety: all writers of `bank` passed
-                                    // the barrier; no writer touches it
-                                    // again before the next barrier.
-                                    let msg = unsafe { bank.read(j) };
-                                    phases::deliver_edge(
-                                        node.as_mut(),
-                                        net,
-                                        t,
-                                        j,
-                                        i,
-                                        msg,
-                                        &mut ra,
-                                    );
-                                }
-                                phases::update_one(node.as_mut(), t);
-                            }
-                            rounds.push(ra);
-                        }
-                        rounds
-                    });
-                    match std::panic::catch_unwind(body) {
-                        Ok(rounds) => rounds,
-                        Err(payload) => {
-                            // Siblings finish their k rounds against stale
-                            // (but valid) slot contents; results of this
-                            // run are discarded when the panic resurfaces
-                            // at join below.
-                            for _ in waited.get()..k {
-                                barrier.wait();
-                            }
-                            std::panic::resume_unwind(payload);
-                        }
-                    }
-                }));
-            }
-            handles
-                .into_iter()
-                .map(|h| match h.join() {
-                    Ok(rounds) => rounds,
-                    // rethrow the original payload so the caller sees the
-                    // node's own panic message, as with the serial engine
-                    Err(payload) => std::panic::resume_unwind(payload),
-                })
-                .collect()
-        });
-        // Deterministic merge: per round, fold the shard accumulators in
-        // shard order (sums and maxes — order-independent anyway), then
+        let workers = self.pool.workers();
+        if self.accts.len() < workers * k {
+            self.accts.resize(workers * k, RoundAcct::default());
+        }
+        let ctx = RunCtx {
+            nodes: self.nodes.as_mut_ptr(),
+            rngs: self.rngs.as_mut_ptr(),
+            order: self.order.as_ptr(),
+            n,
+            view: &self.view,
+            graph: self.graph,
+            net: &self.net,
+            banks: &self.banks,
+            accts: self.accts.as_mut_ptr(),
+            k,
+            t0: self.t,
+            measure_wire: self.measure_wire,
+        };
+        // Safety: `ctx` and everything it points to outlive the call (the
+        // pool blocks until all workers post done), and the worker loop
+        // upholds the slot/shard aliasing protocol.
+        let panicked = unsafe { self.pool.run(&ctx) };
+        if let Some(payload) = panicked {
+            // rethrow the node's own panic message, as the serial engine
+            // (and the scoped-thread predecessor) would; the grid rows of
+            // this job are discarded unread
+            std::panic::resume_unwind(payload);
+        }
+        // Deterministic merge: per round, fold the worker accumulators in
+        // worker order (sums and maxes — order-independent anyway), then
         // commit exactly as the serial engine does per step.
         for r in 0..k {
             let mut merged = RoundAcct::default();
-            for rounds in &per_worker {
-                merged.merge(&rounds[r]);
+            for w in 0..workers {
+                merged.merge(&self.accts[w * k + r]);
             }
             merged.commit(&self.net.model, &mut self.acct);
             self.acct.rounds += 1;
@@ -297,7 +516,7 @@ impl<'g> ShardedEngine<'g> {
     /// identical trace shape and stop semantics to
     /// [`super::round::RoundEngine::run`] (shared driver:
     /// [`phases::run_traced`]), with the rounds between log points
-    /// executing on the worker pool.
+    /// executing on the persistent pool.
     pub fn run(&mut self, name: &str, cfg: &RoundConfig, metric: MetricFn<'_>) -> Trace {
         phases::run_traced(self, name, cfg, metric)
     }
@@ -321,10 +540,10 @@ impl phases::RoundDriver for ShardedEngine<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{QsgdS, TopK};
+    use crate::compress::{Payload, QsgdS, TopK};
     use crate::consensus::{make_nodes, Scheme};
     use crate::linalg::vecops;
-    use crate::topology::{local_weights, mixing_matrix, MixingRule};
+    use crate::topology::{local_weights, mixing_matrix, uniform_local_weights, MixingRule};
 
     fn x0s(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
         let mut rng = Rng::new(seed);
@@ -373,7 +592,8 @@ mod tests {
             assert_eq!(engine.acct.messages, serial.acct.messages, "shards={shards}");
             assert_eq!(engine.acct.rounds, serial.acct.rounds, "shards={shards}");
             assert_eq!(
-                engine.acct.sim_time_s, serial.acct.sim_time_s,
+                engine.acct.sim_time_s,
+                serial.acct.sim_time_s,
                 "shards={shards}: simulated time must merge deterministically"
             );
         }
@@ -404,6 +624,93 @@ mod tests {
     }
 
     #[test]
+    fn k_single_steps_equal_one_run_rounds_k() {
+        // Satellite regression: on the persistent pool, k × run_rounds(1)
+        // ≡ run_rounds(k) on trajectory AND accounting — including the
+        // measured wire clock, which exercises the double-buffer parity
+        // across call boundaries.
+        let g = Graph::torus2d(4, 4);
+        let lw = uniform_local_weights(&g);
+        let x0 = x0s(16, 12, 13);
+        let scheme = || Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) };
+        let mut a = ShardedEngine::with_shards(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            7,
+            LinkModel::default(),
+            4,
+        );
+        let mut b = ShardedEngine::with_shards(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            7,
+            LinkModel::default(),
+            4,
+        );
+        a.measure_wire = true;
+        b.measure_wire = true;
+        a.run_rounds(12);
+        for _ in 0..12 {
+            b.step();
+        }
+        for (xa, xb) in a.iterates().iter().zip(b.iterates().iter()) {
+            assert_eq!(vecops::max_abs_diff(xa, xb), 0.0);
+        }
+        assert_eq!(a.acct.bits, b.acct.bits);
+        assert_eq!(a.acct.messages, b.acct.messages);
+        assert_eq!(a.acct.encoded_bits, b.acct.encoded_bits);
+        assert_eq!(a.acct.rounds, b.acct.rounds);
+        assert_eq!(a.acct.sim_time_s, b.acct.sim_time_s);
+    }
+
+    #[test]
+    fn relabeled_schedule_matches_serial() {
+        // A ring with scrambled vertex labels: the BFS pre-pass is
+        // guaranteed to relabel (natural chunks cut nearly every edge),
+        // and the trajectory + accounting must still be bit-identical to
+        // the serial engine.
+        let n = 32;
+        let perm: Vec<usize> = (0..n).map(|i| (i * 13) % n).collect();
+        let edges: Vec<(usize, usize)> = (0..n).map(|i| (perm[i], perm[(i + 1) % n])).collect();
+        let g = Graph::from_edges(n, &edges, "scrambled_ring");
+        let chunk = n.div_ceil(4);
+        assert_ne!(
+            relabel::schedule_order(&g, chunk),
+            (0..n).collect::<Vec<usize>>(),
+            "test premise: this graph must trigger relabeling"
+        );
+        let lw = uniform_local_weights(&g);
+        let x0 = x0s(n, 10, 17);
+        let scheme = || Scheme::Choco { gamma: 0.25, op: Box::new(QsgdS { s: 16 }) };
+        let mut serial = crate::coordinator::RoundEngine::new(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            33,
+            LinkModel::default(),
+        );
+        serial.measure_wire = true;
+        for _ in 0..20 {
+            serial.step();
+        }
+        let mut sharded = ShardedEngine::with_shards(
+            make_nodes(&scheme(), &x0, &lw),
+            &g,
+            33,
+            LinkModel::default(),
+            4,
+        );
+        sharded.measure_wire = true;
+        sharded.run_rounds(20);
+        for (a, b) in sharded.iterates().iter().zip(serial.iterates().iter()) {
+            assert_eq!(vecops::max_abs_diff(a, b), 0.0, "relabeling changed the trajectory");
+        }
+        assert_eq!(sharded.acct.bits, serial.acct.bits);
+        assert_eq!(sharded.acct.messages, serial.acct.messages);
+        assert_eq!(sharded.acct.encoded_bits, serial.acct.encoded_bits);
+        assert_eq!(sharded.acct.sim_time_s, serial.acct.sim_time_s);
+    }
+
+    #[test]
     fn measure_wire_matches_serial() {
         let g = Graph::ring(6);
         let w = mixing_matrix(&g, MixingRule::Uniform);
@@ -431,6 +738,9 @@ mod tests {
         sharded.run_rounds(5);
         assert!(serial.acct.encoded_bits > 0);
         assert_eq!(sharded.acct.encoded_bits, serial.acct.encoded_bits);
+        // the measured wire clock must also agree (satellite bugfix: the
+        // round time gates on the measured max link under measure_wire)
+        assert_eq!(sharded.acct.sim_time_s, serial.acct.sim_time_s);
     }
 
     /// Test double: behaves like a do-nothing node until round `at`,
@@ -463,7 +773,8 @@ mod tests {
     fn node_panic_propagates_instead_of_deadlocking() {
         // One node panics mid-run on one worker: the other workers must
         // not deadlock at the barrier, and the panic must resurface to
-        // the caller (the serial engine's behavior), not hang.
+        // the caller (the serial engine's behavior), not hang. The pool
+        // must survive for Drop afterwards.
         let g = Graph::ring(8);
         let nodes: Vec<Box<dyn GossipNode>> = (0..8)
             .map(|i| {
@@ -476,6 +787,52 @@ mod tests {
         let mut e = ShardedEngine::with_shards(nodes, &g, 1, LinkModel::default(), 4);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.run_rounds(10)));
         assert!(r.is_err(), "panic in a shard worker must propagate");
+    }
+
+    #[test]
+    fn partition_invariants_property() {
+        // Satellite property test: chunk × workers ≥ n, workers ≤
+        // min(shards, n), every worker range non-empty — swept over the
+        // awkward cases (shards > n, n % shards ≠ 0, n ∈ {0, 1}).
+        for shards in 0..20usize {
+            for n in 0..50usize {
+                let (chunk, workers) = partition_for(shards, n);
+                if n == 0 {
+                    assert_eq!((chunk, workers), (0, 0));
+                    continue;
+                }
+                assert!(chunk * workers >= n, "shards={shards} n={n}: uncovered vertices");
+                assert!(
+                    workers <= shards.max(1).min(n),
+                    "shards={shards} n={n}: more workers than requested shards"
+                );
+                assert!(workers >= 1, "shards={shards} n={n}");
+                assert!(
+                    (workers - 1) * chunk < n,
+                    "shards={shards} n={n}: empty tail worker range"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_equals_pool_threads() {
+        let g = Graph::ring(10);
+        let lw = uniform_local_weights(&g);
+        let x0 = x0s(10, 4, 1);
+        for shards in [1usize, 3, 4, 10, 99] {
+            let e = ShardedEngine::with_shards(
+                make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw),
+                &g,
+                1,
+                LinkModel::default(),
+                shards,
+            );
+            // worker_count() is exactly the number of threads run_rounds
+            // uses — the persistent pool's population.
+            assert_eq!(e.worker_count(), e.pool.threads.len(), "shards={shards}");
+            assert_eq!(e.worker_count(), partition_for(shards, 10).1, "shards={shards}");
+        }
     }
 
     #[test]
@@ -492,6 +849,27 @@ mod tests {
             99,
         );
         assert_eq!(e.worker_count(), 4);
+    }
+
+    #[test]
+    fn degenerate_sizes_run() {
+        // n ∈ {0, 1} short-circuit cleanly at any shard count: no deliver
+        // traffic, rounds still counted.
+        for n in [0usize, 1] {
+            let g = Graph::from_edges(n, &[], "degenerate");
+            let nodes: Vec<Box<dyn GossipNode>> = (0..n)
+                .map(|_| {
+                    Box::new(PanicNode { x: vec![0.0; 2], at: usize::MAX }) as Box<dyn GossipNode>
+                })
+                .collect();
+            let mut e = ShardedEngine::with_shards(nodes, &g, 1, LinkModel::default(), 5);
+            assert_eq!(e.worker_count(), n);
+            e.run_rounds(3);
+            let bits = e.step();
+            assert_eq!(bits, 0, "n={n}: no links, no bits");
+            assert_eq!(e.acct.rounds, 4, "n={n}");
+            assert_eq!(e.acct.messages, 0, "n={n}");
+        }
     }
 
     #[test]

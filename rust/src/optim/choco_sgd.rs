@@ -32,7 +32,11 @@ pub struct ChocoSgdNode {
     op: Box<dyn Compressor>,
     grad_buf: Vec<f64>,
     diff_buf: Vec<f64>,
-    pending_own: Option<Compressed>,
+    /// Own broadcast of the current round (applied in end_round); the
+    /// buffer persists across rounds so steady-state rounds never touch
+    /// the allocator.
+    own_msg: Compressed,
+    own_fresh: bool,
 }
 
 impl ChocoSgdNode {
@@ -59,7 +63,8 @@ impl ChocoSgdNode {
             op: op.clone_box(),
             grad_buf: vec![0.0; d],
             diff_buf: vec![0.0; d],
-            pending_own: None,
+            own_msg: Compressed::empty(),
+            own_fresh: false,
         }
     }
 
@@ -79,16 +84,24 @@ impl GossipNode for ChocoSgdNode {
     }
 
     fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.begin_round_into(t, rng, &mut out);
+        out
+    }
+
+    fn begin_round_into(&mut self, t: usize, rng: &mut Rng, out: &mut Compressed) {
         let eta = self.schedule.eta(t);
+        // the gradient draws from `rng` before the compressor does — this
+        // order is part of the determinism contract, keep it
         self.source.grad(&self.x, t, rng, &mut self.grad_buf);
         self.half.copy_from_slice(&self.x);
         crate::linalg::vecops::axpy(-eta, &self.grad_buf, &mut self.half);
         // q_i = Q(x^{t+½} − x̂_i)
         self.diff_buf.copy_from_slice(&self.half);
         crate::linalg::vecops::axpy(-1.0, &self.xhat, &mut self.diff_buf);
-        let msg = self.op.compress(&self.diff_buf, rng);
-        self.pending_own = Some(msg.clone());
-        msg
+        self.op.compress_into(&self.diff_buf, rng, &mut self.own_msg);
+        self.own_fresh = true;
+        out.clone_from(&self.own_msg);
     }
 
     fn receive(&mut self, from: usize, msg: &Compressed) {
@@ -97,9 +110,10 @@ impl GossipNode for ChocoSgdNode {
     }
 
     fn end_round(&mut self, _t: usize) {
-        let own = self.pending_own.take().expect("end_round before begin_round");
-        own.add_into(self.weights.self_weight, &mut self.s);
-        own.add_into(1.0, &mut self.xhat);
+        assert!(self.own_fresh, "end_round before begin_round");
+        self.own_fresh = false;
+        self.own_msg.add_into(self.weights.self_weight, &mut self.s);
+        self.own_msg.add_into(1.0, &mut self.xhat);
         // x ← x^{t+½} + γ (s − x̂)
         self.x.copy_from_slice(&self.half);
         for i in 0..self.x.len() {

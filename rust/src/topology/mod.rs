@@ -5,6 +5,7 @@
 
 pub mod graph;
 pub mod mixing;
+pub mod relabel;
 pub mod sparse;
 pub mod spectrum;
 
@@ -13,5 +14,6 @@ pub use mixing::{
     local_weights, metropolis_local_weights, mixing_matrix, uniform_local_weights, LocalWeights,
     MixingRule,
 };
+pub use relabel::ShardView;
 pub use sparse::SparseMixing;
 pub use spectrum::{choco_gamma_star, choco_p, choco_rate_bound, Spectrum};

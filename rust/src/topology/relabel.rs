@@ -1,0 +1,234 @@
+//! Edge-cut-aware vertex relabeling for contiguous sharding.
+//!
+//! The sharded BSP engine assigns contiguous *schedule slots* to workers.
+//! Ring and torus generators hand out vertex labels that are already
+//! chunk-local, but Erdős–Rényi generators label vertices at random, so
+//! contiguous chunks cut almost every edge: nearly every delivery crosses
+//! a shard boundary and reads another worker's cache lines. A
+//! breadth-first relabeling groups neighborhoods into runs of nearby
+//! slots, and [`schedule_order`] keeps whichever of {BFS order, natural
+//! order} cuts fewer edges for the chunk size at hand — so the pre-pass
+//! can only help, never hurt.
+//!
+//! Determinism contract: the order is a pure function of the graph (BFS
+//! from the lowest-numbered vertex of each component, components in
+//! ascending-root order, neighbors in ascending id), and the engine keys
+//! RNG streams, drop decisions, and delivery order on *original* vertex
+//! ids — so relabeling changes memory layout only, never a trajectory
+//! byte. `tests/engine_equivalence.rs` pins this on relabeled
+//! Erdős–Rényi runs.
+
+use super::Graph;
+use std::collections::VecDeque;
+
+/// Breadth-first schedule: `order[p]` is the original id of the vertex
+/// placed in slot `p`. Components are walked from their lowest-numbered
+/// vertex, neighbors in ascending id — fully deterministic.
+pub fn bfs_order(g: &Graph) -> Vec<usize> {
+    let n = g.n();
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut queue = VecDeque::new();
+    for root in 0..n {
+        if seen[root] {
+            continue;
+        }
+        seen[root] = true;
+        queue.push_back(root);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &w in g.neighbors(v) {
+                if !seen[w] {
+                    seen[w] = true;
+                    queue.push_back(w);
+                }
+            }
+        }
+    }
+    order
+}
+
+/// Inverse permutation: `pos[original id] = schedule slot`.
+pub fn inverse(order: &[usize]) -> Vec<usize> {
+    let mut pos = vec![0usize; order.len()];
+    for (p, &i) in order.iter().enumerate() {
+        pos[i] = p;
+    }
+    pos
+}
+
+/// Number of undirected edges whose endpoints land in different
+/// contiguous `chunk`-sized slot ranges under the slot assignment `pos`.
+pub fn cut_edges(g: &Graph, pos: &[usize], chunk: usize) -> usize {
+    let chunk = chunk.max(1);
+    g.edges()
+        .iter()
+        .filter(|&&(a, b)| pos[a] / chunk != pos[b] / chunk)
+        .count()
+}
+
+/// The schedule the sharded engine uses for `chunk`-sized worker ranges:
+/// BFS order when it cuts strictly fewer edges than the natural order,
+/// the identity otherwise (rings and tori are already chunk-local — a
+/// BFS frontier would interleave their two arms for no gain).
+pub fn schedule_order(g: &Graph, chunk: usize) -> Vec<usize> {
+    let n = g.n();
+    let natural: Vec<usize> = (0..n).collect();
+    if n == 0 {
+        return natural;
+    }
+    let bfs = bfs_order(g);
+    if cut_edges(g, &inverse(&bfs), chunk) < cut_edges(g, &natural, chunk) {
+        bfs
+    } else {
+        natural
+    }
+}
+
+/// Permutation-aware adjacency view: for each schedule slot, the
+/// in-edges as `(original neighbor id, neighbor slot)` pairs in
+/// ascending original id — exactly the iteration the sharded engine
+/// performs in its deliver phase, laid out as one contiguous CSR so
+/// delivery walks a flat array instead of chasing `order`/`pos` lookups
+/// per edge.
+pub struct ShardView {
+    offsets: Vec<usize>,
+    pairs: Vec<(u32, u32)>,
+}
+
+impl ShardView {
+    /// Build from a schedule (`order`) and its inverse (`pos`).
+    pub fn build(g: &Graph, order: &[usize], pos: &[usize]) -> Self {
+        let n = g.n();
+        assert_eq!(order.len(), n);
+        assert_eq!(pos.len(), n);
+        assert!(n <= u32::MAX as usize, "ShardView packs vertex ids as u32");
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut pairs = Vec::with_capacity(2 * g.num_edges());
+        offsets.push(0);
+        for &i in order {
+            for &j in g.neighbors(i) {
+                pairs.push((j as u32, pos[j] as u32));
+            }
+            offsets.push(pairs.len());
+        }
+        Self { offsets, pairs }
+    }
+
+    /// In-edges of schedule slot `p`, ascending original neighbor id.
+    pub fn in_edges(&self, p: usize) -> &[(u32, u32)] {
+        &self.pairs[self.offsets[p]..self.offsets[p + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn is_permutation(order: &[usize], n: usize) -> bool {
+        let mut seen = vec![false; n];
+        order.len() == n
+            && order.iter().all(|&i| {
+                let fresh = i < n && !seen[i];
+                if fresh {
+                    seen[i] = true;
+                }
+                fresh
+            })
+    }
+
+    #[test]
+    fn bfs_order_is_a_deterministic_permutation() {
+        let mut rng = Rng::new(3);
+        for g in [
+            Graph::ring(17),
+            Graph::torus2d(4, 5),
+            Graph::erdos_renyi(40, 0.12, &mut rng),
+            Graph::disconnected(6),
+            Graph::from_edges(5, &[], "isolated"),
+        ] {
+            let a = bfs_order(&g);
+            assert!(is_permutation(&a, g.n()), "{}", g.name());
+            assert_eq!(a, bfs_order(&g), "{}: not deterministic", g.name());
+            let pos = inverse(&a);
+            for (p, &i) in a.iter().enumerate() {
+                assert_eq!(pos[i], p);
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_starts_components_at_lowest_vertex() {
+        // disconnected(6) is two 6-cliques {0..5} and {6..11}: BFS must
+        // exhaust the first component before entering the second.
+        let g = Graph::disconnected(6);
+        let order = bfs_order(&g);
+        assert_eq!(order[0], 0);
+        assert!(order[..6].iter().all(|&i| i < 6));
+        assert_eq!(order[6], 6);
+    }
+
+    #[test]
+    fn schedule_order_never_cuts_more_than_natural() {
+        let mut rng = Rng::new(9);
+        for g in [
+            Graph::ring(24),
+            Graph::torus2d(5, 5),
+            Graph::hypercube(5),
+            Graph::erdos_renyi(64, 0.1, &mut rng),
+        ] {
+            for chunk in [1usize, 3, 8, 64] {
+                let order = schedule_order(&g, chunk);
+                let natural: Vec<usize> = (0..g.n()).collect();
+                assert!(
+                    cut_edges(&g, &inverse(&order), chunk) <= cut_edges(&g, &natural, chunk),
+                    "{} chunk={chunk}: schedule_order made the cut worse",
+                    g.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_keeps_its_natural_order() {
+        // The ring's natural labels already minimize the cut (2 edges per
+        // chunk boundary is optimal); BFS would interleave the two arms.
+        let g = Graph::ring(12);
+        let natural: Vec<usize> = (0..12).collect();
+        assert_eq!(schedule_order(&g, 3), natural);
+    }
+
+    #[test]
+    fn shuffled_labels_trigger_relabeling() {
+        // A ring whose labels are scrambled: natural chunks cut nearly
+        // every edge, so BFS must win and restore locality.
+        let n = 32;
+        let perm: Vec<usize> = (0..n).map(|i| (i * 13) % n).collect();
+        let edges: Vec<(usize, usize)> =
+            (0..n).map(|i| (perm[i], perm[(i + 1) % n])).collect();
+        let g = Graph::from_edges(n, &edges, "scrambled_ring");
+        let chunk = 8;
+        let natural: Vec<usize> = (0..n).collect();
+        let order = schedule_order(&g, chunk);
+        assert_ne!(order, natural, "scrambled ring should be relabeled");
+        assert!(cut_edges(&g, &inverse(&order), chunk) < cut_edges(&g, &natural, chunk));
+    }
+
+    #[test]
+    fn shard_view_matches_graph_neighbors() {
+        let mut rng = Rng::new(5);
+        let g = Graph::erdos_renyi(30, 0.15, &mut rng);
+        let order = schedule_order(&g, 8);
+        let pos = inverse(&order);
+        let view = ShardView::build(&g, &order, &pos);
+        for (p, &i) in order.iter().enumerate() {
+            let expect: Vec<(u32, u32)> = g
+                .neighbors(i)
+                .iter()
+                .map(|&j| (j as u32, pos[j] as u32))
+                .collect();
+            assert_eq!(view.in_edges(p), &expect[..], "slot {p} (vertex {i})");
+        }
+    }
+}

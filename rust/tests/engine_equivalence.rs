@@ -3,13 +3,15 @@
 //! and the event-driven `EventEngine` in its zero-latency BSP limit)
 //! must be bit-for-bit interchangeable.
 //!
-//! For CHOCO-GOSSIP and CHOCO-SGD, on ring and torus topologies, with
-//! shard counts {1, 2, 7, n}: identical iterates (exact `==`, no
-//! tolerance), identical `Accounting.bits`/`messages`/`encoded_bits`,
-//! identical simulated time — and the same with link loss enabled,
-//! because drop decisions key on (round, edge), not arrival order. The
-//! event engine is compared on everything except simulated time (its
-//! clock counts local compute, not per-round slowest-link transfers).
+//! For CHOCO-GOSSIP and CHOCO-SGD, on ring, torus, and Erdős–Rényi
+//! topologies (the latter triggering the sharded engine's BFS relabeling
+//! pre-pass), with shard counts {1, 2, 7, n}: identical iterates (exact
+//! `==`, no tolerance), identical
+//! `Accounting.bits`/`messages`/`encoded_bits`, identical simulated time
+//! — and the same with link loss enabled, because drop decisions key on
+//! (round, edge), not arrival order. The event engine is compared on
+//! everything except simulated time (its clock counts local compute, not
+//! per-round slowest-link transfers).
 
 use choco::compress::{QsgdS, TopK};
 use choco::consensus::{make_nodes, GossipNode, Scheme};
@@ -184,6 +186,60 @@ fn choco_sgd_bit_identical_on_ring_and_torus() {
             LinkModel::default(),
             mk,
             &format!("choco_sgd on {}", g.name()),
+        );
+    }
+}
+
+/// The sharded engine's relabeling pre-pass (BFS schedule when it cuts
+/// fewer edges than the natural order) must be invisible in every
+/// observable: graphs chosen so relabeling actually fires, then run
+/// through the full differential matrix — lossless and lossy.
+#[test]
+fn choco_gossip_bit_identical_on_relabeled_graphs() {
+    // a ring with scrambled labels: relabeling guaranteed (premise
+    // asserted below), plus a random graph: the motivating case
+    let n = 48;
+    let perm: Vec<usize> = (0..n).map(|i| (i * 13) % n).collect();
+    let edges: Vec<(usize, usize)> = (0..n).map(|i| (perm[i], perm[(i + 1) % n])).collect();
+    let scrambled = Graph::from_edges(n, &edges, "scrambled_ring");
+    let natural: Vec<usize> = (0..n).collect();
+    // chunk for shards=7 (the interesting row of SHARD_COUNTS)
+    let chunk = n.div_ceil(7);
+    assert_ne!(
+        choco::topology::relabel::schedule_order(&scrambled, chunk),
+        natural,
+        "test premise: the scrambled ring must trigger relabeling"
+    );
+    let er = Graph::erdos_renyi(n, 0.12, &mut Rng::new(404));
+
+    for (g, seed) in [(scrambled, 501u64), (er, 502u64)] {
+        let lw = weights_for(&g);
+        let x0 = x0s(n, 10, seed);
+        let lw2 = lw.clone();
+        let x02 = x0.clone();
+        let g2 = g.clone();
+        differential(
+            &g,
+            seed,
+            40,
+            LinkModel::default(),
+            move || {
+                let s = Scheme::Choco { gamma: 0.2, op: Box::new(QsgdS { s: 16 }) };
+                make_nodes(&s, &x02, &lw2)
+            },
+            &format!("choco_qsgd relabeled on {}", g.name()),
+        );
+        // and with link loss: drops key on (round, edge) in original ids,
+        // so the relabeled schedule must observe the same loss pattern
+        differential(
+            &g2,
+            seed,
+            40,
+            LinkModel { drop_prob: 0.2, ..Default::default() },
+            move || {
+                make_nodes(&Scheme::Choco { gamma: 0.2, op: Box::new(TopK { k: 3 }) }, &x0, &lw)
+            },
+            &format!("choco_topk relabeled lossy on {}", g2.name()),
         );
     }
 }

@@ -1,0 +1,98 @@
+//! Steady-state rounds of the sharded engine must not touch the heap.
+//!
+//! The persistent runtime exists so that `run_rounds`/`step` reuse
+//! everything round over round: parked workers, slot arenas, node-side
+//! message buffers, and the accounting grid. This test pins the claim
+//! with a counting global allocator: after a short warmup (which sizes
+//! every buffer), an armed window around five single-round `step()`
+//! calls must observe **zero** allocations — from the driving thread and
+//! from every pool worker alike (the counter is global and the workers
+//! do the actual round work).
+//!
+//! The test lives in its own integration binary because a
+//! `#[global_allocator]` is process-wide: mixing it into a shared test
+//! binary would make every other test pay the (tiny) counting overhead
+//! and would race other tests' allocations into the armed window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use choco::compress::QsgdS;
+use choco::consensus::{make_nodes, Scheme};
+use choco::coordinator::{LinkModel, ShardedEngine};
+use choco::topology::{uniform_local_weights, Graph};
+use choco::util::rng::Rng;
+
+/// Forwards to the system allocator, counting every allocation (and
+/// growth) while armed. Frees are not counted: dropping at the end of an
+/// armed window is fine, allocating inside it is the bug.
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_rounds_do_not_allocate() {
+    let g = Graph::torus2d(4, 8);
+    let n = g.n();
+    let d = 32;
+    let lw = uniform_local_weights(&g);
+    let mut rng = Rng::new(11);
+    let x0: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0; d];
+            rng.fill_gaussian(&mut v);
+            v
+        })
+        .collect();
+    let scheme = Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) };
+    let nodes = make_nodes(&scheme, &x0, &lw);
+    let mut engine = ShardedEngine::with_shards(nodes, &g, 7, LinkModel::default(), 4);
+    // Warmup: first rounds size the slot arenas, node-side message
+    // buffers, and the accounting grid (run_rounds(3) sizes the grid for
+    // k up to 3, so the single-round steps below can never outgrow it).
+    engine.run_rounds(3);
+    engine.step();
+    let before = engine.acct.rounds;
+    // Armed window: five steady-state rounds, zero heap traffic allowed.
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..5 {
+        engine.step();
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(engine.acct.rounds, before + 5, "engine must actually have run");
+    assert!(engine.acct.bits > 0, "rounds must move real traffic");
+    assert_eq!(allocs, 0, "steady-state rounds allocated {allocs} times; expected zero");
+}
