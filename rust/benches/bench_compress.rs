@@ -1,77 +1,159 @@
-//! Operator-level benchmarks: compression + wire encode/decode throughput.
-//! Perf targets from DESIGN.md §8; regenerates the operator-cost numbers
-//! quoted in EXPERIMENTS.md §Perf.
+//! Operator and codec benchmarks in ns/coordinate and bits/coordinate.
+//!
+//! Covers the SIMD-shaped kernels the perf pass rewrote (qsgd level
+//! computation, top-k quickselect, sign extraction, vecops axpy/dot) and
+//! every codec frame family — including the entropy tier (codec 7) and
+//! the [`AdaptiveEncoder`] flat-vs-entropy selection statistics. Emits
+//! the rows as `BENCH_compress.json` (uploaded as a CI artifact) and
+//! diffs them against the checked-in `BENCH_compress.baseline.json`
+//! ceilings; regressions are advisory warnings by default, but
+//! `--strict` (or `CHOCO_BENCH_STRICT=1`, the CI mode) turns any warning
+//! into a non-zero exit. To refresh the baseline after an intentional
+//! change, copy the artifact from a trusted CI run (or a quiet local
+//! machine) and round the ns ceilings *up* generously — they are
+//! ceilings, not targets; the bits columns are deterministic and should
+//! be copied exactly.
+//!
+//! `CHOCO_BENCH_FAST=1` shrinks sample times for a quick CI pass and
+//! skips the baseline diff (fast-mode timings are too noisy to compare).
 
-use choco::benchlib::{black_box, Harness};
-use choco::compress::{codec, wire, Compressor, Identity, QsgdS, RandK, ScaledSign, TopK};
+use choco::benchlib::{black_box, compare_compress_baseline, Harness};
+use choco::compress::codec::entropy::{AdaptiveEncoder, QuantHuff};
+use choco::compress::{codec, Compressor, Identity, QsgdS, RandK, ScaledSign, TopK};
+use choco::linalg::vecops;
+use choco::util::json::{self, Json};
 use choco::util::rng::Rng;
 
+fn row(name: &str, d: usize, secs_per_iter: f64, bits_per_coord: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("d", Json::Num(d as f64)),
+        ("ns_per_coord", Json::Num(secs_per_iter * 1e9 / d as f64)),
+        ("bits_per_coord", Json::Num(bits_per_coord)),
+    ])
+}
+
 fn main() {
+    let strict = std::env::args().any(|a| a == "--strict")
+        || std::env::var("CHOCO_BENCH_STRICT").is_ok();
+    let fast = std::env::var("CHOCO_BENCH_FAST").is_ok();
     let mut h = Harness::new("bench_compress");
-    let d = 2000;
+    let d = 2000usize;
     let mut rng = Rng::new(1);
     let mut x = vec![0.0; d];
     rng.fill_gaussian(&mut x);
-
     let items = d as f64;
-    h.bench_throughput("top_k 1% d=2000 (quickselect)", items, || {
-        let c = TopK { k: 20 }.compress(&x, &mut rng);
-        black_box(c);
-    });
-    h.bench_throughput("rand_k 1% d=2000", items, || {
-        let c = RandK { k: 20 }.compress(&x, &mut rng);
-        black_box(c);
-    });
-    h.bench_throughput("qsgd_16 d=2000", items, || {
-        let c = QsgdS { s: 16 }.compress(&x, &mut rng);
-        black_box(c);
-    });
-    h.bench_throughput("sign d=2000", items, || {
-        let c = ScaledSign.compress(&x, &mut rng);
-        black_box(c);
-    });
+    let mut rows: Vec<Json> = Vec::new();
 
-    // codec frame encode/decode (bytes/s) per payload family
-    let msg_sparse = TopK { k: 20 }.compress(&x, &mut rng);
-    let bytes_sparse = wire::encode(&msg_sparse);
-    h.bench_throughput("codec encode sparse(20)", bytes_sparse.len() as f64, || {
-        black_box(wire::encode(&msg_sparse));
+    // -- operator kernels (compress path; bits column = claimed wire_bits)
+    let med = h.bench_throughput("qsgd_16 compress d=2000", items, || {
+        black_box(QsgdS { s: 16 }.compress(&x, &mut rng));
     });
-    h.bench_throughput("codec decode sparse(20)", bytes_sparse.len() as f64, || {
-        black_box(wire::decode(&bytes_sparse).unwrap());
+    let c = QsgdS { s: 16 }.compress(&x, &mut rng);
+    rows.push(row("qsgd_16 compress", d, med, c.wire_bits as f64 / items));
+    let med = h.bench_throughput("top_k 1% compress d=2000", items, || {
+        black_box(TopK { k: 20 }.compress(&x, &mut rng));
     });
-    let msg_dense = Identity.compress(&x, &mut rng);
-    let bytes_dense = wire::encode(&msg_dense);
-    h.bench_throughput("codec encode dense d=2000", bytes_dense.len() as f64, || {
-        black_box(wire::encode(&msg_dense));
+    let c = TopK { k: 20 }.compress(&x, &mut rng);
+    rows.push(row("top_k_20 compress", d, med, c.wire_bits as f64 / items));
+    let med = h.bench_throughput("rand_k 1% compress d=2000", items, || {
+        black_box(RandK { k: 20 }.compress(&x, &mut rng));
     });
-    h.bench_throughput("codec decode dense d=2000", bytes_dense.len() as f64, || {
-        black_box(wire::decode(&bytes_dense).unwrap());
+    let c = RandK { k: 20 }.compress(&x, &mut rng);
+    rows.push(row("rand_k_20 compress", d, med, c.wire_bits as f64 / items));
+    let med = h.bench_throughput("sign compress d=2000", items, || {
+        black_box(ScaledSign.compress(&x, &mut rng));
     });
+    let c = ScaledSign.compress(&x, &mut rng);
+    rows.push(row("sign compress", d, med, c.wire_bits as f64 / items));
+
+    // -- codec frame families (bits column = measured frame bits)
     let msg_quant = QsgdS { s: 16 }.compress(&x, &mut rng);
-    let bytes_quant = wire::encode(&msg_quant);
-    h.bench_throughput("codec encode quantized d=2000", bytes_quant.len() as f64, || {
-        black_box(wire::encode(&msg_quant));
+    let bytes_quant = codec::encode(&msg_quant);
+    let med = h.bench_throughput("qsgd encode (quant_pack)", items, || {
+        black_box(codec::encode(&msg_quant));
     });
-    h.bench_throughput("codec decode quantized d=2000", bytes_quant.len() as f64, || {
-        black_box(wire::decode(&bytes_quant).unwrap());
+    rows.push(row("qsgd encode", d, med, bytes_quant.len() as f64 * 8.0 / items));
+    let med = h.bench_throughput("qsgd decode (quant_pack)", items, || {
+        black_box(codec::decode(&bytes_quant, d).unwrap());
     });
-    let msg_sign = ScaledSign.compress(&x, &mut rng);
-    let bytes_sign = wire::encode(&msg_sign);
-    h.bench_throughput("codec encode sign d=2000", bytes_sign.len() as f64, || {
-        black_box(wire::encode(&msg_sign));
-    });
-    h.bench_throughput("codec decode sign d=2000", bytes_sign.len() as f64, || {
-        black_box(wire::decode(&bytes_sign).unwrap());
-    });
+    rows.push(row("qsgd decode", d, med, bytes_quant.len() as f64 * 8.0 / items));
 
-    // top_k scaling (quickselect O(d) vs sort O(d log d) reference)
+    let msg_dense = Identity.compress(&x, &mut rng);
+    let bytes_dense = codec::encode(&msg_dense);
+    let med = h.bench_throughput("dense encode (best codec)", items, || {
+        black_box(codec::encode(&msg_dense));
+    });
+    rows.push(row("dense encode", d, med, bytes_dense.len() as f64 * 8.0 / items));
+    let med = h.bench_throughput("dense decode (best codec)", items, || {
+        black_box(codec::decode(&bytes_dense, d).unwrap());
+    });
+    rows.push(row("dense decode", d, med, bytes_dense.len() as f64 * 8.0 / items));
+
+    // the XOR family specifically (the gorilla-style unaligned bit stream,
+    // the hardest path for the word-buffered bit I/O)
+    let xor = codec::by_id(codec::DENSE_XOR).expect("dense_xor registered");
+    let bytes_xor = codec::encode_with(xor, &msg_dense);
+    let med = h.bench_throughput("dense_xor encode", items, || {
+        black_box(codec::encode_with(xor, &msg_dense));
+    });
+    rows.push(row("dense_xor encode", d, med, bytes_xor.len() as f64 * 8.0 / items));
+    let med = h.bench_throughput("dense_xor decode", items, || {
+        black_box(codec::decode(&bytes_xor, d).unwrap());
+    });
+    rows.push(row("dense_xor decode", d, med, bytes_xor.len() as f64 * 8.0 / items));
+
+    let msg_sparse = TopK { k: 20 }.compress(&x, &mut rng);
+    let bytes_sparse = codec::encode(&msg_sparse);
+    let med = h.bench_throughput("sparse encode (k=20)", items, || {
+        black_box(codec::encode(&msg_sparse));
+    });
+    rows.push(row("sparse encode", d, med, bytes_sparse.len() as f64 * 8.0 / items));
+    let med = h.bench_throughput("sparse decode (k=20)", items, || {
+        black_box(codec::decode(&bytes_sparse, d).unwrap());
+    });
+    rows.push(row("sparse decode", d, med, bytes_sparse.len() as f64 * 8.0 / items));
+
+    let msg_sign = ScaledSign.compress(&x, &mut rng);
+    let bytes_sign = codec::encode(&msg_sign);
+    let med = h.bench_throughput("sign encode", items, || {
+        black_box(codec::encode(&msg_sign));
+    });
+    rows.push(row("sign encode", d, med, bytes_sign.len() as f64 * 8.0 / items));
+    let med = h.bench_throughput("sign decode", items, || {
+        black_box(codec::decode(&bytes_sign, d).unwrap());
+    });
+    rows.push(row("sign decode", d, med, bytes_sign.len() as f64 * 8.0 / items));
+
+    // entropy tier (codec 7): Huffman over the same quantized message
+    let bytes_huff = codec::encode_with(&QuantHuff, &msg_quant);
+    let med = h.bench_throughput("quant_huff encode", items, || {
+        black_box(codec::encode_with(&QuantHuff, &msg_quant));
+    });
+    rows.push(row("quant_huff encode", d, med, bytes_huff.len() as f64 * 8.0 / items));
+    let med = h.bench_throughput("quant_huff decode", items, || {
+        black_box(codec::decode(&bytes_huff, d).unwrap());
+    });
+    rows.push(row("quant_huff decode", d, med, bytes_huff.len() as f64 * 8.0 / items));
+
+    // -- vecops hot loops (no wire: bits column is 0)
+    let mut y = vec![0.0; d];
+    rng.fill_gaussian(&mut y);
+    let med = h.bench_throughput("vecops axpy d=2000", items, || {
+        vecops::axpy(black_box(0.5), &x, &mut y);
+    });
+    rows.push(row("vecops axpy", d, med, 0.0));
+    let med = h.bench_throughput("vecops dot d=2000", items, || {
+        black_box(vecops::dot(&x, &y));
+    });
+    rows.push(row("vecops dot", d, med, 0.0));
+
+    // -- top_k scaling (quickselect O(d) vs sort O(d log d) reference)
     for dd in [10_000usize, 100_000] {
         let mut big = vec![0.0; dd];
         rng.fill_gaussian(&mut big);
         h.bench_throughput(&format!("top_k 1% d={dd}"), dd as f64, || {
-            let c = TopK { k: dd / 100 }.compress(&big, &mut rng);
-            black_box(c);
+            black_box(TopK { k: dd / 100 }.compress(&big, &mut rng));
         });
         h.bench_throughput(&format!("top_k sort-baseline d={dd}"), dd as f64, || {
             let mut idx: Vec<usize> = (0..dd).collect();
@@ -82,11 +164,108 @@ fn main() {
     }
     h.report();
     wire_efficiency_table();
+    let adaptive = adaptive_tier_stats(&x, d);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_compress".into())),
+        ("d", Json::Num(d as f64)),
+        ("fast_mode", Json::Bool(fast)),
+        ("rows", Json::Arr(rows)),
+        ("adaptive", adaptive),
+    ]);
+    let out = "BENCH_compress.json";
+    match std::fs::write(out, doc.to_pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("bench_compress: could not write {out}: {e}"),
+    }
+    let regressions = diff_against_baseline(&doc, fast);
+    if strict && regressions > 0 {
+        eprintln!(
+            "bench_compress: --strict and {regressions} figure(s) exceeded the \
+             BENCH_compress.baseline.json ceilings"
+        );
+        std::process::exit(1);
+    }
+}
+
+/// Run a stream of qsgd messages through the adaptive encoder and report
+/// how often the entropy tier wins and how many bits it saves over the
+/// flat registry scan (gaussian gradients → levels peaked at 0, so the
+/// tier should engage after the first frame primes the histogram).
+fn adaptive_tier_stats(x: &[f64], d: usize) -> Json {
+    let mut rng = Rng::new(9);
+    let mut enc = AdaptiveEncoder::new();
+    let op = QsgdS { s: 16 };
+    let frames = 40u64;
+    let (mut adaptive_bits, mut flat_bits) = (0u64, 0u64);
+    for _ in 0..frames {
+        let c = op.compress(x, &mut rng);
+        adaptive_bits += enc.encode(&c).len() as u64 * 8;
+        flat_bits += codec::encode(&c).len() as u64 * 8;
+    }
+    let frac = enc.entropy_frames as f64 / enc.frames as f64;
+    let adaptive_bpc = adaptive_bits as f64 / (frames * d as u64) as f64;
+    let flat_bpc = flat_bits as f64 / (frames * d as u64) as f64;
+    println!("\n== adaptive tier (qsgd_16, d={d}, {frames} frames) ==");
+    println!(
+        "entropy frames: {}/{} ({:.0}%); {adaptive_bpc:.3} bits/coord adaptive vs \
+         {flat_bpc:.3} flat",
+        enc.entropy_frames,
+        enc.frames,
+        frac * 100.0
+    );
+    Json::obj(vec![
+        ("frames", Json::Num(enc.frames as f64)),
+        ("entropy_frames", Json::Num(enc.entropy_frames as f64)),
+        ("entropy_fraction", Json::Num(frac)),
+        ("adaptive_bits_per_coord", Json::Num(adaptive_bpc)),
+        ("flat_bits_per_coord", Json::Num(flat_bpc)),
+    ])
+}
+
+/// Regression gate against the checked-in ceilings; see the module docs
+/// for the refresh procedure. Returns the warning count for `--strict`.
+fn diff_against_baseline(doc: &Json, fast: bool) -> usize {
+    const BASELINE: &str = "BENCH_compress.baseline.json";
+    const TOLERANCE: f64 = 0.5;
+    if fast {
+        println!("fast mode: skipping the {BASELINE} regression diff");
+        return 0;
+    }
+    let text = match std::fs::read_to_string(BASELINE) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("no {BASELINE} here — run from rust/ to enable the regression diff");
+            return 0;
+        }
+    };
+    match json::parse(&text) {
+        Ok(base) => {
+            let warnings = compare_compress_baseline(doc, &base, TOLERANCE);
+            if warnings.is_empty() {
+                println!("baseline diff: all rows within the {BASELINE} ceilings");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: {w}");
+                }
+                println!(
+                    "baseline diff: {} figure(s) over the {BASELINE} ceilings — investigate, \
+                     or refresh the baseline from a trusted CI artifact",
+                    warnings.len()
+                );
+            }
+            warnings.len()
+        }
+        Err(e) => {
+            eprintln!("bench_compress: unparseable {BASELINE}: {e}");
+            0
+        }
+    }
 }
 
 /// Measured-vs-idealized bits-per-coordinate for every operator: the
 /// codec subsystem's wire efficiency, tracked across PRs via the captured
-/// bench output (BENCH_*.json). `ratio` is measured/idealized; the
+/// bench output (BENCH_compress.json). `ratio` is measured/idealized; the
 /// acceptance bar for the packed families (qsgd, sign) is ≤ 1.05.
 fn wire_efficiency_table() {
     let d = 10_000usize;

@@ -169,6 +169,61 @@ pub fn compare_scale_baseline(fresh: &Json, baseline: &Json, tolerance: f64) -> 
     warnings
 }
 
+/// Extract `(name, d, ns_per_coord, bits_per_coord)` rows from a
+/// `BENCH_compress.json`-shaped document, skipping malformed entries.
+fn compress_rows(doc: &Json) -> Vec<(String, f64, f64, f64)> {
+    doc.get("rows")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|r| {
+            Some((
+                r.get("name")?.as_str()?.to_string(),
+                r.get("d")?.as_f64()?,
+                r.get("ns_per_coord")?.as_f64()?,
+                r.get("bits_per_coord")?.as_f64()?,
+            ))
+        })
+        .collect()
+}
+
+/// Diff a fresh `BENCH_compress.json` document against a checked-in
+/// baseline of *ceilings*, keyed by `(name, d)`. Two kinds of warnings:
+///
+/// * `ns_per_coord` more than `tolerance` (relative) **above** the
+///   baseline ceiling — timing is machine-dependent, so the checked-in
+///   ceilings are deliberately generous and the tolerance is wide;
+/// * `bits_per_coord` above the ceiling by more than 0.05 bits — frame
+///   sizes are deterministic, so this slack only absorbs rounding;
+///
+/// plus one warning per baseline row the fresh run no longer covers.
+/// `bench_compress --strict` (CI) exits non-zero on any warning.
+pub fn compare_compress_baseline(fresh: &Json, baseline: &Json, tolerance: f64) -> Vec<String> {
+    let mut warnings = Vec::new();
+    let fresh_rows = compress_rows(fresh);
+    for (name, d, base_ns, base_bits) in compress_rows(baseline) {
+        let Some((_, _, ns, bits)) =
+            fresh_rows.iter().find(|(fname, fd, _, _)| *fname == name && *fd == d)
+        else {
+            warnings.push(format!("baseline row '{name}' (d={d}) missing from this run"));
+            continue;
+        };
+        if base_ns > 0.0 && *ns > base_ns * (1.0 + tolerance) {
+            warnings.push(format!(
+                "{name} (d={d}): {ns:.2} ns/coordinate exceeds the {base_ns:.2} ceiling \
+                 by {:.0}%",
+                (ns / base_ns - 1.0) * 100.0
+            ));
+        }
+        if *bits > base_bits + 0.05 {
+            warnings.push(format!(
+                "{name} (d={d}): {bits:.3} bits/coordinate exceeds the {base_bits:.3} ceiling"
+            ));
+        }
+    }
+    warnings
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +272,57 @@ mod tests {
         // a doc with no usable rows yields no spurious warnings against itself
         let empty = Json::obj(vec![("rows", Json::Arr(vec![Json::Null]))]);
         assert!(compare_scale_baseline(&empty, &empty, 0.30).is_empty());
+    }
+
+    fn compress_doc(rows: Vec<(&str, f64, f64, f64)>) -> Json {
+        Json::obj(vec![(
+            "rows",
+            Json::Arr(
+                rows.into_iter()
+                    .map(|(name, d, ns, bits)| {
+                        Json::obj(vec![
+                            ("name", Json::Str(name.to_string())),
+                            ("d", Json::Num(d)),
+                            ("ns_per_coord", Json::Num(ns)),
+                            ("bits_per_coord", Json::Num(bits)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    #[test]
+    fn compress_diff_flags_slow_and_fat_rows() {
+        let base = compress_doc(vec![("qsgd encode", 2000.0, 10.0, 6.0)]);
+        // under both ceilings — clean
+        let ok = compress_doc(vec![("qsgd encode", 2000.0, 12.0, 5.1)]);
+        assert!(compare_compress_baseline(&ok, &base, 0.5).is_empty());
+        // 3× the ns ceiling — one warning naming the unit
+        let slow = compress_doc(vec![("qsgd encode", 2000.0, 30.0, 5.1)]);
+        let w = compare_compress_baseline(&slow, &base, 0.5);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("ns/coordinate"), "{w:?}");
+        // frames grew past the deterministic bits ceiling — one warning
+        let fat = compress_doc(vec![("qsgd encode", 2000.0, 10.0, 6.2)]);
+        let w = compare_compress_baseline(&fat, &base, 0.5);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("bits/coordinate"), "{w:?}");
+    }
+
+    #[test]
+    fn compress_diff_reports_dropped_rows() {
+        let base = compress_doc(vec![
+            ("qsgd encode", 2000.0, 10.0, 6.0),
+            ("dense_xor decode", 2000.0, 20.0, 40.0),
+        ]);
+        let fresh = compress_doc(vec![("qsgd encode", 2000.0, 10.0, 6.0)]);
+        let w = compare_compress_baseline(&fresh, &base, 0.5);
+        assert_eq!(w.len(), 1, "{w:?}");
+        assert!(w[0].contains("dense_xor decode") && w[0].contains("missing"), "{w:?}");
+        // malformed rows are skipped, never spuriously warned about
+        let empty = Json::obj(vec![("rows", Json::Arr(vec![Json::Null]))]);
+        assert!(compare_compress_baseline(&empty, &empty, 0.5).is_empty());
     }
 
     #[test]

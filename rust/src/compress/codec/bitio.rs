@@ -2,81 +2,110 @@
 //!
 //! Bits are packed LSB-first within each byte; multi-bit fields are written
 //! low-bit-first so that byte-aligned whole-byte fields (u8/u32/f32) land in
-//! plain little-endian layout. A byte-aligned fast path keeps dense payload
-//! encoding at memcpy-like speed (>1 GB/s; see EXPERIMENTS.md §Perf) while
-//! the generic path supports the sub-byte fields the packed codecs need
-//! (sign bits, quantization levels, Elias-gamma index gaps).
+//! plain little-endian layout. Both ends buffer a whole `u64` word: the
+//! writer accumulates fields into a 64-bit register and flushes eight bytes
+//! at a time, the reader refills the register a byte at a time and serves
+//! fields with one shift/mask each — so even the unaligned sub-byte fields
+//! the packed codecs need (sign bits, quantization levels, Elias-gamma
+//! index gaps, Huffman codes) cost O(1) per field instead of O(bits). The
+//! byte stream is identical to the historical bit-at-a-time implementation
+//! (same LSB-first layout; pinned by the round-trip tests below and the
+//! golden frame tests in `entropy.rs`); see EXPERIMENTS.md §Perf for the
+//! measured effect.
 
 use super::CodecError;
 
 /// A growable little-endian bit buffer.
+///
+/// Invariant: `acc` holds `nacc < 64` valid low bits; bits at and above
+/// `nacc` are zero. `bytes.len()` is always a multiple of 8 until
+/// [`BitWriter::into_bytes`] flushes the tail.
 pub struct BitWriter {
-    pub bytes: Vec<u8>,
-    bit: usize,
+    bytes: Vec<u8>,
+    acc: u64,
+    nacc: u32,
 }
 
 impl BitWriter {
     pub fn new() -> Self {
-        Self { bytes: Vec::new(), bit: 0 }
+        Self { bytes: Vec::new(), acc: 0, nacc: 0 }
     }
 
+    /// Pre-size the byte buffer (e.g. from a codec's exact `cost_bits`).
+    pub fn reserve(&mut self, additional_bytes: usize) {
+        self.bytes.reserve(additional_bytes);
+    }
+
+    /// Append the low `nbits` of `value`, LSB-first.
+    #[inline]
     pub fn write_bits(&mut self, value: u64, nbits: usize) {
         debug_assert!(nbits <= 64);
-        // Fast path (perf pass, EXPERIMENTS.md §Perf): whole bytes when the
-        // cursor is byte-aligned — dense/sparse payloads are byte-multiples
-        // after their aligned headers.
-        if self.bit % 8 == 0 && nbits % 8 == 0 {
-            let n = nbits / 8;
-            for i in 0..n {
-                self.bytes.push((value >> (8 * i)) as u8);
-            }
-            self.bit += nbits;
+        if nbits == 0 {
             return;
         }
-        for i in 0..nbits {
-            let b = (value >> i) & 1;
-            if self.bit % 8 == 0 {
-                self.bytes.push(0);
-            }
-            if b == 1 {
-                *self.bytes.last_mut().unwrap() |= 1 << (self.bit % 8);
-            }
-            self.bit += 1;
+        // Mask to the field width so the accumulator invariant holds.
+        let v = if nbits == 64 { value } else { value & ((1u64 << nbits) - 1) };
+        // Low 64−nacc bits land in the register; any overflow bits are
+        // shifted out of the u64 and re-emitted after the flush below.
+        self.acc |= v << self.nacc;
+        let total = self.nacc as usize + nbits;
+        if total >= 64 {
+            self.bytes.extend_from_slice(&self.acc.to_le_bytes());
+            let consumed = 64 - self.nacc as usize;
+            self.acc = if consumed >= 64 { 0 } else { v >> consumed };
+            self.nacc = (total - 64) as u32;
+        } else {
+            self.nacc = total as u32;
         }
     }
 
+    #[inline]
     pub fn write_bit(&mut self, b: bool) {
         self.write_bits(b as u64, 1);
     }
 
+    #[inline]
     pub fn write_u8(&mut self, v: u8) {
         self.write_bits(v as u64, 8);
     }
 
+    #[inline]
     pub fn write_u32(&mut self, v: u32) {
         self.write_bits(v as u64, 32);
     }
 
+    #[inline]
     pub fn write_f32(&mut self, v: f32) {
         self.write_u32(v.to_bits());
     }
 
     /// Elias-gamma code of `v ≥ 1`: ⌊log₂ v⌋ zeros, a 1 (the implicit top
     /// bit of v), then the remaining ⌊log₂ v⌋ low bits of v. 2⌊log₂ v⌋+1
-    /// bits total — short codes for small index gaps.
+    /// bits total — short codes for small index gaps. Codes up to 63 bits
+    /// (v < 2³²) go out in a single register write.
+    #[inline]
     pub fn write_gamma(&mut self, v: u64) {
         debug_assert!(v >= 1, "gamma codes cover v >= 1");
         let n = (63 - v.leading_zeros()) as usize;
-        self.write_bits(0, n);
-        self.write_bits(1, 1);
-        self.write_bits(v & ((1u64 << n) - 1), n);
+        if 2 * n + 1 <= 64 {
+            // zeros occupy bit positions 0..n (already zero), the marker 1
+            // sits at position n, the n low payload bits above it.
+            let low = v & ((1u64 << n) - 1);
+            self.write_bits((1u64 << n) | (low << (n + 1)), 2 * n + 1);
+        } else {
+            self.write_bits(0, n);
+            self.write_bits(1, 1);
+            self.write_bits(v & ((1u64 << n) - 1), n);
+        }
     }
 
     pub fn bit_len(&self) -> usize {
-        self.bit
+        self.bytes.len() * 8 + self.nacc as usize
     }
 
-    pub fn into_bytes(self) -> Vec<u8> {
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        let tail = self.nacc.div_ceil(8) as usize;
+        self.bytes.extend_from_slice(&self.acc.to_le_bytes()[..tail]);
         self.bytes
     }
 }
@@ -87,64 +116,105 @@ impl Default for BitWriter {
     }
 }
 
+/// Word-buffered reader over an LSB-first bit stream.
+///
+/// Invariant: `acc` holds `nacc` valid low bits (bits above are zero);
+/// `pos` is the next unread byte of the backing slice.
 pub struct BitReader<'a> {
     bytes: &'a [u8],
-    bit: usize,
+    pos: usize,
+    acc: u64,
+    nacc: u32,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(bytes: &'a [u8]) -> Self {
-        Self { bytes, bit: 0 }
+        Self { bytes, pos: 0, acc: 0, nacc: 0 }
     }
 
-    pub fn read_bits(&mut self, nbits: usize) -> Result<u64, CodecError> {
-        // Byte-aligned fast path mirroring `BitWriter::write_bits`.
-        if self.bit % 8 == 0 && nbits % 8 == 0 {
-            let n = nbits / 8;
-            let start = self.bit / 8;
-            if start + n > self.bytes.len() {
-                return Err(CodecError::Truncated);
-            }
-            let mut v = 0u64;
-            for i in 0..n {
-                v |= (self.bytes[start + i] as u64) << (8 * i);
-            }
-            self.bit += nbits;
-            return Ok(v);
+    /// Top up the register: after this, `nacc ≥ 57` unless the input is
+    /// exhausted — so any field of ≤ 32 bits is served from the register.
+    #[inline]
+    fn refill(&mut self) {
+        while self.nacc <= 56 && self.pos < self.bytes.len() {
+            self.acc |= (self.bytes[self.pos] as u64) << self.nacc;
+            self.nacc += 8;
+            self.pos += 1;
         }
-        let mut v = 0u64;
-        for i in 0..nbits {
-            let byte = self.bit / 8;
-            if byte >= self.bytes.len() {
-                return Err(CodecError::Truncated);
-            }
-            let b = (self.bytes[byte] >> (self.bit % 8)) & 1;
-            v |= (b as u64) << i;
-            self.bit += 1;
+    }
+
+    /// Serve `nbits ≤ 32` from the register.
+    #[inline]
+    fn read_small(&mut self, nbits: usize) -> Result<u64, CodecError> {
+        self.refill();
+        if (self.nacc as usize) < nbits {
+            return Err(CodecError::Truncated);
         }
+        let v = self.acc & ((1u64 << nbits) - 1);
+        self.acc >>= nbits;
+        self.nacc -= nbits as u32;
         Ok(v)
     }
 
+    #[inline]
+    pub fn read_bits(&mut self, nbits: usize) -> Result<u64, CodecError> {
+        debug_assert!(nbits <= 64);
+        if nbits == 0 {
+            return Ok(0);
+        }
+        if nbits <= 32 {
+            return self.read_small(nbits);
+        }
+        // Wide fields split into two register reads (the register holds at
+        // most 63 readily-servable bits after a refill).
+        let lo = self.read_small(32)?;
+        let hi = self.read_small(nbits - 32)?;
+        Ok(lo | (hi << 32))
+    }
+
+    #[inline]
     pub fn read_u8(&mut self) -> Result<u8, CodecError> {
         Ok(self.read_bits(8)? as u8)
     }
 
+    #[inline]
     pub fn read_u32(&mut self) -> Result<u32, CodecError> {
         Ok(self.read_bits(32)? as u32)
     }
 
+    #[inline]
     pub fn read_f32(&mut self) -> Result<f32, CodecError> {
         Ok(f32::from_bits(self.read_u32()?))
     }
 
-    /// Inverse of [`BitWriter::write_gamma`].
+    /// Inverse of [`BitWriter::write_gamma`]. The zero-run is counted with
+    /// one `trailing_zeros` per register window instead of a bit at a time.
     pub fn read_gamma(&mut self) -> Result<u64, CodecError> {
         let mut n = 0usize;
-        while self.read_bits(1)? == 0 {
-            n += 1;
+        loop {
+            self.refill();
+            if self.nacc == 0 {
+                return Err(CodecError::Truncated);
+            }
+            if self.acc == 0 {
+                // whole window is zeros — consume it and keep counting
+                n += self.nacc as usize;
+                self.nacc = 0;
+                if n > 63 {
+                    return Err(CodecError::Malformed("gamma code overlong".into()));
+                }
+                continue;
+            }
+            // bits above nacc are zero, so the lowest set bit is in range
+            let tz = self.acc.trailing_zeros() as usize;
+            n += tz;
             if n > 63 {
                 return Err(CodecError::Malformed("gamma code overlong".into()));
             }
+            // consume the zeros and the marker 1
+            self.acc >>= tz + 1;
+            self.nacc -= (tz + 1) as u32;
+            break;
         }
         let low = self.read_bits(n)?;
         Ok((1u64 << n) | low)
@@ -152,7 +222,7 @@ impl<'a> BitReader<'a> {
 
     /// Bits remaining before the end of the buffer.
     pub fn bits_left(&self) -> usize {
-        self.bytes.len() * 8 - self.bit
+        (self.bytes.len() - self.pos) * 8 + self.nacc as usize
     }
 }
 
@@ -210,5 +280,81 @@ mod tests {
         assert_eq!(w.bit_len(), 0);
         let mut r = BitReader::new(&[]);
         assert_eq!(r.read_bits(0).unwrap(), 0);
+    }
+
+    /// The word-buffered writer must emit the exact byte stream of the
+    /// historical bit-at-a-time implementation (transcribed here as the
+    /// reference), for arbitrary unaligned field sequences — old frames on
+    /// disk or in flight stay readable and golden frame tests stay green.
+    #[test]
+    fn matches_bit_at_a_time_reference() {
+        struct Reference {
+            bytes: Vec<u8>,
+            bit: usize,
+        }
+        impl Reference {
+            fn write_bits(&mut self, value: u64, nbits: usize) {
+                for i in 0..nbits {
+                    if self.bit % 8 == 0 {
+                        self.bytes.push(0);
+                    }
+                    if (value >> i) & 1 == 1 {
+                        *self.bytes.last_mut().unwrap() |= 1 << (self.bit % 8);
+                    }
+                    self.bit += 1;
+                }
+            }
+        }
+        // Deterministic pseudo-random field sequence covering widths 0..=64.
+        let mut state = 0x1234_5678_9ABC_DEF0u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let widths = [0usize, 1, 1, 2, 3, 5, 7, 8, 9, 13, 16, 31, 32, 33, 48, 63, 64];
+        for trial in 0..50 {
+            let mut reference = Reference { bytes: Vec::new(), bit: 0 };
+            let mut w = BitWriter::new();
+            let mut fields = Vec::new();
+            for i in 0..30 {
+                let nbits = widths[(next() as usize + trial + i) % widths.len()];
+                let value = next();
+                reference.write_bits(value, nbits);
+                w.write_bits(value, nbits);
+                fields.push((value, nbits));
+            }
+            assert_eq!(w.bit_len(), reference.bit, "trial {trial}");
+            let bytes = w.into_bytes();
+            assert_eq!(bytes, reference.bytes, "trial {trial}");
+            let mut r = BitReader::new(&bytes);
+            for &(value, nbits) in &fields {
+                let want = if nbits == 64 {
+                    value
+                } else {
+                    value & ((1u64 << nbits) - 1)
+                };
+                assert_eq!(r.read_bits(nbits).unwrap(), want, "trial {trial}");
+            }
+            assert_eq!(r.bits_left(), bytes.len() * 8 - reference.bit);
+        }
+    }
+
+    #[test]
+    fn wide_fields_roundtrip_across_word_boundaries() {
+        let mut w = BitWriter::new();
+        w.write_bits(1, 1); // misalign everything that follows
+        for i in 0..20u64 {
+            w.write_bits(0xDEAD_BEEF_CAFE_F00D ^ (i * 0x9E37), 64);
+            w.write_bits(i, 7);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(1).unwrap(), 1);
+        for i in 0..20u64 {
+            assert_eq!(r.read_bits(64).unwrap(), 0xDEAD_BEEF_CAFE_F00D ^ (i * 0x9E37));
+            assert_eq!(r.read_bits(7).unwrap(), i);
+        }
     }
 }

@@ -105,13 +105,14 @@ impl Codec for DenseXor {
             if xor == 0 {
                 w.write_bit(false);
             } else {
-                w.write_bit(true);
-                let lz = xor.leading_zeros();
+                // One register write per value: control bit at position 0,
+                // lz at 1..6, nsig−1 at 6..11, significant bits at 11..
+                // (1 + 5 + 5 + nsig ≤ 43 bits, always a single field).
+                let lz = xor.leading_zeros() as u64;
                 let tz = xor.trailing_zeros();
-                let nsig = 32 - lz - tz;
-                w.write_bits(lz as u64, 5);
-                w.write_bits((nsig - 1) as u64, 5);
-                w.write_bits((xor >> tz) as u64, nsig as usize);
+                let nsig = 32 - lz - tz as u64;
+                let sig = (xor >> tz) as u64;
+                w.write_bits(1 | (lz << 1) | ((nsig - 1) << 6) | (sig << 11), 11 + nsig as usize);
             }
             prev = bits;
         }
@@ -126,8 +127,10 @@ impl Codec for DenseXor {
         let mut v = Vec::with_capacity(dim);
         for _ in 0..dim {
             if r.read_bits(1)? == 1 {
-                let lz = r.read_bits(5)? as u32;
-                let nsig = r.read_bits(5)? as u32 + 1;
+                // lz and nsig−1 in one register read, then the window.
+                let ctrl = r.read_bits(10)?;
+                let lz = (ctrl & 0x1F) as u32;
+                let nsig = (ctrl >> 5) as u32 + 1;
                 if lz + nsig > 32 {
                     return Err(CodecError::Malformed(format!(
                         "xor window lz={lz} nsig={nsig} exceeds 32 bits"

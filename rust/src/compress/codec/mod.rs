@@ -26,23 +26,49 @@
 //!
 //! # Codec registry
 //!
-//! | id | codec | payload | packing |
-//! |----|-------|---------|---------|
-//! | 1 | `dense_f32` | `Dense` | dim × f32, raw |
-//! | 2 | `dense_xor` | `Dense` | Gorilla-style XOR-of-previous f32 stream |
-//! | 3 | `sparse_flat` | `Sparse` | u32 k, k × ⌈log₂ d⌉-bit index, k × f32 |
-//! | 4 | `sparse_gamma` | `Sparse` | u32 k, Elias-gamma index gaps, k × f32 |
-//! | 5 | `quant_pack` | `Quantized` | f32 scale, u8 width, dim × (sign + width) bits |
-//! | 6 | `sign_bitmap` | `SignBitmap` | f32 scale, dim × 1 bit |
+//! | id | codec | payload | tier | packing |
+//! |----|-------|---------|------|---------|
+//! | 1 | `dense_f32` | `Dense` | flat | dim × f32, raw |
+//! | 2 | `dense_xor` | `Dense` | flat | Gorilla-style XOR-of-previous f32 stream |
+//! | 3 | `sparse_flat` | `Sparse` | flat | u32 k, k × ⌈log₂ d⌉-bit index, k × f32 |
+//! | 4 | `sparse_gamma` | `Sparse` | flat | u32 k, Elias-gamma index gaps, k × f32 |
+//! | 5 | `quant_pack` | `Quantized` | flat | f32 scale, u8 width, dim × (sign + width) bits |
+//! | 6 | `sign_bitmap` | `SignBitmap` | flat | f32 scale, dim × 1 bit |
+//! | 7 | `quant_huff` | `Quantized` | entropy | canonical Huffman levels + in-frame table |
 //!
-//! [`encode`] picks the smallest applicable encoding for a payload (e.g.
-//! gamma-coded index gaps beat flat ⌈log₂ d⌉ indices for clustered
-//! sparsity, XOR deltas beat raw f32 for smooth dense vectors); [`decode`]
-//! dispatches on the frame's codec id, so old frames stay readable as new
-//! codecs are registered.
+//! [`encode`] picks the smallest applicable *flat-tier* encoding for a
+//! payload (e.g. gamma-coded index gaps beat flat ⌈log₂ d⌉ indices for
+//! clustered sparsity, XOR deltas beat raw f32 for smooth dense vectors);
+//! [`decode`] dispatches on the frame's codec id, so old frames stay
+//! readable as new codecs are registered.
+//!
+//! # Tiers and adaptive selection
+//!
+//! Codecs whose [`Codec::adaptive_only`] returns true (the entropy tier,
+//! id 7) are registered for *decoding* but excluded from the default
+//! [`encode`]/[`encoded_bits`] cost scan: the scan stays a pure function
+//! of the message, so existing frame families remain byte-identical on
+//! the wire and the engines' bit/sim-time accounting is unchanged. The
+//! entropy tier is emitted through [`entropy::AdaptiveEncoder`], a
+//! per-compressor stateful chooser: a running histogram of shipped qsgd
+//! levels estimates whether Huffman will beat the flat packing *before*
+//! paying the tree build, and an exact cost check confirms afterwards, so
+//! an adaptive frame is never larger than the flat one (the selection
+//! rule is documented in EXPERIMENTS.md §Codec tiers).
+//!
+//! # Bit-I/O performance contract
+//!
+//! All encoders/decoders run on the word-buffered [`bitio`] layer: fields
+//! are accumulated into a `u64` register and flushed/refilled eight bytes
+//! at a time, and every per-coordinate loop in the codecs emits its fields
+//! in a single `write_bits`/`read_bits` call (≤ 64 bits), so the cost per
+//! coordinate is O(1) register operations instead of O(bits) — see
+//! EXPERIMENTS.md §Perf and `benches/bench_compress.rs` (ns/coordinate
+//! next to bits/coordinate, diffed against `BENCH_compress.baseline.json`).
 
 pub mod bitio;
 mod dense;
+pub mod entropy;
 mod quantized;
 mod sparse;
 
@@ -69,6 +95,7 @@ pub const SPARSE_FLAT: u8 = 3;
 pub const SPARSE_GAMMA: u8 = 4;
 pub const QUANT_PACK: u8 = 5;
 pub const SIGN_BITMAP: u8 = 6;
+pub const QUANT_HUFF: u8 = 7;
 
 /// Decode failure. Converts into `String` for the legacy `wire` API.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -114,6 +141,12 @@ impl From<CodecError> for String {
 pub trait Codec: Send + Sync {
     fn id(&self) -> u8;
     fn name(&self) -> &'static str;
+    /// Entropy-tier codecs return true: they decode like any other codec
+    /// but are skipped by the default [`encode`]/[`encoded_bits`] scan and
+    /// only emitted via [`entropy::AdaptiveEncoder`] (see module docs).
+    fn adaptive_only(&self) -> bool {
+        false
+    }
     /// Whether this codec can encode the given payload family.
     fn applicable(&self, payload: &Payload) -> bool;
     /// Exact size of `encode_payload`'s output, in bits, computed without
@@ -129,13 +162,14 @@ pub trait Codec: Send + Sync {
     fn decode_payload(&self, dim: usize, r: &mut BitReader) -> Result<Payload, CodecError>;
 }
 
-static REGISTRY: [&(dyn Codec); 6] = [
+static REGISTRY: [&(dyn Codec); 7] = [
     &dense::DenseF32,
     &dense::DenseXor,
     &sparse::SparseFlat,
     &sparse::SparseGamma,
     &quantized::QuantPack,
     &quantized::SignBitmapCodec,
+    &entropy::QuantHuff,
 ];
 
 /// All registered codecs, in id order.
@@ -176,7 +210,7 @@ pub fn encode(msg: &Compressed) -> Vec<u8> {
     }
     let mut best: Option<(&'static dyn Codec, u64)> = None;
     for codec in registry() {
-        if !codec.applicable(&msg.payload) {
+        if codec.adaptive_only() || !codec.applicable(&msg.payload) {
             continue;
         }
         let cost = codec.cost_bits(msg);
@@ -185,8 +219,20 @@ pub fn encode(msg: &Compressed) -> Vec<u8> {
         }
     }
     let (codec, cost) = best.expect("no codec registered for payload family");
+    frame_with(codec, cost, msg)
+}
+
+/// Build a full frame for `msg` using a specific codec (the caller is
+/// responsible for applicability and for rejecting unencodable messages).
+/// [`encode`] routes through this after its cost scan; the adaptive
+/// entropy tier calls it directly.
+pub fn encode_with(codec: &dyn Codec, msg: &Compressed) -> Vec<u8> {
+    frame_with(codec, codec.cost_bits(msg), msg)
+}
+
+fn frame_with(codec: &dyn Codec, cost: u64, msg: &Compressed) -> Vec<u8> {
     let mut w = BitWriter::new();
-    w.bytes.reserve(cost.div_ceil(8) as usize);
+    w.reserve(cost.div_ceil(8) as usize);
     codec.encode_payload(msg, &mut w);
     debug_assert_eq!(w.bit_len() as u64, cost, "{}: cost_bits out of sync", codec.name());
     let payload = w.into_bytes();
@@ -211,7 +257,7 @@ pub fn encoded_bits(msg: &Compressed) -> u64 {
     }
     let payload_bits = registry()
         .iter()
-        .filter(|c| c.applicable(&msg.payload))
+        .filter(|c| !c.adaptive_only() && c.applicable(&msg.payload))
         .map(|c| c.cost_bits(msg))
         .min()
         .expect("no codec registered for payload family");
@@ -449,6 +495,30 @@ mod tests {
         let mut bad = bytes;
         bad[1] = VERSION + 1;
         assert!(decode(&bad, 4).is_err());
+    }
+
+    #[test]
+    fn adaptive_tier_excluded_from_default_scan() {
+        // 95% zero levels: the entropy tier is strictly smaller, but the
+        // default scan must stay a stateless function of the message —
+        // flat tier on the wire, byte-identical to pre-entropy-tier
+        // builds, and `encoded_bits` must agree with the actual frame.
+        let levels: Vec<i32> = (0..512).map(|i| i32::from(i % 20 == 0)).collect();
+        let c = Compressed {
+            dim: 512,
+            payload: Payload::Quantized { scale: 1.0, bits_per_coord: 4, levels },
+            wire_bits: 512 * 5 + 32,
+        };
+        let frame = encode(&c);
+        assert_eq!(frame[2], QUANT_PACK);
+        assert_eq!(encoded_bits(&c), frame.len() as u64 * 8);
+        let quant_pack_payload = (frame.len() - 11) as u64 * 8;
+        assert!(
+            entropy::QuantHuff.cost_bits(&c) < quant_pack_payload / 3,
+            "precondition: the entropy tier really is smaller here"
+        );
+        // but id 7 still resolves for decoding adaptive frames
+        assert_eq!(by_id(QUANT_HUFF).unwrap().name(), "quant_huff");
     }
 
     #[test]

@@ -68,9 +68,10 @@ impl Codec for QuantPack {
         let width = pack_width(nominal, levels);
         w.write_f32(scale as f32);
         w.write_u8(width as u8);
+        // Sign bit at position 0, magnitude above it — one register write
+        // per coordinate (1 + width ≤ 32 bits).
         for &l in levels {
-            w.write_bit(l < 0);
-            w.write_bits(mag(l) as u64, width as usize);
+            w.write_bits((l < 0) as u64 | ((mag(l) as u64) << 1), 1 + width as usize);
         }
     }
 
@@ -85,9 +86,9 @@ impl Codec for QuantPack {
         }
         let mut levels = Vec::with_capacity(dim);
         for _ in 0..dim {
-            let neg = r.read_bits(1)? == 1;
-            let mag = r.read_bits(width)? as i32;
-            levels.push(if neg { -mag } else { mag });
+            let field = r.read_bits(1 + width)?;
+            let mag = (field >> 1) as i32;
+            levels.push(if field & 1 == 1 { -mag } else { mag });
         }
         Ok(Payload::Quantized { scale, bits_per_coord: width as u8, levels })
     }
@@ -121,10 +122,16 @@ impl Codec for SignBitmapCodec {
         };
         w.write_f32(scale as f32);
         // The in-memory bitmap is already LSB-first packed with zeroed pad
-        // bits; ship whole bytes (aligned fast path) plus the remainder.
+        // bits; ship whole u64 words, then leftover bytes, then the
+        // sub-byte remainder.
         let full = msg.dim / 8;
         let rem = msg.dim % 8;
-        for &b in &negatives[..full] {
+        let whole = &negatives[..full];
+        let mut chunks = whole.chunks_exact(8);
+        for chunk in &mut chunks {
+            w.write_bits(u64::from_le_bytes(chunk.try_into().unwrap()), 64);
+        }
+        for &b in chunks.remainder() {
             w.write_u8(b);
         }
         if rem > 0 {
@@ -140,7 +147,10 @@ impl Codec for SignBitmapCodec {
         let full = dim / 8;
         let rem = dim % 8;
         let mut negatives = Vec::with_capacity(dim.div_ceil(8));
-        for _ in 0..full {
+        for _ in 0..full / 8 {
+            negatives.extend_from_slice(&r.read_bits(64)?.to_le_bytes());
+        }
+        for _ in 0..full % 8 {
             negatives.push(r.read_u8()?);
         }
         if rem > 0 {

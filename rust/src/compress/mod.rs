@@ -164,27 +164,37 @@ impl Compressed {
         assert_eq!(out.len(), self.dim);
         match &self.payload {
             Payload::Zero => unreachable!(),
-            Payload::Dense(v) => {
-                for i in 0..v.len() {
-                    out[i] += alpha * v[i];
-                }
-            }
+            // Dense decode is exactly axpy — reuse the chunked kernel
+            // (bit-identical to the scalar loop; see vecops' contract).
+            Payload::Dense(v) => crate::linalg::vecops::axpy(alpha, v, out),
             Payload::Sparse { indices, values } => {
                 for (&i, &v) in indices.iter().zip(values.iter()) {
                     out[i as usize] += alpha * v;
                 }
             }
             Payload::Quantized { scale, levels, .. } => {
+                // Chunked like vecops: 4-wide int→f64 convert + fma-able
+                // multiply-add per iteration, scalar tail.
                 let a = alpha * *scale;
-                for (o, &l) in out.iter_mut().zip(levels.iter()) {
+                let split = levels.len() - levels.len() % 4;
+                let (oc, or) = out[..self.dim].split_at_mut(split);
+                for (os, ls) in oc.chunks_exact_mut(4).zip(levels[..split].chunks_exact(4)) {
+                    for l in 0..4 {
+                        os[l] += a * ls[l] as f64;
+                    }
+                }
+                for (o, &l) in or.iter_mut().zip(levels[split..].iter()) {
                     *o += a * l as f64;
                 }
             }
             Payload::SignBitmap { scale, negatives } => {
+                // One bitmap byte drives 8 output lanes; the sign flip is
+                // branch-free select between +a and −a.
                 let a = alpha * *scale;
-                for (i, o) in out.iter_mut().enumerate() {
-                    let neg = (negatives[i / 8] >> (i % 8)) & 1 == 1;
-                    *o += if neg { -a } else { a };
+                for (os, &byte) in out[..self.dim].chunks_mut(8).zip(negatives.iter()) {
+                    for (j, o) in os.iter_mut().enumerate() {
+                        *o += if (byte >> j) & 1 == 1 { -a } else { a };
+                    }
                 }
             }
         }

@@ -1,11 +1,28 @@
 //! Concrete compression operators (paper §3.5 "Example operators").
+//!
+//! The per-coordinate kernels (qsgd level computation, sign extraction,
+//! top-k selection) are written as chunked, branch-light loops over
+//! reusable scratch — see EXPERIMENTS.md §Perf for the chunking contract
+//! and `benches/bench_compress.rs` for the ns/coordinate tracking. Scratch
+//! buffers are thread-local so the `&self` compressors stay `Send + Sync`
+//! and the persistent sharded runtime's parked workers each warm their own
+//! buffer once (steady-state rounds stay zero-alloc; pinned by
+//! `tests/zero_alloc.rs`).
 
 use super::{Compressed, Compressor, Payload};
 use crate::util::rng::Rng;
+use std::cell::RefCell;
 
 const F32_BITS: u64 = 32;
 /// Shared-seed handshake cost charged to every randomized sparse message.
 const SEED_BITS: u64 = 64;
+
+thread_local! {
+    /// |x| scratch for top-k quickselect.
+    static TOPK_MAGS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    /// Uniform-draw scratch for the two-pass qsgd kernel.
+    static QSGD_UNIFORMS: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Overwrite `out`'s payload with a dense copy of `x`, reusing the
 /// destination vector when the payload is already dense (arena hot path).
@@ -82,20 +99,39 @@ impl Compressor for RandK {
     }
 
     fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(x, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, x: &[f64], rng: &mut Rng, out: &mut Compressed) {
         let d = x.len();
         let k = self.k.min(d);
-        let mut idx = rng.sample_indices(d, k);
-        idx.sort_unstable();
-        let values: Vec<f64> = idx.iter().map(|&i| x[i]).collect();
-        Compressed {
-            dim: d,
-            payload: Payload::Sparse {
-                indices: idx.into_iter().map(|i| i as u32).collect(),
-                values,
-            },
-            wire_bits: F32_BITS * k as u64 + SEED_BITS,
+        let idx = sample_sorted_indices(d, k, rng);
+        out.dim = d;
+        out.wire_bits = F32_BITS * k as u64 + SEED_BITS;
+        match &mut out.payload {
+            Payload::Sparse { indices, values } => {
+                indices.clear();
+                values.clear();
+            }
+            p => *p = Payload::Sparse { indices: Vec::new(), values: Vec::new() },
+        }
+        if let Payload::Sparse { indices, values } = &mut out.payload {
+            indices.extend(idx.iter().map(|&i| i as u32));
+            values.extend(idx.iter().map(|&i| x[i]));
         }
     }
+}
+
+/// Sample `k` distinct coordinates of `[0, d)` and sort them ascending —
+/// the one place the sorted-ascending wire invariant for rand-k messages
+/// is enforced (both `RandK::compress` and `RandK::compress_into` route
+/// through here, pinned by `randk_paths_share_the_index_helper`).
+fn sample_sorted_indices(d: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut idx = rng.sample_indices(d, k);
+    idx.sort_unstable();
+    idx
 }
 
 /// `top_k`: keep the k coordinates of largest magnitude. Deterministic
@@ -133,7 +169,6 @@ impl Compressor for TopK {
     fn compress_into(&self, x: &[f64], _rng: &mut Rng, out: &mut Compressed) {
         let d = x.len();
         let k = self.k.min(d);
-        let idx = top_k_indices(x, k);
         let index_bits = (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64;
         out.dim = d;
         out.wire_bits = (F32_BITS + index_bits) * k as u64;
@@ -141,40 +176,53 @@ impl Compressor for TopK {
             Payload::Sparse { indices, values } => {
                 indices.clear();
                 values.clear();
-                indices.extend(idx.iter().map(|&i| i as u32));
-                values.extend(idx.iter().map(|&i| x[i]));
             }
-            p => {
-                *p = Payload::Sparse {
-                    indices: idx.iter().map(|&i| i as u32).collect(),
-                    values: idx.iter().map(|&i| x[i]).collect(),
-                }
-            }
+            p => *p = Payload::Sparse { indices: Vec::new(), values: Vec::new() },
+        }
+        if let Payload::Sparse { indices, values } = &mut out.payload {
+            TOPK_MAGS.with(|mags| {
+                top_k_indices_into(x, k, &mut mags.borrow_mut(), indices);
+            });
+            values.extend(indices.iter().map(|&i| x[i as usize]));
         }
     }
 }
 
 /// Indices of the k largest-|x| entries, returned sorted ascending.
 ///
-/// O(d) average via quickselect on a scratch copy (the perf pass replaced
-/// an initial O(d log d) full sort; see EXPERIMENTS.md §Perf).
+/// O(d) average via quickselect (see [`top_k_indices_into`], the
+/// scratch-reusing kernel behind `TopK::compress_into`).
 pub fn top_k_indices(x: &[f64], k: usize) -> Vec<usize> {
+    let mut mags = Vec::new();
+    let mut out = Vec::new();
+    top_k_indices_into(x, k, &mut mags, &mut out);
+    out.into_iter().map(|i| i as usize).collect()
+}
+
+/// Scratch-reusing top-k selection: |x| magnitudes land in `mags`
+/// (cleared, then refilled — a chunked, autovectorizable pass), the
+/// winning indices in `out`, sorted ascending. Allocation-free once both
+/// buffers have warmed to `x.len()` / `k` capacity (the thread-local
+/// scratch in `TopK::compress_into`; pinned by `tests/zero_alloc.rs`).
+pub fn top_k_indices_into(x: &[f64], k: usize, mags: &mut Vec<f64>, out: &mut Vec<u32>) {
     let d = x.len();
     let k = k.min(d);
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
     if k == d {
-        return (0..d).collect();
+        out.extend(0..d as u32);
+        return;
     }
     // Find the magnitude threshold via quickselect over |x|.
-    let mut mags: Vec<f64> = x.iter().map(|v| v.abs()).collect();
-    let threshold = quickselect_desc(&mut mags, k - 1);
+    mags.clear();
+    mags.extend(x.iter().map(|v| v.abs()));
+    let threshold = quickselect_desc(mags, k - 1);
     // Collect indices with |x| > threshold, then fill ties at == threshold.
-    let mut out: Vec<usize> = Vec::with_capacity(k);
     for (i, v) in x.iter().enumerate() {
         if v.abs() > threshold {
-            out.push(i);
+            out.push(i as u32);
         }
     }
     for (i, v) in x.iter().enumerate() {
@@ -182,12 +230,11 @@ pub fn top_k_indices(x: &[f64], k: usize) -> Vec<usize> {
             break;
         }
         if v.abs() == threshold {
-            out.push(i);
+            out.push(i as u32);
         }
     }
     out.sort_unstable();
     out.truncate(k);
-    out
 }
 
 /// k-th largest element (0-based) of `v` in descending order; O(n) average.
@@ -285,32 +332,44 @@ impl Compressor for QsgdS {
         let s = self.s as f64;
         let tau = self.tau(d);
         let scale = (norm / (s * tau)) as f32 as f64;
-        // Hot path (perf pass, EXPERIMENTS.md §Perf): hoist the 1/norm
-        // division out of the loop.
+        // Hot path (perf pass, EXPERIMENTS.md §Perf): two passes. Pass one
+        // drains the RNG into thread-local scratch in the original
+        // per-coordinate draw order (the uniform stream stays bit-identical
+        // to the interleaved loop it replaced); pass two is pure arithmetic
+        // the autovectorizer can chunk. The 1/norm division is hoisted out.
         let inv_norm_s = s / norm;
         out.wire_bits = (1 + bits_per_coord) * d as u64 + F32_BITS;
-        let mut fill = |levels: &mut Vec<i32>| {
-            for &xi in x {
-                // the argument is nonnegative, so integer truncation ==
-                // floor; cap at i32::MAX so pathological s values can't
-                // wrap the sign
-                let mag =
-                    ((xi.abs() * inv_norm_s + rng.next_f64()) as u32).min(i32::MAX as u32) as i32;
-                levels.push(if xi < 0.0 { -mag } else { mag });
-            }
-        };
         match &mut out.payload {
             Payload::Quantized { scale: sc, bits_per_coord: b, levels } => {
                 *sc = scale;
                 *b = bits_per_coord as u8;
                 levels.clear();
-                fill(levels);
             }
             p => {
-                let mut levels = Vec::with_capacity(d);
-                fill(&mut levels);
-                *p = Payload::Quantized { scale, bits_per_coord: bits_per_coord as u8, levels };
+                *p = Payload::Quantized {
+                    scale,
+                    bits_per_coord: bits_per_coord as u8,
+                    levels: Vec::with_capacity(d),
+                }
             }
+        }
+        if let Payload::Quantized { levels, .. } = &mut out.payload {
+            QSGD_UNIFORMS.with(|u| {
+                let mut u = u.borrow_mut();
+                u.clear();
+                for _ in 0..d {
+                    u.push(rng.next_f64());
+                }
+                levels.resize(d, 0);
+                for ((lv, &xi), &ui) in levels.iter_mut().zip(x).zip(u.iter()) {
+                    // the argument is nonnegative, so integer truncation ==
+                    // floor; cap at i32::MAX so pathological s values can't
+                    // wrap the sign
+                    let mag =
+                        ((xi.abs() * inv_norm_s + ui) as u32).min(i32::MAX as u32) as i32;
+                    *lv = if xi < 0.0 { -mag } else { mag };
+                }
+            });
         }
     }
 }
@@ -391,7 +450,7 @@ impl Compressor for ScaledSign {
 
     fn compress_into(&self, x: &[f64], _rng: &mut Rng, out: &mut Compressed) {
         let d = x.len();
-        let l1: f64 = x.iter().map(|v| v.abs()).sum();
+        let l1 = crate::linalg::vecops::norm1(x);
         let scale = (l1 / d as f64) as f32 as f64;
         let bytes = d.div_ceil(8);
         out.dim = d;
@@ -405,10 +464,14 @@ impl Compressor for ScaledSign {
             p => *p = Payload::SignBitmap { scale, negatives: vec![0u8; bytes] },
         }
         if let Payload::SignBitmap { negatives, .. } = &mut out.payload {
-            for (i, &v) in x.iter().enumerate() {
-                if v < 0.0 {
-                    negatives[i / 8] |= 1 << (i % 8);
+            // Branch-free byte-at-a-time fill: each output byte is built in
+            // a register from up to 8 sign tests, then stored once.
+            for (byte, chunk) in negatives.iter_mut().zip(x.chunks(8)) {
+                let mut b = 0u8;
+                for (j, &v) in chunk.iter().enumerate() {
+                    b |= u8::from(v < 0.0) << j;
                 }
+                *byte = b;
             }
         }
     }
@@ -539,6 +602,32 @@ mod tests {
         // rand_1% at d=2000 → k=20
         let op = RandK::fraction(0.01, 2000);
         assert_eq!(op.k, 20);
+    }
+
+    #[test]
+    fn randk_paths_share_the_index_helper() {
+        // compress and compress_into must route index generation through
+        // sample_sorted_indices: identical wire bytes AND identical RNG
+        // state afterwards, so the two paths can never drift.
+        let mut x = vec![0.0; 61];
+        rng().fill_gaussian(&mut x);
+        let op = RandK { k: 9 };
+        let mut ra = Rng::new(424242);
+        let mut rb = Rng::new(424242);
+        let a = op.compress(&x, &mut ra);
+        let mut b = ScaledSign.compress(&x, &mut Rng::new(1)); // polluted dest
+        op.compress_into(&x, &mut rb, &mut b);
+        assert_eq!(super::super::codec::encode(&a), super::super::codec::encode(&b));
+        assert_eq!(ra.next_u64(), rb.next_u64(), "rng state drift between paths");
+        match &a.payload {
+            Payload::Sparse { indices, .. } => {
+                assert!(
+                    indices.windows(2).all(|w| w[0] < w[1]),
+                    "rand_k indices must be strictly ascending on the wire"
+                );
+            }
+            other => panic!("rand_k payload must be sparse, got {other:?}"),
+        }
     }
 
     #[test]

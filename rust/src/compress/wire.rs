@@ -31,6 +31,7 @@ use super::codec;
 use super::Compressed;
 
 pub use super::codec::bitio::{BitReader, BitWriter};
+pub use super::codec::entropy::{AdaptiveEncoder, QuantHuff};
 
 /// Serialize a compressed message to a codec frame. Values are narrowed
 /// to f32 (that is what the bit accounting assumes and what the paper's

@@ -1,13 +1,37 @@
 //! Dense vector operations. These are the innermost loops of every gossip
 //! round on the native path, so they are written allocation-free over
-//! slices; the perf pass benchmarks them in `bench_compress`.
+//! slices and in an explicitly autovectorizable shape; the perf pass
+//! benchmarks them in `bench_compress`.
+//!
+//! # SIMD chunking contract
+//!
+//! Every loop is phrased as `chunks_exact(LANES)` (LANES = 4, an f64x4
+//! register on AVX2-class hardware) with a scalar remainder, so rustc's
+//! autovectorizer emits packed arithmetic without `unsafe`, feature gates,
+//! or nightly SIMD types. Elementwise ops (`axpy`, `scale`, `sub`, `add`)
+//! compute each lane independently — results are bit-identical to the
+//! scalar loop. Reductions (`dot`, `dist_sq`) keep LANES independent
+//! accumulators combined as `(s0 + s2) + (s1 + s3)`: a *fixed* summation
+//! order, deterministic across runs/platforms/engines (every engine shares
+//! these kernels, so the differential harness in
+//! `tests/engine_equivalence.rs` stays bit-exact), though rounded
+//! differently than a strictly sequential sum. See EXPERIMENTS.md §Perf.
+
+const LANES: usize = 4;
 
 /// `y += alpha * x`
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
+    let (xc, xr) = x.split_at(x.len() - x.len() % LANES);
+    let (yc, yr) = y.split_at_mut(xc.len());
+    for (xs, ys) in xc.chunks_exact(LANES).zip(yc.chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            ys[l] += alpha * xs[l];
+        }
+    }
+    for (xv, yv) in xr.iter().zip(yr.iter_mut()) {
+        *yv += alpha * xv;
     }
 }
 
@@ -20,20 +44,34 @@ pub fn copy(x: &[f64], y: &mut [f64]) {
 /// `x *= alpha`
 #[inline]
 pub fn scale(alpha: f64, x: &mut [f64]) {
-    for v in x.iter_mut() {
+    let r = x.len() % LANES;
+    let (xc, xr) = x.split_at_mut(x.len() - r);
+    for xs in xc.chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            xs[l] *= alpha;
+        }
+    }
+    for v in xr.iter_mut() {
         *v *= alpha;
     }
 }
 
-/// Dot product.
+/// Dot product (lane-parallel accumulators; fixed combine order).
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut s = 0.0;
-    for i in 0..x.len() {
-        s += x[i] * y[i];
+    let split = x.len() - x.len() % LANES;
+    let mut s = [0.0f64; LANES];
+    for (xs, ys) in x[..split].chunks_exact(LANES).zip(y[..split].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            s[l] += xs[l] * ys[l];
+        }
     }
-    s
+    let mut tail = 0.0;
+    for (xv, yv) in x[split..].iter().zip(y[split..].iter()) {
+        tail += xv * yv;
+    }
+    (s[0] + s[2]) + (s[1] + s[3]) + tail
 }
 
 /// Squared euclidean norm.
@@ -48,16 +86,41 @@ pub fn norm2(x: &[f64]) -> f64 {
     norm2_sq(x).sqrt()
 }
 
+/// ℓ₁ norm (lane-parallel accumulators; fixed combine order).
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    let split = x.len() - x.len() % LANES;
+    let mut s = [0.0f64; LANES];
+    for xs in x[..split].chunks_exact(LANES) {
+        for l in 0..LANES {
+            s[l] += xs[l].abs();
+        }
+    }
+    let mut tail = 0.0;
+    for xv in x[split..].iter() {
+        tail += xv.abs();
+    }
+    (s[0] + s[2]) + (s[1] + s[3]) + tail
+}
+
 /// Squared distance ‖x − y‖².
 #[inline]
 pub fn dist_sq(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut s = 0.0;
-    for i in 0..x.len() {
-        let d = x[i] - y[i];
-        s += d * d;
+    let split = x.len() - x.len() % LANES;
+    let mut s = [0.0f64; LANES];
+    for (xs, ys) in x[..split].chunks_exact(LANES).zip(y[..split].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let d = xs[l] - ys[l];
+            s[l] += d * d;
+        }
     }
-    s
+    let mut tail = 0.0;
+    for (xv, yv) in x[split..].iter().zip(y[split..].iter()) {
+        let d = xv - yv;
+        tail += d * d;
+    }
+    (s[0] + s[2]) + (s[1] + s[3]) + tail
 }
 
 /// `out = x - y`
@@ -65,8 +128,19 @@ pub fn dist_sq(x: &[f64], y: &[f64]) -> f64 {
 pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    for i in 0..x.len() {
-        out[i] = x[i] - y[i];
+    let split = x.len() - x.len() % LANES;
+    let (oc, or) = out.split_at_mut(split);
+    for ((xs, ys), os) in x[..split]
+        .chunks_exact(LANES)
+        .zip(y[..split].chunks_exact(LANES))
+        .zip(oc.chunks_exact_mut(LANES))
+    {
+        for l in 0..LANES {
+            os[l] = xs[l] - ys[l];
+        }
+    }
+    for ((xv, yv), ov) in x[split..].iter().zip(y[split..].iter()).zip(or.iter_mut()) {
+        *ov = xv - yv;
     }
 }
 
@@ -74,17 +148,27 @@ pub fn sub(x: &[f64], y: &[f64], out: &mut [f64]) {
 #[inline]
 pub fn add(x: &[f64], y: &[f64], out: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        out[i] = x[i] + y[i];
+    debug_assert_eq!(x.len(), out.len());
+    let split = x.len() - x.len() % LANES;
+    let (oc, or) = out.split_at_mut(split);
+    for ((xs, ys), os) in x[..split]
+        .chunks_exact(LANES)
+        .zip(y[..split].chunks_exact(LANES))
+        .zip(oc.chunks_exact_mut(LANES))
+    {
+        for l in 0..LANES {
+            os[l] = xs[l] + ys[l];
+        }
+    }
+    for ((xv, yv), ov) in x[split..].iter().zip(y[split..].iter()).zip(or.iter_mut()) {
+        *ov = xv + yv;
     }
 }
 
 /// Set all entries to zero.
 #[inline]
 pub fn zero(x: &mut [f64]) {
-    for v in x.iter_mut() {
-        *v = 0.0;
-    }
+    x.fill(0.0);
 }
 
 /// Elementwise mean of a set of equal-length vectors.
@@ -156,5 +240,46 @@ mod tests {
         let y = vec![4.0, 6.0];
         assert_eq!(dist_sq(&x, &y), 25.0);
         assert_eq!(max_abs_diff(&x, &y), 4.0);
+    }
+
+    /// Elementwise ops must be bit-identical to the scalar reference at
+    /// every length around the LANES boundary (the chunking contract).
+    #[test]
+    fn chunked_elementwise_matches_scalar_reference() {
+        for d in 0..=19usize {
+            let x: Vec<f64> = (0..d).map(|i| (i as f64 * 0.37).sin() * 3.0).collect();
+            let y0: Vec<f64> = (0..d).map(|i| (i as f64 * 0.11).cos() - 0.4).collect();
+            let mut y = y0.clone();
+            axpy(-1.75, &x, &mut y);
+            let reference: Vec<f64> = (0..d).map(|i| y0[i] + -1.75 * x[i]).collect();
+            assert_eq!(y, reference, "axpy d={d}");
+            let mut s = x.clone();
+            scale(0.3, &mut s);
+            let reference: Vec<f64> = x.iter().map(|v| v * 0.3).collect();
+            assert_eq!(s, reference, "scale d={d}");
+            let mut o = vec![0.0; d];
+            sub(&x, &y0, &mut o);
+            let reference: Vec<f64> = (0..d).map(|i| x[i] - y0[i]).collect();
+            assert_eq!(o, reference, "sub d={d}");
+            add(&x, &y0, &mut o);
+            let reference: Vec<f64> = (0..d).map(|i| x[i] + y0[i]).collect();
+            assert_eq!(o, reference, "add d={d}");
+        }
+    }
+
+    /// Reductions use a fixed lane-combine order: deterministic (same
+    /// result on every call/platform) and exact on integer-valued data.
+    #[test]
+    fn reductions_deterministic_and_exact_on_integers() {
+        let x: Vec<f64> = (0..13).map(|i| (i % 5) as f64 - 2.0).collect();
+        let y: Vec<f64> = (0..13).map(|i| (i % 3) as f64).collect();
+        let exact: f64 = (0..13).map(|i| x[i] * y[i]).sum();
+        assert_eq!(dot(&x, &y), exact); // integer-valued: order-independent
+        assert_eq!(dot(&x, &y).to_bits(), dot(&x, &y).to_bits());
+        let l1: f64 = x.iter().map(|v| v.abs()).sum();
+        assert_eq!(norm1(&x), l1);
+        assert_eq!(dist_sq(&x, &x), 0.0);
+        let gap: f64 = (0..13).map(|i| (x[i] - y[i]) * (x[i] - y[i])).sum();
+        assert_eq!(dist_sq(&x, &y), gap);
     }
 }

@@ -169,6 +169,84 @@ fn prop_codec_rejects_truncation_and_corruption() {
     });
 }
 
+/// Random quantized messages for the entropy-tier properties: peaked or
+/// wide integer level distributions with an f32-narrowed scale, exactly
+/// the family `qsgd_s` emits.
+fn random_quantized(g: &mut Gen) -> Compressed {
+    let d = g.usize_in(1, 120);
+    let spread = [0.6, 2.0, 8.0, 60.0][g.usize_in(0, 3)];
+    let center = g.usize_in(0, 40) as f64 - 20.0;
+    let mut z = vec![0.0; d];
+    g.rng.fill_gaussian(&mut z);
+    let levels: Vec<i32> = z.iter().map(|v| (center + v * spread).round() as i32).collect();
+    let scale = g.f64_in(0.01, 2.0) as f32 as f64;
+    let bits_per_coord = g.usize_in(0, 16) as u8;
+    Compressed {
+        dim: d,
+        payload: Payload::Quantized { scale, bits_per_coord, levels },
+        wire_bits: 0,
+    }
+}
+
+/// The Huffman tier (codec id 7) round-trips every quantized message
+/// bit-exactly, and its frames are size-honest: the frame length equals
+/// the fixed header plus exactly `cost_bits` rounded up to whole bytes —
+/// the same "cost scan never lies" guarantee the flat codecs carry.
+#[test]
+fn prop_entropy_tier_roundtrip_and_size_honest() {
+    use choco::compress::codec::entropy::{QuantHuff, UNENCODABLE};
+    use choco::compress::codec::Codec;
+    check("entropy_tier_roundtrip", CASES, |g| {
+        let c = random_quantized(g);
+        let cost = QuantHuff.cost_bits(&c);
+        if cost == UNENCODABLE {
+            return Err("huffman tier refused an in-range level distribution".into());
+        }
+        let frame = codec::encode_with(&QuantHuff, &c);
+        let claimed = codec::HEADER_BITS + cost.div_ceil(8) * 8;
+        if frame.len() as u64 * 8 != claimed {
+            return Err(format!(
+                "size claim dishonest: frame {} bits, claimed {claimed}",
+                frame.len() * 8
+            ));
+        }
+        if frame[2] != codec::QUANT_HUFF {
+            return Err(format!("frame carries codec id {}, expected 7", frame[2]));
+        }
+        let back = codec::decode(&frame, c.dim).map_err(String::from)?;
+        if format!("{:?}", back.payload) != format!("{:?}", c.payload) {
+            return Err("entropy round-trip not bit-exact".into());
+        }
+        Ok(())
+    });
+}
+
+/// Huffman frames inherit the framing layer's tamper-evidence: strict
+/// prefixes and single flipped bits never decode, including flips inside
+/// the serialized code-length table (a forged table must be rejected by
+/// the checksum or by the decoder's Kraft-completeness validation).
+#[test]
+fn prop_entropy_tier_rejects_truncation_and_corruption() {
+    use choco::compress::codec::entropy::QuantHuff;
+    check("entropy_tier_rejects_mutation", CASES, |g| {
+        let c = random_quantized(g);
+        let frame = codec::encode_with(&QuantHuff, &c);
+        for cut in [0, frame.len() / 2, frame.len() - 1] {
+            if codec::decode(&frame[..cut], c.dim).is_ok() {
+                return Err(format!("accepted a {cut}-byte prefix of a huffman frame"));
+            }
+        }
+        let pos = g.rng.index(frame.len());
+        let bit = g.rng.index(8);
+        let mut bad = frame.clone();
+        bad[pos] ^= 1 << bit;
+        if codec::decode(&bad, c.dim).is_ok() {
+            return Err(format!("flipped bit {bit} of byte {pos} went undetected"));
+        }
+        Ok(())
+    });
+}
+
 /// Mixing matrices are symmetric doubly stochastic with δ > 0 on every
 /// connected graph, under all weight rules.
 #[test]

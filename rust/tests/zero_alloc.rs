@@ -2,22 +2,29 @@
 //!
 //! The persistent runtime exists so that `run_rounds`/`step` reuse
 //! everything round over round: parked workers, slot arenas, node-side
-//! message buffers, and the accounting grid. This test pins the claim
-//! with a counting global allocator: after a short warmup (which sizes
-//! every buffer), an armed window around five single-round `step()`
-//! calls must observe **zero** allocations — from the driving thread and
-//! from every pool worker alike (the counter is global and the workers
-//! do the actual round work).
+//! message buffers, compressor scratch (the thread-local top-k magnitude
+//! and qsgd uniform buffers in `compress/ops.rs`), and the accounting
+//! grid. These tests pin the claim with a counting global allocator:
+//! after a short warmup (which sizes every buffer), an armed window
+//! around five single-round `step()` calls must observe **zero**
+//! allocations — from the driving thread and from every pool worker
+//! alike (the counter is global and the workers do the actual round
+//! work). One test per compressor family with its own hot path: `qsgd`
+//! (quantized levels + uniform scratch) and `top_k` (sparse payload +
+//! quickselect magnitude scratch).
 //!
-//! The test lives in its own integration binary because a
+//! The tests live in their own integration binary because a
 //! `#[global_allocator]` is process-wide: mixing it into a shared test
 //! binary would make every other test pay the (tiny) counting overhead
-//! and would race other tests' allocations into the armed window.
+//! and would race other tests' allocations into the armed window. For
+//! the same reason the armed windows themselves are serialized through a
+//! mutex — the test harness runs `#[test]` fns on parallel threads.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
-use choco::compress::QsgdS;
+use choco::compress::{Compressor, QsgdS, TopK};
 use choco::consensus::{make_nodes, Scheme};
 use choco::coordinator::{LinkModel, ShardedEngine};
 use choco::topology::{uniform_local_weights, Graph};
@@ -30,6 +37,8 @@ struct CountingAlloc;
 
 static ARMED: AtomicBool = AtomicBool::new(false);
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Serializes armed windows across tests (the counter is process-global).
+static GATE: Mutex<()> = Mutex::new(());
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
@@ -61,8 +70,10 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static COUNTER: CountingAlloc = CountingAlloc;
 
-#[test]
-fn steady_state_rounds_do_not_allocate() {
+/// Build a 4×8 torus CHOCO run with the given operator, warm it up, then
+/// assert five steady-state rounds allocate nothing.
+fn assert_steady_state_zero_alloc(op: Box<dyn Compressor>) {
+    let name = op.name();
     let g = Graph::torus2d(4, 8);
     let n = g.n();
     let d = 32;
@@ -75,16 +86,18 @@ fn steady_state_rounds_do_not_allocate() {
             v
         })
         .collect();
-    let scheme = Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) };
+    let scheme = Scheme::Choco { gamma: 0.3, op };
     let nodes = make_nodes(&scheme, &x0, &lw);
     let mut engine = ShardedEngine::with_shards(nodes, &g, 7, LinkModel::default(), 4);
     // Warmup: first rounds size the slot arenas, node-side message
-    // buffers, and the accounting grid (run_rounds(3) sizes the grid for
-    // k up to 3, so the single-round steps below can never outgrow it).
+    // buffers, thread-local compressor scratch, and the accounting grid
+    // (run_rounds(3) sizes the grid for k up to 3, so the single-round
+    // steps below can never outgrow it).
     engine.run_rounds(3);
     engine.step();
     let before = engine.acct.rounds;
     // Armed window: five steady-state rounds, zero heap traffic allowed.
+    let gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
     ALLOCS.store(0, Ordering::SeqCst);
     ARMED.store(true, Ordering::SeqCst);
     for _ in 0..5 {
@@ -92,7 +105,18 @@ fn steady_state_rounds_do_not_allocate() {
     }
     ARMED.store(false, Ordering::SeqCst);
     let allocs = ALLOCS.load(Ordering::SeqCst);
-    assert_eq!(engine.acct.rounds, before + 5, "engine must actually have run");
-    assert!(engine.acct.bits > 0, "rounds must move real traffic");
-    assert_eq!(allocs, 0, "steady-state rounds allocated {allocs} times; expected zero");
+    drop(gate);
+    assert_eq!(engine.acct.rounds, before + 5, "[{name}] engine must actually have run");
+    assert!(engine.acct.bits > 0, "[{name}] rounds must move real traffic");
+    assert_eq!(allocs, 0, "[{name}] steady-state rounds allocated {allocs} times; expected zero");
+}
+
+#[test]
+fn steady_state_rounds_do_not_allocate_qsgd() {
+    assert_steady_state_zero_alloc(Box::new(QsgdS { s: 16 }));
+}
+
+#[test]
+fn steady_state_rounds_do_not_allocate_topk() {
+    assert_steady_state_zero_alloc(Box::new(TopK { k: 8 }));
 }
