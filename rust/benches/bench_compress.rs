@@ -24,11 +24,17 @@ use choco::linalg::vecops;
 use choco::util::json::{self, Json};
 use choco::util::rng::Rng;
 
-fn row(name: &str, d: usize, secs_per_iter: f64, bits_per_coord: f64) -> Json {
+/// One JSON row. `secs_per_iter` is the harness median (of 10 timed
+/// batches); the row also records the batch spread `(max − min)/median`
+/// of the most recent measurement so the trajectory captures machine
+/// noise alongside the midpoint — the context that justifies running the
+/// `--strict` ceiling gate as a blocking CI step.
+fn row(h: &Harness, name: &str, d: usize, secs_per_iter: f64, bits_per_coord: f64) -> Json {
     Json::obj(vec![
         ("name", Json::Str(name.to_string())),
         ("d", Json::Num(d as f64)),
         ("ns_per_coord", Json::Num(secs_per_iter * 1e9 / d as f64)),
+        ("ns_spread", Json::Num(h.last_spread())),
         ("bits_per_coord", Json::Num(bits_per_coord)),
     ])
 }
@@ -50,22 +56,22 @@ fn main() {
         black_box(QsgdS { s: 16 }.compress(&x, &mut rng));
     });
     let c = QsgdS { s: 16 }.compress(&x, &mut rng);
-    rows.push(row("qsgd_16 compress", d, med, c.wire_bits as f64 / items));
+    rows.push(row(&h,"qsgd_16 compress", d, med, c.wire_bits as f64 / items));
     let med = h.bench_throughput("top_k 1% compress d=2000", items, || {
         black_box(TopK { k: 20 }.compress(&x, &mut rng));
     });
     let c = TopK { k: 20 }.compress(&x, &mut rng);
-    rows.push(row("top_k_20 compress", d, med, c.wire_bits as f64 / items));
+    rows.push(row(&h,"top_k_20 compress", d, med, c.wire_bits as f64 / items));
     let med = h.bench_throughput("rand_k 1% compress d=2000", items, || {
         black_box(RandK { k: 20 }.compress(&x, &mut rng));
     });
     let c = RandK { k: 20 }.compress(&x, &mut rng);
-    rows.push(row("rand_k_20 compress", d, med, c.wire_bits as f64 / items));
+    rows.push(row(&h,"rand_k_20 compress", d, med, c.wire_bits as f64 / items));
     let med = h.bench_throughput("sign compress d=2000", items, || {
         black_box(ScaledSign.compress(&x, &mut rng));
     });
     let c = ScaledSign.compress(&x, &mut rng);
-    rows.push(row("sign compress", d, med, c.wire_bits as f64 / items));
+    rows.push(row(&h,"sign compress", d, med, c.wire_bits as f64 / items));
 
     // -- codec frame families (bits column = measured frame bits)
     let msg_quant = QsgdS { s: 16 }.compress(&x, &mut rng);
@@ -73,22 +79,22 @@ fn main() {
     let med = h.bench_throughput("qsgd encode (quant_pack)", items, || {
         black_box(codec::encode(&msg_quant));
     });
-    rows.push(row("qsgd encode", d, med, bytes_quant.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"qsgd encode", d, med, bytes_quant.len() as f64 * 8.0 / items));
     let med = h.bench_throughput("qsgd decode (quant_pack)", items, || {
         black_box(codec::decode(&bytes_quant, d).unwrap());
     });
-    rows.push(row("qsgd decode", d, med, bytes_quant.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"qsgd decode", d, med, bytes_quant.len() as f64 * 8.0 / items));
 
     let msg_dense = Identity.compress(&x, &mut rng);
     let bytes_dense = codec::encode(&msg_dense);
     let med = h.bench_throughput("dense encode (best codec)", items, || {
         black_box(codec::encode(&msg_dense));
     });
-    rows.push(row("dense encode", d, med, bytes_dense.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"dense encode", d, med, bytes_dense.len() as f64 * 8.0 / items));
     let med = h.bench_throughput("dense decode (best codec)", items, || {
         black_box(codec::decode(&bytes_dense, d).unwrap());
     });
-    rows.push(row("dense decode", d, med, bytes_dense.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"dense decode", d, med, bytes_dense.len() as f64 * 8.0 / items));
 
     // the XOR family specifically (the gorilla-style unaligned bit stream,
     // the hardest path for the word-buffered bit I/O)
@@ -97,44 +103,44 @@ fn main() {
     let med = h.bench_throughput("dense_xor encode", items, || {
         black_box(codec::encode_with(xor, &msg_dense));
     });
-    rows.push(row("dense_xor encode", d, med, bytes_xor.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"dense_xor encode", d, med, bytes_xor.len() as f64 * 8.0 / items));
     let med = h.bench_throughput("dense_xor decode", items, || {
         black_box(codec::decode(&bytes_xor, d).unwrap());
     });
-    rows.push(row("dense_xor decode", d, med, bytes_xor.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"dense_xor decode", d, med, bytes_xor.len() as f64 * 8.0 / items));
 
     let msg_sparse = TopK { k: 20 }.compress(&x, &mut rng);
     let bytes_sparse = codec::encode(&msg_sparse);
     let med = h.bench_throughput("sparse encode (k=20)", items, || {
         black_box(codec::encode(&msg_sparse));
     });
-    rows.push(row("sparse encode", d, med, bytes_sparse.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"sparse encode", d, med, bytes_sparse.len() as f64 * 8.0 / items));
     let med = h.bench_throughput("sparse decode (k=20)", items, || {
         black_box(codec::decode(&bytes_sparse, d).unwrap());
     });
-    rows.push(row("sparse decode", d, med, bytes_sparse.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"sparse decode", d, med, bytes_sparse.len() as f64 * 8.0 / items));
 
     let msg_sign = ScaledSign.compress(&x, &mut rng);
     let bytes_sign = codec::encode(&msg_sign);
     let med = h.bench_throughput("sign encode", items, || {
         black_box(codec::encode(&msg_sign));
     });
-    rows.push(row("sign encode", d, med, bytes_sign.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"sign encode", d, med, bytes_sign.len() as f64 * 8.0 / items));
     let med = h.bench_throughput("sign decode", items, || {
         black_box(codec::decode(&bytes_sign, d).unwrap());
     });
-    rows.push(row("sign decode", d, med, bytes_sign.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"sign decode", d, med, bytes_sign.len() as f64 * 8.0 / items));
 
     // entropy tier (codec 7): Huffman over the same quantized message
     let bytes_huff = codec::encode_with(&QuantHuff, &msg_quant);
     let med = h.bench_throughput("quant_huff encode", items, || {
         black_box(codec::encode_with(&QuantHuff, &msg_quant));
     });
-    rows.push(row("quant_huff encode", d, med, bytes_huff.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"quant_huff encode", d, med, bytes_huff.len() as f64 * 8.0 / items));
     let med = h.bench_throughput("quant_huff decode", items, || {
         black_box(codec::decode(&bytes_huff, d).unwrap());
     });
-    rows.push(row("quant_huff decode", d, med, bytes_huff.len() as f64 * 8.0 / items));
+    rows.push(row(&h,"quant_huff decode", d, med, bytes_huff.len() as f64 * 8.0 / items));
 
     // -- vecops hot loops (no wire: bits column is 0)
     let mut y = vec![0.0; d];
@@ -142,11 +148,11 @@ fn main() {
     let med = h.bench_throughput("vecops axpy d=2000", items, || {
         vecops::axpy(black_box(0.5), &x, &mut y);
     });
-    rows.push(row("vecops axpy", d, med, 0.0));
+    rows.push(row(&h,"vecops axpy", d, med, 0.0));
     let med = h.bench_throughput("vecops dot d=2000", items, || {
         black_box(vecops::dot(&x, &y));
     });
-    rows.push(row("vecops dot", d, med, 0.0));
+    rows.push(row(&h,"vecops dot", d, med, 0.0));
 
     // -- top_k scaling (quickselect O(d) vs sort O(d log d) reference)
     for dd in [10_000usize, 100_000] {

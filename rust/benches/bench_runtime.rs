@@ -10,13 +10,17 @@
 //! 2. **PJRT artifact latency** — gradient round trips vs the native
 //!    implementations. Skipped when artifacts aren't built.
 //!
-//! `CHOCO_BENCH_FAST=1` shrinks round counts for CI. The sweep diffs its
-//! rows against `BENCH_scale.baseline.json`; by default regressions are
-//! advisory warnings, but `--strict` (or `CHOCO_BENCH_STRICT=1`) turns a
-//! >30% rounds/sec drop into a non-zero exit — the CI large-n-smoke job
-//! runs this mode.
+//! `CHOCO_BENCH_FAST=1` shrinks round counts for CI. In full mode every
+//! rounds/sec figure is the **median of 3** independent repetitions and
+//! each row carries its relative spread `(max − min)/median`, so one
+//! descheduled repetition cannot fake a regression — which is what lets
+//! the `--strict` baseline gate run as a *blocking* CI step. The sweep
+//! diffs its medians against `BENCH_scale.baseline.json`; `--strict` (or
+//! `CHOCO_BENCH_STRICT=1`) turns a >30% rounds/sec drop into a non-zero
+//! exit — the CI large-n-smoke job runs this mode. Rows also report the
+//! compact CHOCO node's resident state bytes per node.
 
-use choco::benchlib::{black_box, compare_scale_baseline, Harness};
+use choco::benchlib::{black_box, compare_scale_baseline, median_spread, Harness};
 use choco::compress::QsgdS;
 use choco::consensus::{make_nodes, GossipNode, Scheme};
 use choco::coordinator::{LinkModel, RoundEngine, ShardedEngine};
@@ -64,6 +68,14 @@ fn time_sharded(g: &Graph, d: usize, rounds: usize, warmup: usize, shards: usize
     rounds as f64 / t0.elapsed().as_secs_f64().max(1e-12)
 }
 
+/// Mean resident algorithm-state bytes per node (≤64-node sample of the
+/// sweep's node set): the compact CHOCO node's memory column.
+fn state_bytes_per_node(g: &Graph, d: usize) -> f64 {
+    let nodes = gossip_nodes(g, d, 1);
+    let k = nodes.len().min(64);
+    nodes[..k].iter().map(|n| n.state_bytes()).sum::<usize>() as f64 / k as f64
+}
+
 /// Bounded-budget δ estimate: rings at n ~ 10⁴ have near-degenerate λ₂,
 /// so this trades certified accuracy for bench-scale wall time.
 fn delta_estimate(g: &Graph, max_iters: usize) -> f64 {
@@ -80,16 +92,18 @@ fn gossip_scaling_sweep() -> usize {
     let d = 64;
     let rounds = if fast { 5 } else { 30 };
     let warmup = if fast { 1 } else { 3 };
+    let reps = if fast { 1 } else { 3 };
     let delta_iters = if fast { 2_000 } else { 20_000 };
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     println!(
-        "== n-scaling: CHOCO-GOSSIP (qsgd_16, d={d}), {rounds} timed rounds, {cores} cores =="
+        "== n-scaling: CHOCO-GOSSIP (qsgd_16, d={d}), {rounds} timed rounds × {reps} reps \
+         (median), {cores} cores =="
     );
     println!(
-        "{:<16} {:>7} {:>11} {:>14} {:>15} {:>9}",
-        "topology", "n", "delta", "serial r/s", "sharded r/s", "speedup"
+        "{:<16} {:>7} {:>11} {:>14} {:>15} {:>9} {:>8} {:>8}",
+        "topology", "n", "delta", "serial r/s", "sharded r/s", "speedup", "spread", "B/node"
     );
-    let graphs: Vec<Graph> = vec![
+    let mut graphs: Vec<Graph> = vec![
         Graph::ring(1024),
         Graph::ring(2048),
         Graph::ring(4096),
@@ -99,27 +113,44 @@ fn gossip_scaling_sweep() -> usize {
         Graph::torus_square(16384),
         Graph::hypercube(13), // 8192 nodes, log-degree: heavier in-edges
     ];
+    if !fast {
+        // the n = 10⁵ row (work-stealing scheduler + compact node state);
+        // too heavy for the fast-mode CI pass
+        graphs.push(Graph::torus2d(250, 400));
+    }
     let mut rows: Vec<Json> = Vec::new();
     for g in &graphs {
-        let delta = delta_estimate(g, delta_iters);
-        let serial = time_serial(g, d, rounds, warmup);
-        let sharded = time_sharded(g, d, rounds, warmup, cores);
+        // power iteration is O(n·deg) per iter: trim the budget at 10⁵+
+        let iters = if g.n() >= 100_000 { delta_iters.min(2_000) } else { delta_iters };
+        let delta = delta_estimate(g, iters);
+        let serial_samples: Vec<f64> =
+            (0..reps).map(|_| time_serial(g, d, rounds, warmup)).collect();
+        let sharded_samples: Vec<f64> =
+            (0..reps).map(|_| time_sharded(g, d, rounds, warmup, cores)).collect();
+        let (serial, serial_spread) = median_spread(&serial_samples);
+        let (sharded, sharded_spread) = median_spread(&sharded_samples);
+        let bytes_per_node = state_bytes_per_node(g, d);
         println!(
-            "{:<16} {:>7} {:>11.3e} {:>14.1} {:>15.1} {:>8.2}×",
+            "{:<16} {:>7} {:>11.3e} {:>14.1} {:>15.1} {:>8.2}× {:>7.0}% {:>8.0}",
             g.name(),
             g.n(),
             delta,
             serial,
             sharded,
-            sharded / serial
+            sharded / serial,
+            serial_spread.max(sharded_spread) * 100.0,
+            bytes_per_node
         );
         rows.push(Json::obj(vec![
             ("topology", Json::Str(g.name().to_string())),
             ("n", Json::Num(g.n() as f64)),
             ("delta_est", Json::Num(delta)),
             ("serial_rps", Json::Num(serial)),
+            ("serial_spread", Json::Num(serial_spread)),
             ("sharded_rps", Json::Num(sharded)),
+            ("sharded_spread", Json::Num(sharded_spread)),
             ("speedup", Json::Num(sharded / serial)),
+            ("state_bytes_per_node", Json::Num(bytes_per_node)),
         ]));
     }
     // shard-count sensitivity at one fixed size
@@ -127,11 +158,14 @@ fn gossip_scaling_sweep() -> usize {
     println!("-- shard sensitivity, {} --", g.name());
     let mut sensitivity: Vec<Json> = Vec::new();
     for shards in [1usize, 2, 4, 8] {
-        let rps = time_sharded(&g, d, rounds, warmup, shards);
-        println!("  shards={shards:<3} {rps:>10.1} rounds/s");
+        let samples: Vec<f64> =
+            (0..reps).map(|_| time_sharded(&g, d, rounds, warmup, shards)).collect();
+        let (rps, spread) = median_spread(&samples);
+        println!("  shards={shards:<3} {rps:>10.1} rounds/s (±{:.0}%)", spread * 100.0);
         sensitivity.push(Json::obj(vec![
             ("shards", Json::Num(shards as f64)),
             ("rounds_per_sec", Json::Num(rps)),
+            ("spread", Json::Num(spread)),
         ]));
     }
     // Machine-readable trajectory: one file per run, uploaded as a CI
@@ -140,6 +174,7 @@ fn gossip_scaling_sweep() -> usize {
         ("bench", Json::Str("bench_runtime_scale".into())),
         ("d", Json::Num(d as f64)),
         ("rounds", Json::Num(rounds as f64)),
+        ("reps", Json::Num(reps as f64)),
         ("cores", Json::Num(cores as f64)),
         ("fast_mode", Json::Bool(fast)),
         ("delta_power_iters", Json::Num(delta_iters as f64)),

@@ -90,6 +90,22 @@ impl Harness {
         med
     }
 
+    /// Relative spread `(max − min)/p50` of the most recent benchmark's
+    /// batch samples — emitted next to each median so a bench trajectory
+    /// records how noisy the machine was, not just the midpoint.
+    pub fn last_spread(&self) -> f64 {
+        self.results
+            .last()
+            .map(|r| {
+                if r.summary.p50 > 0.0 {
+                    (r.summary.max - r.summary.min) / r.summary.p50
+                } else {
+                    0.0
+                }
+            })
+            .unwrap_or(0.0)
+    }
+
     /// Print a report table.
     pub fn report(&self) {
         println!("\n== {} ==", self.group);
@@ -119,6 +135,20 @@ impl Harness {
             );
         }
     }
+}
+
+/// Median and relative spread `(max − min)/median` of a handful of
+/// repeated measurements. The scale sweep times each row several times
+/// and gates the `--strict` baseline diff on the median, so a single
+/// descheduled repetition cannot fake a >30% regression — the property
+/// that lets CI run the gate as blocking instead of advisory.
+pub fn median_spread(samples: &[f64]) -> (f64, f64) {
+    assert!(!samples.is_empty(), "median_spread needs at least one sample");
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("bench samples must not be NaN"));
+    let med = v[v.len() / 2];
+    let spread = if med > 0.0 { (v[v.len() - 1] - v[0]) / med } else { 0.0 };
+    (med, spread)
 }
 
 /// Extract `(topology, n, serial_rps, sharded_rps)` rows from a
@@ -323,6 +353,18 @@ mod tests {
         // malformed rows are skipped, never spuriously warned about
         let empty = Json::obj(vec![("rows", Json::Arr(vec![Json::Null]))]);
         assert!(compare_compress_baseline(&empty, &empty, 0.5).is_empty());
+    }
+
+    #[test]
+    fn median_spread_is_odd_sample_robust() {
+        // one wild outlier must not move the median
+        let (med, spread) = median_spread(&[100.0, 40.0, 98.0]);
+        assert_eq!(med, 98.0);
+        assert!((spread - 60.0 / 98.0).abs() < 1e-12);
+        // a single sample: median is the sample, spread zero
+        let (med, spread) = median_spread(&[7.0]);
+        assert_eq!(med, 7.0);
+        assert_eq!(spread, 0.0);
     }
 
     #[test]

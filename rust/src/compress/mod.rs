@@ -200,6 +200,50 @@ impl Compressed {
         }
     }
 
+    /// `out += alpha * decode(self)` over a state vector of either scalar
+    /// width — the [`StateScalar`] twin of [`Compressed::add_into`], used
+    /// by nodes that keep their compression-tracking state in `f32` (the
+    /// `f32-state` feature). Accumulation happens in f64 per coordinate
+    /// (`out[i] = S(f64(out[i]) + alpha·vᵢ)`), so the `f64` instantiation
+    /// applies exactly the scalar arithmetic of `add_into`'s dense/sparse
+    /// arms; the update order is per-coordinate independent, hence
+    /// deterministic under any engine.
+    pub fn add_into_state<S: StateScalar>(&self, alpha: f64, out: &mut [S]) {
+        if matches!(self.payload, Payload::Zero) {
+            return;
+        }
+        assert_eq!(out.len(), self.dim);
+        match &self.payload {
+            Payload::Zero => unreachable!(),
+            Payload::Dense(v) => {
+                for (o, &x) in out.iter_mut().zip(v.iter()) {
+                    *o = S::from_f64(o.to_f64() + alpha * x);
+                }
+            }
+            Payload::Sparse { indices, values } => {
+                for (&i, &v) in indices.iter().zip(values.iter()) {
+                    let o = &mut out[i as usize];
+                    *o = S::from_f64(o.to_f64() + alpha * v);
+                }
+            }
+            Payload::Quantized { scale, levels, .. } => {
+                let a = alpha * *scale;
+                for (o, &l) in out.iter_mut().zip(levels.iter()) {
+                    *o = S::from_f64(o.to_f64() + a * l as f64);
+                }
+            }
+            Payload::SignBitmap { scale, negatives } => {
+                let a = alpha * *scale;
+                for (os, &byte) in out.chunks_mut(8).zip(negatives.iter()) {
+                    for (j, o) in os.iter_mut().enumerate() {
+                        let v = if (byte >> j) & 1 == 1 { -a } else { a };
+                        *o = S::from_f64(o.to_f64() + v);
+                    }
+                }
+            }
+        }
+    }
+
     /// Number of explicitly-stored (nonzero) coordinates.
     pub fn nnz(&self) -> usize {
         match &self.payload {
@@ -209,6 +253,36 @@ impl Compressed {
             Payload::Quantized { levels, .. } => levels.iter().filter(|&&l| l != 0).count(),
             Payload::SignBitmap { .. } => self.dim,
         }
+    }
+}
+
+/// Scalar width of a node's resident tracking state (`f64` by default,
+/// `f32` under the `f32-state` cargo feature). Conversions round-trip
+/// exactly for `f64` (identity), and round-to-nearest for `f32`.
+pub trait StateScalar: Copy + Send + Sync + 'static {
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl StateScalar for f64 {
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl StateScalar for f32 {
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        f64::from(self)
     }
 }
 
@@ -247,3 +321,72 @@ pub trait Compressor: Send + Sync {
 pub use ops::{
     parse_compressor, DropP, Identity, QsgdS, RandK, Rescaled, ScaledSign, TopK,
 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn families(d: usize) -> Vec<Compressed> {
+        vec![
+            Compressed { dim: 0, payload: Payload::Zero, wire_bits: 8 },
+            Compressed {
+                dim: d,
+                payload: Payload::Dense((0..d).map(|i| i as f64 * 0.5 - 1.0).collect()),
+                wire_bits: 64,
+            },
+            Compressed {
+                dim: d,
+                payload: Payload::Sparse { indices: vec![1, 4, 6], values: vec![-2.0, 0.25, 3.5] },
+                wire_bits: 64,
+            },
+            Compressed {
+                dim: d,
+                payload: Payload::Quantized {
+                    scale: 0.75,
+                    bits_per_coord: 4,
+                    levels: (0..d as i32).map(|i| i - 3).collect(),
+                },
+                wire_bits: 64,
+            },
+            Compressed {
+                dim: d,
+                payload: Payload::SignBitmap { scale: 1.25, negatives: vec![0b1010_0110, 0b01] },
+                wire_bits: 64,
+            },
+        ]
+    }
+
+    #[test]
+    fn add_into_state_f64_matches_add_into() {
+        // The f64 instantiation must apply exactly the scalar arithmetic
+        // of add_into (the chunked kernels are elementwise, hence
+        // bit-identical to the scalar loop by the vecops contract).
+        let d = 10;
+        for msg in families(d) {
+            let base: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+            let mut a = base.clone();
+            let mut b = base.clone();
+            // (Zero payloads early-return before the length check.)
+            msg.add_into(0.3, &mut a);
+            msg.add_into_state::<f64>(0.3, &mut b);
+            assert_eq!(a, b, "payload {:?}", msg.payload);
+        }
+    }
+
+    #[test]
+    fn add_into_state_f32_tracks_f64_within_rounding() {
+        let d = 10;
+        for msg in families(d) {
+            if msg.dim == 0 {
+                continue;
+            }
+            let mut wide = vec![0.0f64; d];
+            let mut narrow = vec![0.0f32; d];
+            msg.add_into(1.0, &mut wide);
+            msg.add_into_state::<f32>(1.0, &mut narrow);
+            for (w, n) in wide.iter().zip(narrow.iter()) {
+                assert!((w - n.to_f64()).abs() <= w.abs() * 1e-6 + 1e-6);
+            }
+        }
+    }
+}

@@ -95,6 +95,11 @@ impl GossipNode for ChocoEfficientNode {
     fn x(&self) -> &[f64] {
         &self.x
     }
+
+    fn state_bytes(&self) -> usize {
+        // x, x̂, s, diff scratch — four f64 d-vectors, degree-independent.
+        4 * self.x.len() * std::mem::size_of::<f64>()
+    }
 }
 
 #[cfg(test)]

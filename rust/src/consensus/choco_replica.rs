@@ -1,0 +1,204 @@
+//! CHOCO-Gossip, Algorithm 1, literal per-neighbor-replica form.
+//!
+//! This is the paper's Algorithm 1 exactly as written: every node keeps
+//! its own public estimate `x̂ᵢ` *and a full copy of each neighbor's*
+//! `x̂ⱼ`, so per-node state grows as `(deg(i) + 2)` d-vectors. That makes
+//! it the reference implementation for correctness (Remark 12's
+//! copy-consistency invariant is directly checkable) and the memory
+//! *baseline* the compact form in [`super::choco`] is measured against —
+//! but a memory wall at large n: a degree-4 torus at n = 10⁶, d = 64
+//! costs ~3 GiB in `x̂ⱼ` replicas alone.
+//!
+//! Per round:
+//!
+//! ```text
+//! qᵢ = Q(xᵢ − x̂ᵢ)                      (line 2)
+//! broadcast qᵢ, receive qⱼ             (line 4)
+//! x̂ⱼ ← x̂ⱼ + qⱼ   ∀j ∈ N(i) ∪ {i}      (line 5)
+//! xᵢ ← xᵢ + γ Σⱼ w_ij (x̂ⱼ − x̂ᵢ)       (line 7)
+//! ```
+
+use super::GossipNode;
+use crate::compress::{Compressed, Compressor};
+use crate::topology::LocalWeights;
+use crate::util::rng::Rng;
+
+pub struct ChocoReplicaNode {
+    x: Vec<f64>,
+    /// Own public estimate x̂ᵢ.
+    xhat_self: Vec<f64>,
+    /// Neighbor public estimates x̂ⱼ, aligned with `weights.neighbors`.
+    xhat_nb: Vec<Vec<f64>>,
+    weights: LocalWeights,
+    gamma: f64,
+    op: Box<dyn Compressor>,
+    /// Own broadcast of the current round (applied in end_round). The
+    /// buffer persists across rounds — compressed in place each round so
+    /// steady-state rounds never touch the allocator.
+    own_msg: Compressed,
+    /// Guards against end_round without a matching begin_round.
+    own_fresh: bool,
+    /// Reusable scratch (perf pass: avoids two d-vector allocations per
+    /// node per round).
+    diff_buf: Vec<f64>,
+    accum_buf: Vec<f64>,
+}
+
+impl ChocoReplicaNode {
+    pub fn new(x0: Vec<f64>, weights: LocalWeights, gamma: f64, op: &dyn Compressor) -> Self {
+        assert!(gamma > 0.0 && gamma <= 1.0, "consensus stepsize must be in (0,1]");
+        let d = x0.len();
+        let nnb = weights.neighbors.len();
+        Self {
+            x: x0,
+            xhat_self: vec![0.0; d],
+            xhat_nb: vec![vec![0.0; d]; nnb],
+            weights,
+            gamma,
+            op: op.clone_box(),
+            own_msg: Compressed::empty(),
+            own_fresh: false,
+            diff_buf: vec![0.0; d],
+            accum_buf: vec![0.0; d],
+        }
+    }
+
+    fn nb_slot(&self, j: usize) -> usize {
+        self.weights
+            .neighbors
+            .iter()
+            .position(|(nid, _)| *nid == j)
+            .unwrap_or_else(|| panic!("message from non-neighbor {j}"))
+    }
+}
+
+impl GossipNode for ChocoReplicaNode {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn begin_round(&mut self, t: usize, rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.begin_round_into(t, rng, &mut out);
+        out
+    }
+
+    fn begin_round_into(&mut self, _t: usize, rng: &mut Rng, out: &mut Compressed) {
+        self.diff_buf.copy_from_slice(&self.x);
+        crate::linalg::vecops::axpy(-1.0, &self.xhat_self, &mut self.diff_buf);
+        self.op.compress_into(&self.diff_buf, rng, &mut self.own_msg);
+        self.own_fresh = true;
+        out.clone_from(&self.own_msg);
+    }
+
+    fn receive(&mut self, from: usize, msg: &Compressed) {
+        let slot = self.nb_slot(from);
+        msg.add_into(1.0, &mut self.xhat_nb[slot]);
+    }
+
+    fn end_round(&mut self, _t: usize) {
+        // x̂ᵢ ← x̂ᵢ + qᵢ (own slot).
+        assert!(self.own_fresh, "end_round before begin_round");
+        self.own_fresh = false;
+        self.own_msg.add_into(1.0, &mut self.xhat_self);
+        // xᵢ ← xᵢ + γ Σⱼ w_ij (x̂ⱼ − x̂ᵢ); the self term is zero.
+        crate::linalg::vecops::zero(&mut self.accum_buf);
+        let mut wsum = 0.0;
+        for (slot, (_, w)) in self.weights.neighbors.iter().enumerate() {
+            crate::linalg::vecops::axpy(*w, &self.xhat_nb[slot], &mut self.accum_buf);
+            wsum += *w;
+        }
+        crate::linalg::vecops::axpy(-wsum, &self.xhat_self, &mut self.accum_buf);
+        crate::linalg::vecops::axpy(self.gamma, &self.accum_buf, &mut self.x);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn state_bytes(&self) -> usize {
+        // x, x̂ᵢ, deg(i) neighbor replicas, diff/accum scratch — all f64
+        // d-vectors: (deg + 4)·8·d resident payload bytes.
+        (self.xhat_nb.len() + 4) * self.x.len() * std::mem::size_of::<f64>()
+    }
+}
+
+impl ChocoReplicaNode {
+    /// Own public estimate (used by tests checking x̂ → x̄).
+    pub fn xhat(&self) -> &[f64] {
+        &self.xhat_self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::TopK;
+    use crate::linalg::vecops;
+    use crate::topology::{local_weights, mixing_matrix, Graph, MixingRule};
+
+    fn random_x0(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_gaussian(&mut v);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn neighbor_copies_stay_consistent() {
+        // Remark 12: all copies of x̂ⱼ across the network remain equal.
+        // Only the replica form materializes the copies, so only it can
+        // verify the invariant directly.
+        let g = Graph::complete(4);
+        let w = mixing_matrix(&g, MixingRule::Uniform);
+        let lw = local_weights(&g, &w);
+        let d = 4;
+        let x0 = random_x0(4, d, 31);
+        let op = TopK { k: 1 };
+        let mut nodes: Vec<ChocoReplicaNode> = (0..4)
+            .map(|i| ChocoReplicaNode::new(x0[i].clone(), lw[i].clone(), 0.2, &op))
+            .collect();
+        let mut rngs: Vec<Rng> = (0..4).map(|i| Rng::for_stream(5, i as u64)).collect();
+        for t in 0..30 {
+            let msgs: Vec<Compressed> = nodes
+                .iter_mut()
+                .zip(rngs.iter_mut())
+                .map(|(n, r)| n.begin_round(t, r))
+                .collect();
+            for i in 0..4 {
+                for &j in g.neighbors(i) {
+                    nodes[i].receive(j, &msgs[j]);
+                }
+            }
+            for n in nodes.iter_mut() {
+                n.end_round(t);
+            }
+            // node 0's copy of x̂₁ must equal node 2's copy of x̂₁ and
+            // node 1's own x̂.
+            let slot_0for1 = nodes[0].nb_slot(1);
+            let slot_2for1 = nodes[2].nb_slot(1);
+            let a = nodes[0].xhat_nb[slot_0for1].clone();
+            let b = nodes[2].xhat_nb[slot_2for1].clone();
+            let own = nodes[1].xhat_self.clone();
+            assert!(vecops::max_abs_diff(&a, &b) == 0.0);
+            assert!(vecops::max_abs_diff(&a, &own) == 0.0);
+        }
+    }
+
+    #[test]
+    fn state_bytes_grows_with_degree() {
+        let d = 6;
+        let mk = |nnb: usize| {
+            let neighbors = (0..nnb).map(|j| (j + 1, 0.1)).collect();
+            let lw = LocalWeights { self_weight: 1.0 - 0.1 * nnb as f64, neighbors };
+            ChocoReplicaNode::new(vec![0.0; d], lw, 0.2, &TopK { k: 1 })
+        };
+        // (deg + 4) f64 d-vectors.
+        assert_eq!(mk(2).state_bytes(), 6 * d * 8);
+        assert_eq!(mk(4).state_bytes(), 8 * d * 8);
+    }
+}

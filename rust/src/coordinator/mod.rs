@@ -13,10 +13,11 @@
 //!   vertex set across a *persistent parked worker pool* (threads spawned
 //!   once per engine, woken by a condvar epoch handshake per
 //!   `run_rounds`/`step` call) with double-buffered per-slot message
-//!   arenas and one barrier per round; an edge-cut-aware BFS relabeling
-//!   pre-pass keeps each worker's deliveries shard-local even on
+//!   arenas and a work-stealing round scheduler; an edge-cut-aware
+//!   relabeling pre-pass (BFS, or Hilbert space-filling curve on 2-d
+//!   grids) keeps each worker's deliveries shard-local even on
 //!   Erdős–Rényi labelings. Steady-state rounds perform zero heap
-//!   allocations (`tests/zero_alloc.rs`); runs 10⁵-node graphs at full
+//!   allocations (`tests/zero_alloc.rs`); runs 10⁶-node graphs at full
 //!   core utilization;
 //! * [`actor`] — one thread per node with per-edge FIFO channels and real
 //!   serialized messages; proves the node implementations work as actual
@@ -58,7 +59,21 @@
 //!   exactly the bytes `begin_round` returns while consuming the RNG
 //!   identically; compressors uphold the same contract for
 //!   `compress_into` vs `compress`, and both are pinned by unit tests at
-//!   each layer.
+//!   each layer;
+//! * **work-stealing moves work, never effects** — under the default
+//!   [`sharded::Scheduler::Stealing`] dispatch, workers claim slot
+//!   chunks from per-phase atomic cursors instead of owning a fixed
+//!   range, so *which thread* processes a slot varies run to run. The
+//!   trajectory cannot: each slot is claimed by exactly one worker per
+//!   phase (`fetch_add` hands out disjoint chunks), every per-slot
+//!   computation keys its RNG stream, drop decisions, and delivery
+//!   order on original vertex ids exactly as in the static schedule,
+//!   and a mid-round barrier separates the broadcast phase (slot
+//!   writes) from the deliver/update phase (slot reads) so no claim
+//!   order can observe a half-written arena. Stealing therefore
+//!   changes wall-clock only; `tests/engine_equivalence.rs` re-locks
+//!   bit-identity between [`sharded::Scheduler::Static`] and stealing
+//!   at shard counts {1, 2, 7, n}.
 
 pub mod actor;
 pub mod events;
@@ -73,4 +88,4 @@ pub use events::{AsyncConfig, ChurnModel, EventEngine, LatencyModel, StragglerMo
 pub use metrics::{Accounting, Trace};
 pub use network::{LinkModel, NetworkSim};
 pub use round::{RoundConfig, RoundEngine};
-pub use sharded::ShardedEngine;
+pub use sharded::{Scheduler, ShardedEngine};

@@ -19,10 +19,18 @@
 //!   families are round-stable for every compressor, so steady-state
 //!   rounds perform zero heap allocations (pinned by
 //!   `tests/zero_alloc.rs`);
-//! * **edge-cut-aware relabeling** — a BFS pre-pass
+//! * **edge-cut-aware relabeling** — a pre-pass
 //!   ([`crate::topology::relabel::schedule_order`]) reorders the schedule
-//!   when that cuts fewer edges than the natural vertex order, so
-//!   Erdős–Rényi labelings stop being pessimal for contiguous chunks.
+//!   when BFS (scrambled labelings) or a Hilbert curve (2d lattices) cuts
+//!   fewer edges than the natural vertex order, so Erdős–Rényi labelings
+//!   and row-major tori stop being pessimal for contiguous chunks;
+//! * **work-stealing** ([`Scheduler::Stealing`], the default) — instead
+//!   of fixed per-worker slot ranges, each phase hands out fixed-size
+//!   slot chunks from a per-phase atomic cursor, so skewed degree
+//!   distributions (ER tails) no longer leave workers idle at the
+//!   barrier. Stealing runs two barriers per round (see the safety note
+//!   on [`run_shard`]); [`Scheduler::Static`] keeps the one-barrier
+//!   fixed-range schedule.
 //!
 //! Determinism contract (pinned by `tests/engine_equivalence.rs` for
 //! shard counts {1, 2, 7, n} on ring/torus/ER, relabeled runs included):
@@ -30,6 +38,13 @@
 //! * each node keeps its own RNG stream `Rng::for_stream(seed, i)` keyed
 //!   by the **original** vertex id, exactly as the serial engine seeds
 //!   it, so broadcast randomness does not depend on scheduling;
+//! * work-stealing cannot affect bits or trajectories: every schedule
+//!   slot is claimed by exactly one worker per phase (the claim cursor is
+//!   a fetch-add, so ranges are disjoint and exhaustive), each slot's
+//!   computation depends only on its node's own state, its node-keyed RNG
+//!   stream, and barrier-separated slot contents — never on *which*
+//!   worker ran it or in what order claims interleave — and per-round
+//!   accounting merges with order-independent sums and maxes;
 //! * relabeling is a pure pre-pass: it permutes which worker drives which
 //!   vertex and where its slot lives, never what any node computes —
 //!   deliveries iterate in-edges in ascending *original* neighbor id (the
@@ -60,7 +75,26 @@ use crate::consensus::GossipNode;
 use crate::topology::{relabel, Graph, ShardView};
 use crate::util::rng::Rng;
 use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard};
+
+/// How `run_rounds` distributes schedule slots over the worker pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduler {
+    /// Fixed contiguous ranges: worker `w` owns slots
+    /// `[w·chunk, (w+1)·chunk)` for every phase of every round. One
+    /// barrier per round (range ownership orders a node's update against
+    /// its own next broadcast for free).
+    Static,
+    /// Work-stealing (the default): each phase hands out fixed-size slot
+    /// chunks from a per-phase atomic cursor, so a worker that finishes
+    /// early keeps claiming work instead of idling at the barrier. Two
+    /// barriers per round — the extra end-of-round barrier orders a
+    /// node's update (any worker) against its next-round broadcast
+    /// (possibly a different worker). Bit-identical to `Static` and to
+    /// the serial engine (see the module determinism contract).
+    Stealing,
+}
 
 /// One bank of per-slot broadcast arenas (slot `p` holds the current
 /// message of the vertex scheduled at position `p`).
@@ -110,6 +144,14 @@ fn partition_for(shards: usize, n: usize) -> (usize, usize) {
     (chunk, n.div_ceil(chunk))
 }
 
+/// Slot count per work-stealing claim: ~8 claims per worker so the tail
+/// imbalance is bounded by 1/8 of a worker's share, floored at 1 slot.
+/// Deterministic in `(n, workers)` — though claim size never affects
+/// results, only contention (see the determinism contract).
+fn steal_claim(n: usize, workers: usize) -> usize {
+    (n / (workers.max(1) * 8)).max(1)
+}
+
 /// Raw-pointer view of one `run_rounds` job, shared with the parked
 /// workers. Every pointer stays valid — and the slot/shard aliasing
 /// protocol holds for `nodes`/`banks`/`accts` — until all workers post
@@ -124,9 +166,29 @@ struct RunCtx {
     net: *const NetworkSim,
     banks: *const [SlotBank; 2],
     accts: *mut RoundAcct,
+    /// Per-(round, phase) claim cursors for work-stealing: index `2r` is
+    /// round `r`'s broadcast phase, `2r+1` its deliver/update phase. Reset
+    /// to 0 by the dispatcher before the job is published; unused (and
+    /// possibly empty) under `Scheduler::Static`.
+    cursors: *const AtomicUsize,
+    /// Slots per stealing claim (`steal_claim`).
+    claim: usize,
+    scheduler: Scheduler,
     k: usize,
     t0: usize,
     measure_wire: bool,
+}
+
+impl RunCtx {
+    /// Barrier waits each worker owes per job: one per round under the
+    /// static schedule, two under stealing (mid-round write→read, plus
+    /// end-of-round update→next-broadcast).
+    fn barriers(&self) -> usize {
+        match self.scheduler {
+            Scheduler::Static => self.k,
+            Scheduler::Stealing => 2 * self.k,
+        }
+    }
 }
 
 /// Job mailbox: a bumped epoch tells parked workers a new job is
@@ -274,8 +336,9 @@ fn worker_loop(state: &PoolState, w: usize, lo: usize, hi: usize) {
         if result.is_err() {
             // Siblings finish their k rounds against stale (but valid)
             // slot contents; the dispatcher discards the job when the
-            // panic resurfaces there.
-            for _ in waited.get()..ctx.k {
+            // panic resurfaces there. Under stealing the panicking
+            // worker's unclaimed slots are simply claimed by siblings.
+            for _ in waited.get()..ctx.barriers() {
                 state.barrier.wait();
             }
         }
@@ -288,9 +351,76 @@ fn worker_loop(state: &PoolState, w: usize, lo: usize, hi: usize) {
     }
 }
 
-/// Run one worker's schedule slots `[lo, hi)` through all `k` rounds of
-/// a job. `waited` counts barrier waits so the panic path can settle the
-/// remainder.
+/// Phase-1 body for one schedule slot: broadcast vertex `order[p]` into
+/// its arena slot. Slot p belongs to original vertex order[p]; RNG
+/// streams and degrees key on the original id, so neither relabeling nor
+/// the claiming worker changes the bytes produced.
+///
+/// Safety: the caller must be the unique processor of slot `p` this
+/// phase (fixed range or stealing claim), with this bank's readers held
+/// at the phase barrier and the dispatcher not touching nodes/rngs while
+/// the job is live.
+unsafe fn broadcast_slot(
+    ctx: &RunCtx,
+    bank: &SlotBank,
+    graph: &Graph,
+    order: &[usize],
+    t: usize,
+    p: usize,
+    ra: &mut RoundAcct,
+) {
+    let i = order[p];
+    let node = &mut *ctx.nodes.add(i);
+    let rng = &mut *ctx.rngs.add(i);
+    let slot = bank.slot_mut(p);
+    phases::broadcast_into(node.as_mut(), t, rng, slot);
+    if ctx.measure_wire {
+        ra.note_sender_encoded(slot, graph.degree(i));
+    }
+}
+
+/// Phase-2+3 body for one schedule slot: deliver in-edges (ascending
+/// *original* neighbor id — the serial accumulation order) and update
+/// vertex `order[p]`.
+///
+/// Safety: the caller must be the unique processor of slot `p` this
+/// phase, past the barrier that retired all of this bank's writers, with
+/// no writer active on it until the next barrier.
+unsafe fn deliver_update_slot(
+    ctx: &RunCtx,
+    bank: &SlotBank,
+    net: &NetworkSim,
+    view: &ShardView,
+    order: &[usize],
+    t: usize,
+    p: usize,
+    ra: &mut RoundAcct,
+) {
+    let i = order[p];
+    let node = &mut *ctx.nodes.add(i);
+    for &(j, jslot) in view.in_edges(p) {
+        let msg = bank.read(jslot as usize);
+        phases::deliver_edge(node.as_mut(), net, t, j as usize, i, msg, ra);
+    }
+    phases::update_one(node.as_mut(), t);
+}
+
+/// Run one worker's share of a job through all `k` rounds. Under
+/// [`Scheduler::Static`] that share is the fixed slot range `[lo, hi)`
+/// with one barrier per round; under [`Scheduler::Stealing`] the worker
+/// claims `ctx.claim`-sized slot chunks from the per-phase cursor until
+/// the phase is exhausted, with two barriers per round.
+///
+/// Why stealing needs the second barrier: with fixed ranges, a node's
+/// phase-2 update (round r) and phase-1 broadcast (round r+1) run on the
+/// *same* worker, so program order alone sequences them. Under stealing
+/// they may run on different workers, so the end-of-round barrier
+/// provides that ordering instead. The mid-round barrier separates slot
+/// writes from slot reads in both modes, and the double-buffered banks
+/// make the r ↔ r+1 overlap safe exactly as before.
+///
+/// `waited` counts barrier waits so the panic path can settle the
+/// remainder (`RunCtx::barriers`).
 fn run_shard(
     ctx: &RunCtx,
     barrier: &Barrier,
@@ -305,6 +435,12 @@ fn run_shard(
     let view = unsafe { &*ctx.view };
     let banks = unsafe { &*ctx.banks };
     let order = unsafe { std::slice::from_raw_parts(ctx.order, ctx.n) };
+    let cursors = match ctx.scheduler {
+        Scheduler::Static => &[] as &[AtomicUsize],
+        // Safety: the dispatcher sized the cursor array to 2k and reset
+        // it before publishing the job.
+        Scheduler::Stealing => unsafe { std::slice::from_raw_parts(ctx.cursors, 2 * ctx.k) },
+    };
     for r in 0..ctx.k {
         let t = ctx.t0 + r;
         // Banks alternate on the *absolute* round parity: they persist
@@ -312,41 +448,52 @@ fn run_shard(
         // pick the same bank sequence.
         let bank = &banks[t % 2];
         let mut ra = RoundAcct::default();
-        // Phase 1: broadcast this worker's schedule slots. Slot p belongs
-        // to original vertex order[p]; RNG streams and degrees key on the
-        // original id, so relabeling never changes the bytes produced.
-        for p in lo..hi {
-            let i = order[p];
-            // Safety: vertex i appears exactly once in the schedule and
-            // this worker owns slots [lo, hi) exclusively; the dispatcher
-            // does not touch nodes/rngs while the job is live.
-            let node = unsafe { &mut *ctx.nodes.add(i) };
-            let rng = unsafe { &mut *ctx.rngs.add(i) };
-            // Safety: unique writer of slot p this phase; readers are
-            // held at the barrier below.
-            let slot = unsafe { bank.slot_mut(p) };
-            phases::broadcast_into(node.as_mut(), t, rng, slot);
-            if ctx.measure_wire {
-                ra.note_sender_encoded(slot, graph.degree(i));
+        match ctx.scheduler {
+            Scheduler::Static => {
+                // Safety (both loops): this worker owns slots [lo, hi)
+                // exclusively for the lifetime of the pool.
+                for p in lo..hi {
+                    unsafe { broadcast_slot(ctx, bank, graph, order, t, p, &mut ra) };
+                }
+                barrier.wait();
+                waited.set(waited.get() + 1);
+                for p in lo..hi {
+                    unsafe { deliver_update_slot(ctx, bank, net, view, order, t, p, &mut ra) };
+                }
             }
-        }
-        barrier.wait();
-        waited.set(waited.get() + 1);
-        // Phase 2+3: deliver in-edges and update. In-edges arrive in
-        // ascending *original* neighbor id — the serial accumulation
-        // order — while slot lookups stay schedule-local. Reads of this
-        // bank are safe until the *other* bank's next barrier retires
-        // them (double buffering).
-        for p in lo..hi {
-            let i = order[p];
-            let node = unsafe { &mut *ctx.nodes.add(i) };
-            for &(j, jslot) in view.in_edges(p) {
-                // Safety: all writers of `bank` passed the barrier; no
-                // writer touches it again before the next barrier.
-                let msg = unsafe { bank.read(jslot as usize) };
-                phases::deliver_edge(node.as_mut(), net, t, j as usize, i, msg, &mut ra);
+            Scheduler::Stealing => {
+                // Safety (both loops): fetch_add hands out disjoint,
+                // exhaustive slot ranges — each slot is processed by
+                // exactly one claimant per phase.
+                let cur = &cursors[2 * r];
+                loop {
+                    let start = cur.fetch_add(ctx.claim, Ordering::Relaxed);
+                    if start >= ctx.n {
+                        break;
+                    }
+                    for p in start..(start + ctx.claim).min(ctx.n) {
+                        unsafe { broadcast_slot(ctx, bank, graph, order, t, p, &mut ra) };
+                    }
+                }
+                barrier.wait();
+                waited.set(waited.get() + 1);
+                let cur = &cursors[2 * r + 1];
+                loop {
+                    let start = cur.fetch_add(ctx.claim, Ordering::Relaxed);
+                    if start >= ctx.n {
+                        break;
+                    }
+                    for p in start..(start + ctx.claim).min(ctx.n) {
+                        unsafe {
+                            deliver_update_slot(ctx, bank, net, view, order, t, p, &mut ra)
+                        };
+                    }
+                }
+                // End-of-round barrier: orders every node's update against
+                // its next-round broadcast on any worker.
+                barrier.wait();
+                waited.set(waited.get() + 1);
             }
-            phases::update_one(node.as_mut(), t);
         }
         // Safety: this worker is the unique writer of row w of the
         // workers × k accounting grid.
@@ -381,6 +528,12 @@ pub struct ShardedEngine<'g> {
     /// Persistent workers × k accounting grid (grown only when a call
     /// asks for more rounds than any call before it).
     accts: Vec<RoundAcct>,
+    /// Persistent per-(round, phase) stealing cursors (grown like
+    /// `accts`; reset, never reallocated, in steady state).
+    cursors: Vec<AtomicUsize>,
+    scheduler: Scheduler,
+    /// Slots per stealing claim (`steal_claim(n, workers)`).
+    claim: usize,
     pool: WorkerPool,
 }
 
@@ -395,14 +548,29 @@ impl<'g> ShardedEngine<'g> {
         Self::with_shards(nodes, graph, seed, link, 0)
     }
 
-    /// Engine with an explicit shard count (0 = automatic). Any count
-    /// produces the same trajectory; the count only controls parallelism.
+    /// Engine with an explicit shard count (0 = automatic) and the
+    /// default work-stealing scheduler. Any count produces the same
+    /// trajectory; the count only controls parallelism.
     pub fn with_shards(
         nodes: Vec<Box<dyn GossipNode>>,
         graph: &'g Graph,
         seed: u64,
         link: LinkModel,
         shards: usize,
+    ) -> Self {
+        Self::with_scheduler(nodes, graph, seed, link, shards, Scheduler::Stealing)
+    }
+
+    /// Engine with an explicit shard count (0 = automatic) and scheduler.
+    /// Scheduler choice, like shard count, only controls parallelism —
+    /// never the trajectory (see the module determinism contract).
+    pub fn with_scheduler(
+        nodes: Vec<Box<dyn GossipNode>>,
+        graph: &'g Graph,
+        seed: u64,
+        link: LinkModel,
+        shards: usize,
+        scheduler: Scheduler,
     ) -> Self {
         assert_eq!(nodes.len(), graph.n(), "one node per graph vertex");
         let shards = if shards == 0 {
@@ -428,8 +596,16 @@ impl<'g> ShardedEngine<'g> {
             view,
             banks: [SlotBank::new(n), SlotBank::new(n)],
             accts: Vec::new(),
+            cursors: Vec::new(),
+            scheduler,
+            claim: steal_claim(n, workers),
             pool: WorkerPool::spawn(chunk, workers, n),
         }
+    }
+
+    /// The scheduler this engine dispatches with.
+    pub fn scheduler(&self) -> Scheduler {
+        self.scheduler
     }
 
     /// Number of worker threads in the persistent pool (the requested
@@ -463,6 +639,17 @@ impl<'g> ShardedEngine<'g> {
         if self.accts.len() < workers * k {
             self.accts.resize(workers * k, RoundAcct::default());
         }
+        if self.scheduler == Scheduler::Stealing {
+            // Grown only when k exceeds every prior call (like `accts`);
+            // the reset itself allocates nothing in steady state. Workers
+            // observe the zeroed cursors via the job-mutex handshake.
+            if self.cursors.len() < 2 * k {
+                self.cursors.resize_with(2 * k, || AtomicUsize::new(0));
+            }
+            for c in &self.cursors[..2 * k] {
+                c.store(0, Ordering::Relaxed);
+            }
+        }
         let ctx = RunCtx {
             nodes: self.nodes.as_mut_ptr(),
             rngs: self.rngs.as_mut_ptr(),
@@ -473,6 +660,9 @@ impl<'g> ShardedEngine<'g> {
             net: &self.net,
             banks: &self.banks,
             accts: self.accts.as_mut_ptr(),
+            cursors: self.cursors.as_ptr(),
+            claim: self.claim,
+            scheduler: self.scheduler,
             k,
             t0: self.t,
             measure_wire: self.measure_wire,
@@ -787,6 +977,99 @@ mod tests {
         let mut e = ShardedEngine::with_shards(nodes, &g, 1, LinkModel::default(), 4);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.run_rounds(10)));
         assert!(r.is_err(), "panic in a shard worker must propagate");
+    }
+
+    #[test]
+    fn static_and_stealing_schedulers_are_bit_identical() {
+        // The scheduler must be as invisible as the shard count: same
+        // trajectory, same accounting (incl. the measured wire clock),
+        // for every shard count, on a graph whose degree skew actually
+        // makes workers steal (star-heavy barbell-ish ER stand-in).
+        let mut grng = Rng::new(77);
+        let g = Graph::erdos_renyi(48, 0.12, &mut grng);
+        let lw = uniform_local_weights(&g);
+        let x0 = x0s(48, 9, 23);
+        let scheme = || Scheme::Choco { gamma: 0.25, op: Box::new(TopK { k: 3 }) };
+        for shards in [1usize, 2, 7, 48] {
+            let run = |sched: Scheduler| {
+                let mut e = ShardedEngine::with_scheduler(
+                    make_nodes(&scheme(), &x0, &lw),
+                    &g,
+                    5,
+                    LinkModel::default(),
+                    shards,
+                    sched,
+                );
+                e.measure_wire = true;
+                e.run_rounds(25);
+                (e.iterates(), e.acct)
+            };
+            let (xa, aa) = run(Scheduler::Static);
+            let (xb, ab) = run(Scheduler::Stealing);
+            for (a, b) in xa.iter().zip(xb.iter()) {
+                assert_eq!(vecops::max_abs_diff(a, b), 0.0, "shards={shards}");
+            }
+            assert_eq!(aa.bits, ab.bits, "shards={shards}");
+            assert_eq!(aa.messages, ab.messages, "shards={shards}");
+            assert_eq!(aa.encoded_bits, ab.encoded_bits, "shards={shards}");
+            assert_eq!(aa.sim_time_s, ab.sim_time_s, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn default_scheduler_is_stealing() {
+        let g = Graph::ring(6);
+        let lw = uniform_local_weights(&g);
+        let x0 = x0s(6, 4, 1);
+        let e = ShardedEngine::with_shards(
+            make_nodes(&Scheme::Exact { gamma: 1.0 }, &x0, &lw),
+            &g,
+            1,
+            LinkModel::default(),
+            3,
+        );
+        assert_eq!(e.scheduler(), Scheduler::Stealing);
+    }
+
+    #[test]
+    fn stealing_panic_propagates_instead_of_deadlocking() {
+        // Same guarantee as the static path: a mid-phase panic must pay
+        // the (now two-per-round) remaining barrier waits, not deadlock.
+        let g = Graph::ring(8);
+        let nodes: Vec<Box<dyn GossipNode>> = (0..8)
+            .map(|i| {
+                Box::new(PanicNode {
+                    x: vec![0.0; 2],
+                    at: if i == 5 { 3 } else { usize::MAX },
+                }) as Box<dyn GossipNode>
+            })
+            .collect();
+        let mut e = ShardedEngine::with_scheduler(
+            nodes,
+            &g,
+            1,
+            LinkModel::default(),
+            4,
+            Scheduler::Stealing,
+        );
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.run_rounds(10)));
+        assert!(r.is_err(), "panic in a stealing worker must propagate");
+        // The pool must still be dispatchable (Drop joins it cleanly).
+    }
+
+    #[test]
+    fn steal_claim_bounds() {
+        for n in [0usize, 1, 7, 64, 1000, 1_000_000] {
+            for workers in [1usize, 2, 8, 64] {
+                let c = steal_claim(n, workers);
+                assert!(c >= 1, "n={n} w={workers}");
+                // ~8 claims per worker: claim never exceeds a worker's
+                // even share (for n ≥ workers).
+                if n >= workers * 8 {
+                    assert!(c * workers <= n, "n={n} w={workers} c={c}");
+                }
+            }
+        }
     }
 
     #[test]

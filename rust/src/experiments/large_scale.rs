@@ -15,11 +15,17 @@
 //! the theory column even at n = 16384), and the CHOCO-SGD rows wire
 //! label-sorted partitions of a synthetic dataset through
 //! [`make_optim_nodes`] with a few samples per worker. No dense n×n
-//! matrix anywhere. CI-scale runs n ≤ 4096; `--full` adds n = 16384 and
-//! a first n = 10⁵ consensus row (torus 250×400, powered by the sharded
-//! engine's persistent worker pool; the spectral estimator drops to a
-//! reduced iteration budget there, so its δ column is best-effort and γ*
-//! is withheld unless certified).
+//! matrix anywhere. CI-scale runs n ≤ 4096; `--full` adds n = 16384, an
+//! n = 10⁵ consensus row (torus 250×400) and the n = 10⁶ row (torus
+//! 1000×1000) — both powered by the sharded engine's work-stealing
+//! persistent worker pool, with the serial reference engine dropped
+//! before the sharded one is built so peak memory stays one-engine-sized.
+//! At those scales the spectral estimator drops to a reduced iteration
+//! budget, so its δ column is best-effort and γ* is withheld unless
+//! certified. Every row also reports resident state bytes per node
+//! (measured via [`GossipNode::state_bytes`] on a ≤64-node sample) and,
+//! for consensus rows, the ratio to the per-neighbor-replica Algorithm 1
+//! baseline — the compact CHOCO node is what makes n = 10⁶ fit.
 
 use super::{write_traces, ExpOptions};
 use crate::compress::{Compressor, QsgdS};
@@ -57,6 +63,12 @@ pub struct ScaleRow {
     pub sharded_rps: f64,
     pub speedup: f64,
     pub workers: usize,
+    /// Mean resident algorithm-state bytes per node (payload bytes of the
+    /// per-node state vectors; ≤64-node sample).
+    pub bytes_per_node: f64,
+    /// Per-neighbor-replica baseline bytes ÷ this row's bytes (consensus
+    /// rows; NaN for SGD rows, which have no replica form).
+    pub replica_ratio: f64,
 }
 
 /// δ, β and γ* via sparse power iteration with a scale-driver budget,
@@ -67,7 +79,13 @@ fn spectrum_columns(lw: &[crate::topology::LocalWeights], omega: f64, seed: u64)
     // At n ≥ 10⁵ a full 50k-iteration certification would dominate the
     // scenario wall time; report a budgeted best-effort δ instead (γ* is
     // withheld automatically when the estimate is uncertified).
-    let max_iters = if lw.len() >= 100_000 { 2_000 } else { 50_000 };
+    let max_iters = if lw.len() >= 1_000_000 {
+        500
+    } else if lw.len() >= 100_000 {
+        2_000
+    } else {
+        50_000
+    };
     let opts = PowerOpts { max_iters, ..PowerOpts::default() };
     match Spectrum::estimate_with(&SparseMixing::from_local_weights(lw), seed, &opts) {
         Ok(s) => {
@@ -92,12 +110,18 @@ fn run_both_engines(
     seed: u64,
     mk: &dyn Fn() -> Vec<Box<dyn GossipNode>>,
 ) -> Result<(Vec<Vec<f64>>, u64, f64, f64, usize), String> {
-    let mut serial = RoundEngine::new(mk(), g, seed, LinkModel::default());
-    let t0 = std::time::Instant::now();
-    for _ in 0..rounds {
-        serial.step();
-    }
-    let serial_secs = t0.elapsed().as_secs_f64();
+    // Run the serial reference first and keep only its iterates and
+    // accounting, so the serial engine's node set is freed before the
+    // sharded engine allocates its own — at n = 10⁶ holding both engines
+    // alive would double the peak footprint.
+    let (serial_iterates, serial_bits, serial_secs) = {
+        let mut serial = RoundEngine::new(mk(), g, seed, LinkModel::default());
+        let t0 = std::time::Instant::now();
+        for _ in 0..rounds {
+            serial.step();
+        }
+        (serial.iterates(), serial.acct.bits, t0.elapsed().as_secs_f64())
+    };
 
     let mut sharded = ShardedEngine::new(mk(), g, seed, LinkModel::default());
     let workers = sharded.worker_count();
@@ -107,7 +131,7 @@ fn run_both_engines(
 
     // Differential check: a speedup number for a different trajectory
     // would be meaningless.
-    for (i, (a, b)) in sharded.iterates().iter().zip(serial.iterates().iter()).enumerate() {
+    for (i, (a, b)) in sharded.iterates().iter().zip(serial_iterates.iter()).enumerate() {
         if vecops::max_abs_diff(a, b) != 0.0 {
             return Err(format!(
                 "{} n={}: sharded trajectory diverged from serial at node {i}",
@@ -116,13 +140,13 @@ fn run_both_engines(
             ));
         }
     }
-    if sharded.acct.bits != serial.acct.bits {
+    if sharded.acct.bits != serial_bits {
         return Err(format!(
             "{} n={}: bit accounting differs (sharded {} vs serial {})",
             g.name(),
             g.n(),
             sharded.acct.bits,
-            serial.acct.bits
+            serial_bits
         ));
     }
     Ok((
@@ -132,6 +156,12 @@ fn run_both_engines(
         rounds as f64 / sharded_secs.max(1e-12),
         workers,
     ))
+}
+
+/// Mean resident state bytes per node over a node sample (≤64 nodes so
+/// the baseline forms are never materialized at full n).
+fn mean_state_bytes(nodes: &[Box<dyn GossipNode>]) -> f64 {
+    nodes.iter().map(|n| n.state_bytes()).sum::<usize>() as f64 / nodes.len().max(1) as f64
 }
 
 /// One CHOCO-GOSSIP consensus scenario on `g` with both engines.
@@ -153,6 +183,20 @@ pub fn run_scenario(g: &Graph, d: usize, rounds: usize, seed: u64) -> Result<Sca
         xs.iter().map(|x| vecops::dist_sq(x, &target)).sum::<f64>() / n as f64
     };
     let mk = || make_nodes(&Scheme::Choco { gamma: 0.4, op: Box::new(op) }, &x0, &lw);
+    // Memory column: compact node vs the per-neighbor-replica Algorithm 1
+    // baseline, both measured on a ≤64-node sample (the replica form at
+    // full n is exactly the memory wall this row demonstrates avoiding).
+    let sample = n.min(64);
+    let bytes_per_node = mean_state_bytes(&make_nodes(
+        &Scheme::Choco { gamma: 0.4, op: Box::new(op) },
+        &x0[..sample],
+        &lw[..sample],
+    ));
+    let replica_bytes = mean_state_bytes(&make_nodes(
+        &Scheme::ChocoReplica { gamma: 0.4, op: Box::new(op) },
+        &x0[..sample],
+        &lw[..sample],
+    ));
     let (finals, bits, serial_rps, sharded_rps, workers) =
         run_both_engines(g, rounds, seed, &mk)?;
     Ok(ScaleRow {
@@ -169,6 +213,8 @@ pub fn run_scenario(g: &Graph, d: usize, rounds: usize, seed: u64) -> Result<Sca
         sharded_rps,
         speedup: sharded_rps / serial_rps.max(1e-12),
         workers,
+        bytes_per_node,
+        replica_ratio: replica_bytes / bytes_per_node.max(1.0),
     })
 }
 
@@ -223,6 +269,27 @@ pub fn run_sgd_scenario(g: &Graph, rounds: usize, seed: u64) -> Result<ScaleRow,
     };
     let loss_of = |xs: &[Vec<f64>]| global_loss(&objectives, &vecops::mean_of(xs));
     let initial_err = loss_of(&x0);
+    let sample = n.min(64);
+    let bytes_per_node = {
+        let sources: Vec<Box<dyn GradientSource>> = shards[..sample]
+            .iter()
+            .map(|s| {
+                Box::new(NativeGrad {
+                    objective: Box::new(LogisticRegression::new(s.clone(), lambda, 1)),
+                }) as Box<dyn GradientSource>
+            })
+            .collect();
+        mean_state_bytes(&make_optim_nodes(
+            &OptimScheme::ChocoSgd {
+                schedule: Schedule::Const(0.05),
+                gamma: 0.3,
+                op: Box::new(op),
+            },
+            sources,
+            &x0[..sample],
+            &lw[..sample],
+        ))
+    };
     let (finals, bits, serial_rps, sharded_rps, workers) =
         run_both_engines(g, rounds, seed, &mk)?;
     Ok(ScaleRow {
@@ -239,6 +306,9 @@ pub fn run_sgd_scenario(g: &Graph, rounds: usize, seed: u64) -> Result<ScaleRow,
         sharded_rps,
         speedup: sharded_rps / serial_rps.max(1e-12),
         workers,
+        bytes_per_node,
+        // SGD has no per-neighbor-replica variant to compare against.
+        replica_ratio: f64::NAN,
     })
 }
 
@@ -260,6 +330,11 @@ fn scenario_graphs(full: bool, seed: u64) -> Vec<Graph> {
         // the n = 10⁵ consensus row (250 × 400 torus), practical only on
         // the persistent-pool sharded engine
         gs.push(Graph::torus2d(250, 400));
+        // the n = 10⁶ row (1000 × 1000 torus): compact node state plus
+        // the work-stealing scheduler and Hilbert shard relabeling; the
+        // round budget is capped in `large_scale` so the serial reference
+        // for the differential check stays affordable
+        gs.push(Graph::torus2d(1000, 1000));
     }
     gs
 }
@@ -271,7 +346,7 @@ fn sgd_scenario_graphs() -> Vec<Graph> {
 
 fn say_row(opts: &ExpOptions, row: &ScaleRow) {
     opts.say(&format!(
-        "  {:<12} {:<14} {:>6} {:>8} {:>10.2e} {:>10.2e} {:>11.1} {:>11.1} {:>8.2}× {:>9.2e}",
+        "  {:<12} {:<14} {:>7} {:>8} {:>10.2e} {:>10.2e} {:>11.1} {:>11.1} {:>8.2}× {:>8.0} {:>7.2}× {:>9.2e}",
         row.algorithm,
         row.topology,
         row.n,
@@ -281,6 +356,8 @@ fn say_row(opts: &ExpOptions, row: &ScaleRow) {
         row.serial_rps,
         row.sharded_rps,
         row.speedup,
+        row.bytes_per_node,
+        row.replica_ratio,
         row.final_err
     ));
 }
@@ -298,6 +375,8 @@ fn trace_of(row: &ScaleRow) -> Trace {
             "serial_rps",
             "sharded_rps",
             "speedup",
+            "bytes_per_node",
+            "replica_ratio",
         ],
     );
     tr.push(vec![
@@ -310,6 +389,8 @@ fn trace_of(row: &ScaleRow) -> Trace {
         row.serial_rps,
         row.sharded_rps,
         row.speedup,
+        row.bytes_per_node,
+        row.replica_ratio,
     ]);
     tr
 }
@@ -323,14 +404,18 @@ pub fn large_scale(opts: &ExpOptions) -> Result<Vec<ScaleRow>, String> {
          gossip qsgd_32 d={d}, SGD qsgd_16 logreg d=16"
     ));
     opts.say(&format!(
-        "  {:<12} {:<14} {:>6} {:>8} {:>10} {:>10} {:>11} {:>11} {:>9} {:>9}",
+        "  {:<12} {:<14} {:>7} {:>8} {:>10} {:>10} {:>11} {:>11} {:>9} {:>8} {:>8} {:>9}",
         "algorithm", "topology", "n", "workers", "delta", "gamma*", "serial r/s",
-        "sharded r/s", "speedup", "err"
+        "sharded r/s", "speedup", "B/node", "replica", "err"
     ));
     let mut rows = Vec::new();
     let mut traces = Vec::new();
     for g in scenario_graphs(opts.full, opts.seed) {
-        let row = run_scenario(&g, d, rounds, opts.seed)?;
+        // The million-node row still runs the bit-exact serial reference
+        // for its differential check; cap its round budget so the serial
+        // pass stays a matter of seconds.
+        let r = if g.n() >= 1_000_000 { rounds.min(12) } else { rounds };
+        let row = run_scenario(&g, d, r, opts.seed)?;
         say_row(opts, &row);
         traces.push(trace_of(&row));
         rows.push(row);
@@ -368,6 +453,16 @@ mod tests {
         assert!(row.serial_rps > 0.0 && row.sharded_rps > 0.0);
         assert!(row.bits > 0);
         assert!(row.workers >= 1);
+        // Memory column: the compact node is degree-independent
+        // (x + h + e) and well below the (deg + 4)-vector replica form
+        // (2.67× at torus degree 4 with f64 state, 4× under f32-state).
+        let statef = std::mem::size_of::<crate::consensus::choco::StateF>();
+        assert_eq!(row.bytes_per_node, (16.0 * 8.0) + (2.0 * 16.0 * statef as f64));
+        assert!(
+            row.replica_ratio > 2.5,
+            "compact/replica ratio too small: {}",
+            row.replica_ratio
+        );
         // Theory columns come from the sparse estimator: torus δ is known
         // to ≈ 1e-2 at n = 256 and γ* must be a small positive stepsize.
         assert!(row.delta > 0.0 && row.delta < 1.0, "δ = {}", row.delta);
@@ -391,6 +486,9 @@ mod tests {
         );
         assert!(row.bits > 0);
         assert!(row.delta > 0.0 && row.delta < 1.0);
+        // SGD rows report the six-vector ChocoSgd state, no replica ratio.
+        assert_eq!(row.bytes_per_node, 6.0 * 16.0 * 8.0);
+        assert!(row.replica_ratio.is_nan());
     }
 
     #[test]
@@ -402,13 +500,17 @@ mod tests {
     }
 
     #[test]
-    fn full_mode_includes_1e5_row() {
+    fn full_mode_includes_1e5_and_1e6_rows() {
         let gs = scenario_graphs(true, 42);
         assert!(
             gs.iter().any(|g| g.n() == 100_000),
             "--full must include the n = 10⁵ consensus scenario"
         );
-        // and CI mode must not pay for it
+        assert!(
+            gs.iter().any(|g| g.n() == 1_000_000),
+            "--full must include the n = 10⁶ consensus scenario"
+        );
+        // and CI mode must not pay for either
         assert!(scenario_graphs(false, 42).iter().all(|g| g.n() <= 4096));
     }
 

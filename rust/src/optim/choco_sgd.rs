@@ -124,6 +124,11 @@ impl GossipNode for ChocoSgdNode {
     fn x(&self) -> &[f64] {
         &self.x
     }
+
+    fn state_bytes(&self) -> usize {
+        // x, x^(t+1/2), x̂, s, grad/diff scratch — six f64 d-vectors.
+        6 * self.x.len() * std::mem::size_of::<f64>()
+    }
 }
 
 #[cfg(test)]

@@ -16,6 +16,10 @@ pub struct Graph {
     /// Sorted adjacency lists, no self-loops, symmetric.
     adj: Vec<Vec<usize>>,
     name: String,
+    /// `(rows, cols)` when the vertex ids are row-major coordinates of a
+    /// 2d lattice (torus or grid). Consumed by the space-filling-curve
+    /// relabeling in `topology::relabel`; `None` for every other family.
+    grid_dims: Option<(usize, usize)>,
 }
 
 impl Graph {
@@ -39,11 +43,18 @@ impl Graph {
             })
             .collect();
         adj.iter_mut().for_each(|v| v.shrink_to_fit());
-        Self { n, adj, name: name.to_string() }
+        Self { n, adj, name: name.to_string(), grid_dims: None }
     }
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// `(rows, cols)` for 2d-lattice families (torus2d/grid2d and their
+    /// delegates), `None` otherwise. Row-major: vertex `i` sits at
+    /// `(i / cols, i % cols)`.
+    pub fn grid_dims(&self) -> Option<(usize, usize)> {
+        self.grid_dims
     }
 
     pub fn name(&self) -> &str {
@@ -156,7 +167,9 @@ impl Graph {
                 edges.push((idx(r, c), idx(r, (c + 1) % cols)));
             }
         }
-        Self::from_edges(rows * cols, &edges, &format!("torus{rows}x{cols}"))
+        let mut g = Self::from_edges(rows * cols, &edges, &format!("torus{rows}x{cols}"));
+        g.grid_dims = Some((rows, cols));
+        g
     }
 
     /// Square torus for n a perfect square.
@@ -180,7 +193,9 @@ impl Graph {
                 }
             }
         }
-        Self::from_edges(rows * cols, &edges, &format!("grid{rows}x{cols}"))
+        let mut g = Self::from_edges(rows * cols, &edges, &format!("grid{rows}x{cols}"));
+        g.grid_dims = Some((rows, cols));
+        g
     }
 
     /// Fully-connected: gossip equals exact averaging in one round with
@@ -382,6 +397,15 @@ mod tests {
         let g = Graph::barbell(4);
         assert!(g.is_connected());
         assert!(g.has_edge(3, 4));
+    }
+
+    #[test]
+    fn grid_dims_metadata() {
+        assert_eq!(Graph::torus2d(3, 5).grid_dims(), Some((3, 5)));
+        assert_eq!(Graph::torus_square(16).grid_dims(), Some((4, 4)));
+        assert_eq!(Graph::grid2d(2, 7).grid_dims(), Some((2, 7)));
+        assert_eq!(Graph::ring(8).grid_dims(), None);
+        assert_eq!(Graph::hypercube(3).grid_dims(), None);
     }
 
     #[test]

@@ -6,9 +6,13 @@
 //! contiguous chunks cut almost every edge: nearly every delivery crosses
 //! a shard boundary and reads another worker's cache lines. A
 //! breadth-first relabeling groups neighborhoods into runs of nearby
-//! slots, and [`schedule_order`] keeps whichever of {BFS order, natural
-//! order} cuts fewer edges for the chunk size at hand — so the pre-pass
-//! can only help, never hurt.
+//! slots; on 2d lattices (where BFS only interleaves the wavefront and
+//! loses to row-major labels) a Hilbert space-filling curve keeps each
+//! chunk a compact ~√chunk × √chunk block whose boundary is O(√chunk)
+//! instead of a full row-band side. [`schedule_order`] keeps whichever
+//! of {natural order, BFS order, Hilbert order} cuts the fewest edges
+//! for the chunk size at hand — so the pre-pass can only help, never
+//! hurt.
 //!
 //! Determinism contract: the order is a pure function of the graph (BFS
 //! from the lowest-numbered vertex of each component, components in
@@ -67,22 +71,73 @@ pub fn cut_edges(g: &Graph, pos: &[usize], chunk: usize) -> usize {
         .count()
 }
 
+/// Hilbert-curve schedule for 2d lattices: `order[p]` is the row-major
+/// vertex id of the `p`-th in-bounds cell along the Hilbert curve of the
+/// smallest power-of-two square covering the `rows × cols` lattice.
+/// Skipping out-of-bounds cells preserves the curve's locality on
+/// rectangles (consecutive kept cells stay near each other) and yields a
+/// valid permutation of `0..n`. Returns `None` for graphs without
+/// [`Graph::grid_dims`] metadata.
+pub fn hilbert_order(g: &Graph) -> Option<Vec<usize>> {
+    let (rows, cols) = g.grid_dims()?;
+    let side = rows.max(cols).next_power_of_two();
+    let mut order = Vec::with_capacity(g.n());
+    for d in 0..side * side {
+        let (x, y) = hilbert_d2xy(side, d);
+        if x < cols && y < rows {
+            order.push(y * cols + x);
+        }
+    }
+    debug_assert_eq!(order.len(), g.n());
+    Some(order)
+}
+
+/// Distance-to-coordinates on the `side × side` Hilbert curve
+/// (`side` a power of two). Standard bit-interleaved rotation walk.
+fn hilbert_d2xy(side: usize, mut d: usize) -> (usize, usize) {
+    let (mut x, mut y) = (0usize, 0usize);
+    let mut s = 1usize;
+    while s < side {
+        let rx = 1 & (d / 2);
+        let ry = 1 & (d ^ rx);
+        if ry == 0 {
+            if rx == 1 {
+                x = s - 1 - x;
+                y = s - 1 - y;
+            }
+            std::mem::swap(&mut x, &mut y);
+        }
+        x += s * rx;
+        y += s * ry;
+        d /= 4;
+        s *= 2;
+    }
+    (x, y)
+}
+
 /// The schedule the sharded engine uses for `chunk`-sized worker ranges:
-/// BFS order when it cuts strictly fewer edges than the natural order,
-/// the identity otherwise (rings and tori are already chunk-local — a
-/// BFS frontier would interleave their two arms for no gain).
+/// the strict edge-cut minimizer among {natural order, BFS order,
+/// Hilbert order (2d lattices only)}. Ties keep the earlier candidate,
+/// so the natural labeling survives whenever a relabeling cannot
+/// strictly improve the cut (rings are already chunk-local — a BFS
+/// frontier would interleave their two arms for no gain), and BFS beats
+/// Hilbert only on cut count, never by accident of ordering.
 pub fn schedule_order(g: &Graph, chunk: usize) -> Vec<usize> {
     let n = g.n();
     let natural: Vec<usize> = (0..n).collect();
     if n == 0 {
         return natural;
     }
-    let bfs = bfs_order(g);
-    if cut_edges(g, &inverse(&bfs), chunk) < cut_edges(g, &natural, chunk) {
-        bfs
-    } else {
-        natural
+    let mut best_cut = cut_edges(g, &natural, chunk);
+    let mut best = natural;
+    for cand in [Some(bfs_order(g)), hilbert_order(g)].into_iter().flatten() {
+        let cut = cut_edges(g, &inverse(&cand), chunk);
+        if cut < best_cut {
+            best_cut = cut;
+            best = cand;
+        }
     }
+    best
 }
 
 /// Permutation-aware adjacency view: for each schedule slot, the
@@ -213,6 +268,65 @@ mod tests {
         let order = schedule_order(&g, chunk);
         assert_ne!(order, natural, "scrambled ring should be relabeled");
         assert!(cut_edges(&g, &inverse(&order), chunk) < cut_edges(&g, &natural, chunk));
+    }
+
+    #[test]
+    fn hilbert_order_is_a_permutation_on_lattices() {
+        // Squares, non-square rectangles, and non-power-of-two sides:
+        // the clipped curve must still visit every cell exactly once.
+        for g in [
+            Graph::torus_square(64),
+            Graph::torus2d(4, 5),
+            Graph::torus2d(5, 5),
+            Graph::torus2d(3, 16),
+            Graph::grid2d(6, 10),
+            Graph::grid2d(1, 7),
+            Graph::torus2d(1, 1),
+        ] {
+            let order = hilbert_order(&g).expect("lattice has grid_dims");
+            assert!(is_permutation(&order, g.n()), "{}", g.name());
+            assert_eq!(order, hilbert_order(&g).unwrap(), "{}: not deterministic", g.name());
+        }
+        assert!(hilbert_order(&Graph::ring(12)).is_none());
+        assert!(hilbert_order(&Graph::hypercube(4)).is_none());
+    }
+
+    #[test]
+    fn hilbert_beats_or_ties_bfs_and_natural_on_lattices() {
+        // Satellite property: on tori and grids the Hilbert cut is never
+        // worse than BFS or identity at any chunk size, and strictly
+        // better at block-sized chunks (compact ~√chunk × √chunk tiles
+        // have O(√chunk) boundary vs. a row band's full-side boundary).
+        for g in [Graph::torus_square(64), Graph::torus_square(256), Graph::grid2d(8, 8)] {
+            let natural: Vec<usize> = (0..g.n()).collect();
+            let hil = inverse(&hilbert_order(&g).unwrap());
+            let bfs = inverse(&bfs_order(&g));
+            for chunk in [1usize, 3, 8, 64, g.n()] {
+                let (ch, cb, cn) = (
+                    cut_edges(&g, &hil, chunk),
+                    cut_edges(&g, &bfs, chunk),
+                    cut_edges(&g, &natural, chunk),
+                );
+                assert!(ch <= cb && ch <= cn, "{} chunk={chunk}: hil={ch} bfs={cb} nat={cn}", g.name());
+            }
+            // Strict win at a 2d-block-friendly chunk size.
+            let chunk = 8;
+            assert!(
+                cut_edges(&g, &hil, chunk) < cut_edges(&g, &natural, chunk),
+                "{}: hilbert should strictly beat row-major at chunk={chunk}",
+                g.name()
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_order_picks_hilbert_on_tori() {
+        // torus 8×8 at chunk 8: natural cuts 64, BFS 108, Hilbert 48 —
+        // the three-way minimizer must return the Hilbert schedule.
+        let g = Graph::torus_square(64);
+        let order = schedule_order(&g, 8);
+        assert_eq!(order, hilbert_order(&g).unwrap());
+        assert_eq!(cut_edges(&g, &inverse(&order), 8), 48);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //!
 //! For CHOCO-GOSSIP and CHOCO-SGD, on ring, torus, and Erdős–Rényi
 //! topologies (the latter triggering the sharded engine's BFS relabeling
-//! pre-pass), with shard counts {1, 2, 7, n}: identical iterates (exact
-//! `==`, no tolerance), identical
+//! pre-pass), with shard counts {1, 2, 7, n} and **both round
+//! schedulers** (static owner-computes and the default work-stealing
+//! dispatch): identical iterates (exact `==`, no tolerance), identical
 //! `Accounting.bits`/`messages`/`encoded_bits`, identical simulated time
 //! — and the same with link loss enabled, because drop decisions key on
 //! (round, edge), not arrival order. The event engine is compared on
@@ -16,7 +17,8 @@
 use choco::compress::{QsgdS, TopK};
 use choco::consensus::{make_nodes, GossipNode, Scheme};
 use choco::coordinator::{
-    run_actors, ActorConfig, AsyncConfig, EventEngine, LinkModel, RoundEngine, ShardedEngine,
+    run_actors, ActorConfig, AsyncConfig, EventEngine, LinkModel, RoundEngine, Scheduler,
+    ShardedEngine,
 };
 use choco::linalg::vecops;
 use choco::optim::{make_optim_nodes, GradientSource, NativeGrad, OptimScheme, Schedule};
@@ -69,21 +71,22 @@ where
 
     for &shards in &SHARD_COUNTS {
         let shards = shards.min(n);
-        let mut engine = ShardedEngine::with_shards(mk(), g, seed, link.clone(), shards);
-        engine.measure_wire = true;
-        engine.run_rounds(rounds);
-        assert_bit_identical(&engine.iterates(), &oracle, &format!("{what} shards={shards}"));
-        assert_eq!(engine.acct.bits, serial.acct.bits, "{what} shards={shards}: bits");
-        assert_eq!(engine.acct.messages, serial.acct.messages, "{what} shards={shards}: messages");
-        assert_eq!(
-            engine.acct.encoded_bits, serial.acct.encoded_bits,
-            "{what} shards={shards}: encoded_bits"
-        );
-        assert_eq!(engine.acct.rounds, serial.acct.rounds, "{what} shards={shards}: rounds");
-        assert_eq!(
-            engine.acct.sim_time_s, serial.acct.sim_time_s,
-            "{what} shards={shards}: sim time"
-        );
+        for sched in [Scheduler::Static, Scheduler::Stealing] {
+            let tag = format!("{what} shards={shards} {sched:?}");
+            let mut engine =
+                ShardedEngine::with_scheduler(mk(), g, seed, link.clone(), shards, sched);
+            engine.measure_wire = true;
+            engine.run_rounds(rounds);
+            assert_bit_identical(&engine.iterates(), &oracle, &tag);
+            assert_eq!(engine.acct.bits, serial.acct.bits, "{tag}: bits");
+            assert_eq!(engine.acct.messages, serial.acct.messages, "{tag}: messages");
+            assert_eq!(
+                engine.acct.encoded_bits, serial.acct.encoded_bits,
+                "{tag}: encoded_bits"
+            );
+            assert_eq!(engine.acct.rounds, serial.acct.rounds, "{tag}: rounds");
+            assert_eq!(engine.acct.sim_time_s, serial.acct.sim_time_s, "{tag}: sim time");
+        }
     }
 
     // Event-driven engine in the BSP-equivalent limit (zero latency, no
@@ -340,6 +343,78 @@ fn large_n_smoke_sharded_choco_gossip_n4096() {
     // and the actor runtime refuses this scale with a clear error
     let err = run_actors(mk(), &g, &ActorConfig { rounds: 1, ..Default::default() }).unwrap_err();
     assert!(err.contains("4096"), "guard error should name the node count: {err}");
+}
+
+/// Work-stealing differential at scale (run by the CI `large-n-smoke`
+/// job via `cargo test --release -- --ignored`): serial oracle vs the
+/// sharded engine under both the static and the work-stealing scheduler
+/// at shards {1, 2, 7}, on two 2000-node tori — one label-scrambled (the
+/// grid structure is hidden, so the engine's edge-cut comparison falls
+/// back to BFS relabeling) and one genuine `torus2d` (grid dims present;
+/// at shards=7 the Hilbert space-filling-curve order wins the cut
+/// comparison). Bit-identical iterates and accounting across all of it.
+#[test]
+#[ignore = "large-n smoke: run in release mode (CI job), ~seconds, too slow for debug tier-1"]
+fn large_n_smoke_stealing_differential_scrambled_torus() {
+    let (rows, cols) = (40, 50);
+    let n = rows * cols;
+    let base = Graph::torus2d(rows, cols);
+    // a unit-stride-destroying label permutation (901 is coprime with
+    // 2000); `from_edges` carries no grid dims, so Hilbert is out and
+    // BFS must beat the scrambled natural order
+    let perm: Vec<usize> = (0..n).map(|i| (i * 901) % n).collect();
+    let edges: Vec<(usize, usize)> =
+        base.edges().iter().map(|&(a, b)| (perm[a], perm[b])).collect();
+    let scrambled = Graph::from_edges(n, &edges, "scrambled_torus");
+    let natural: Vec<usize> = (0..n).collect();
+    assert_ne!(
+        choco::topology::relabel::schedule_order(&scrambled, n.div_ceil(7)),
+        natural,
+        "test premise: the scrambled torus must trigger relabeling"
+    );
+    assert_ne!(
+        choco::topology::relabel::schedule_order(&base, n.div_ceil(7)),
+        natural,
+        "test premise: the genuine torus must pick the Hilbert order at shards=7"
+    );
+
+    let rounds = 25;
+    for (g, seed) in [(scrambled, 601u64), (base, 602u64)] {
+        let lw = choco::topology::uniform_local_weights(&g);
+        let x0 = x0s(n, 16, seed);
+        let mk = || {
+            make_nodes(&Scheme::Choco { gamma: 0.3, op: Box::new(QsgdS { s: 16 }) }, &x0, &lw)
+        };
+        let mut serial = RoundEngine::new(mk(), &g, seed, LinkModel::default());
+        serial.measure_wire = true;
+        for _ in 0..rounds {
+            serial.step();
+        }
+        let oracle = serial.iterates();
+        for shards in [1usize, 2, 7] {
+            for sched in [Scheduler::Static, Scheduler::Stealing] {
+                let tag = format!("{} shards={shards} {sched:?}", g.name());
+                let mut e = ShardedEngine::with_scheduler(
+                    mk(),
+                    &g,
+                    seed,
+                    LinkModel::default(),
+                    shards,
+                    sched,
+                );
+                e.measure_wire = true;
+                e.run_rounds(rounds);
+                assert_bit_identical(&e.iterates(), &oracle, &tag);
+                assert_eq!(e.acct.bits, serial.acct.bits, "{tag}: bits");
+                assert_eq!(e.acct.messages, serial.acct.messages, "{tag}: messages");
+                assert_eq!(
+                    e.acct.encoded_bits, serial.acct.encoded_bits,
+                    "{tag}: encoded_bits"
+                );
+                assert_eq!(e.acct.sim_time_s, serial.acct.sim_time_s, "{tag}: sim time");
+            }
+        }
+    }
 }
 
 /// Event engine vs ShardedEngine at n = 4096: the zero-latency BSP limit

@@ -13,6 +13,15 @@
 //! (quantized levels + uniform scratch) and `top_k` (sparse payload +
 //! quickselect magnitude scratch).
 //!
+//! The claim is pinned for **both dispatch modes**: the default
+//! work-stealing scheduler (per-phase atomic cursors claimed with
+//! `fetch_add`, two barriers per round — the cursors live in a `Vec`
+//! sized at construction and are only ever *stored to* on the hot
+//! path) and the static owner-computes schedule. The node under test
+//! is the compact h/e CHOCO form (`Scheme::Choco`), so the window also
+//! proves the aggregate-error state update and its `add_into_state`
+//! accumulation never touch the heap mid-round.
+//!
 //! The tests live in their own integration binary because a
 //! `#[global_allocator]` is process-wide: mixing it into a shared test
 //! binary would make every other test pay the (tiny) counting overhead
@@ -26,7 +35,7 @@ use std::sync::Mutex;
 
 use choco::compress::{Compressor, QsgdS, TopK};
 use choco::consensus::{make_nodes, Scheme};
-use choco::coordinator::{LinkModel, ShardedEngine};
+use choco::coordinator::{LinkModel, Scheduler, ShardedEngine};
 use choco::topology::{uniform_local_weights, Graph};
 use choco::util::rng::Rng;
 
@@ -70,9 +79,9 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static COUNTER: CountingAlloc = CountingAlloc;
 
-/// Build a 4×8 torus CHOCO run with the given operator, warm it up, then
-/// assert five steady-state rounds allocate nothing.
-fn assert_steady_state_zero_alloc(op: Box<dyn Compressor>) {
+/// Build a 4×8 torus CHOCO run with the given operator and scheduler,
+/// warm it up, then assert five steady-state rounds allocate nothing.
+fn assert_steady_state_zero_alloc(op: Box<dyn Compressor>, scheduler: Scheduler) {
     let name = op.name();
     let g = Graph::torus2d(4, 8);
     let n = g.n();
@@ -88,7 +97,8 @@ fn assert_steady_state_zero_alloc(op: Box<dyn Compressor>) {
         .collect();
     let scheme = Scheme::Choco { gamma: 0.3, op };
     let nodes = make_nodes(&scheme, &x0, &lw);
-    let mut engine = ShardedEngine::with_shards(nodes, &g, 7, LinkModel::default(), 4);
+    let mut engine =
+        ShardedEngine::with_scheduler(nodes, &g, 7, LinkModel::default(), 4, scheduler);
     // Warmup: first rounds size the slot arenas, node-side message
     // buffers, thread-local compressor scratch, and the accounting grid
     // (run_rounds(3) sizes the grid for k up to 3, so the single-round
@@ -113,10 +123,18 @@ fn assert_steady_state_zero_alloc(op: Box<dyn Compressor>) {
 
 #[test]
 fn steady_state_rounds_do_not_allocate_qsgd() {
-    assert_steady_state_zero_alloc(Box::new(QsgdS { s: 16 }));
+    assert_steady_state_zero_alloc(Box::new(QsgdS { s: 16 }), Scheduler::Stealing);
 }
 
 #[test]
 fn steady_state_rounds_do_not_allocate_topk() {
-    assert_steady_state_zero_alloc(Box::new(TopK { k: 8 }));
+    assert_steady_state_zero_alloc(Box::new(TopK { k: 8 }), Scheduler::Stealing);
+}
+
+/// The static owner-computes schedule shares the slot arenas and node
+/// buffers with the stealing path but skips the cursors and the
+/// mid-round barrier — it must be just as heap-silent.
+#[test]
+fn steady_state_rounds_do_not_allocate_static_scheduler() {
+    assert_steady_state_zero_alloc(Box::new(TopK { k: 8 }), Scheduler::Static);
 }
