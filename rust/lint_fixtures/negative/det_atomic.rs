@@ -1,0 +1,13 @@
+//! Negative fixture: `std::cmp::Ordering` is not an atomic memory
+//! ordering, and an allowlisted atomic (with a reason) is accepted
+//! outside coordinator/.
+
+use std::cmp::Ordering;
+
+pub fn tie_break(a: (u64, usize), b: (u64, usize)) -> bool {
+    matches!(a.0.cmp(&b.0), Ordering::Equal) && a.1 < b.1
+}
+
+// lint:allow(det-atomic): test-harness instrumentation counter, not
+// engine state (mirrors the counting allocator in tests/zero_alloc.rs).
+pub static PROBE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);

@@ -1,0 +1,17 @@
+//! Negative fixture: integer reductions, order-independent min/max
+//! folds, and an explicitly allowlisted float sum (the annotation
+//! round-trip) must all stay clean.
+
+pub fn total_bits(xs: &[u64]) -> u64 {
+    xs.iter().sum::<u64>()
+}
+
+pub fn peak(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn report_mean(xs: &[f64]) -> f64 {
+    // lint:allow(det-float-sum): fixed-order report helper over an
+    // ordered slice; never feeds engine state.
+    xs.iter().sum::<f64>() / xs.len() as f64
+}

@@ -1,0 +1,16 @@
+//! Negative fixture: hash *lookups* are deterministic and fine; order
+//! only leaks on iteration. Ordered iteration goes through BTreeMap.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn lookup(cache: &HashMap<u64, f64>, key: u64) -> Option<f64> {
+    cache.get(&key).copied()
+}
+
+pub fn membership(seen: &mut std::collections::HashSet<u64>, key: u64) -> bool {
+    seen.insert(key)
+}
+
+pub fn ordered_walk(weights: &BTreeMap<usize, f64>) -> Vec<usize> {
+    weights.keys().copied().collect()
+}

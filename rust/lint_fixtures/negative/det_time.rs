@@ -1,0 +1,11 @@
+//! Negative fixture: clock mentions in comments and strings are not
+//! clock reads — the scanner matches the code view only. A call like
+//! Instant::now() in this sentence must not fire.
+
+pub fn describe() -> &'static str {
+    "sim_time_s is derived from link models, never from Instant::now()"
+}
+
+pub fn derived_time(rounds: usize, per_round_s: f64) -> f64 {
+    rounds as f64 * per_round_s
+}

@@ -1,0 +1,12 @@
+//! Negative fixture: audited unsafe. A SAFETY: comment heads the
+//! block and its coverage extends over directly consecutive unsafe
+//! lines.
+
+pub fn pair_unchecked(xs: &[f64]) -> (f64, f64) {
+    assert!(xs.len() >= 2);
+    // SAFETY: the assert above guarantees indices 0 and 1 are in
+    // bounds for the lifetime of this call.
+    let a = unsafe { *xs.get_unchecked(0) };
+    let b = unsafe { *xs.get_unchecked(1) };
+    (a, b)
+}

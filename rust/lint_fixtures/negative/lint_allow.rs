@@ -1,0 +1,8 @@
+//! Negative fixture: a well-formed annotation — known rule id and a
+//! written reason — parses clean and suppresses exactly its rule.
+
+pub fn pinned_order(xs: &[f64]) -> f64 {
+    // lint:allow(det-float-sum): sequential left-to-right sum over a
+    // slice; the order is fixed by the slice itself.
+    xs.iter().sum::<f64>()
+}

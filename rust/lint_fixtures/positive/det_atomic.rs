@@ -1,0 +1,7 @@
+//! Positive fixture: atomics outside `coordinator/` — must fire
+//! `det-atomic`. Shared-counter coordination belongs to the worker
+//! pool, not to codec or compressor code.
+
+use std::sync::atomic::AtomicUsize;
+
+pub static FRAMES_ENCODED: AtomicUsize = AtomicUsize::new(0);

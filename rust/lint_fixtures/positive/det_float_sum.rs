@@ -1,0 +1,11 @@
+//! Positive fixture: a float reduction outside the blessed vecops
+//! kernels — must fire `det-float-sum` (both the turbofish sum and the
+//! float fold shape).
+
+pub fn energy(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>()
+}
+
+pub fn total(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0, |acc, x| acc + x)
+}

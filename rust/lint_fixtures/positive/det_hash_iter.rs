@@ -1,0 +1,14 @@
+//! Positive fixture: iterating a HashMap leaks allocator/hash order
+//! into whatever consumes the loop — must fire `det-hash-iter`.
+//! (Fixtures are reference inputs for the linter self-tests; they are
+//! never compiled.)
+
+use std::collections::HashMap;
+
+pub fn neighbor_ids(adj: &HashMap<usize, f64>) -> Vec<usize> {
+    let mut ids = Vec::new();
+    for k in adj.keys() {
+        ids.push(*k);
+    }
+    ids
+}

@@ -1,0 +1,8 @@
+//! Positive fixture: an ambient clock read on an engine path — must
+//! fire `det-time`. Simulated time is derived from link models and
+//! payload bits, never measured.
+
+pub fn round_stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,6 @@
+//! Positive fixture: `unsafe` without a SAFETY: comment — must fire
+//! `det-unsafe-safety`.
+
+pub fn first_unchecked(xs: &[f64]) -> f64 {
+    unsafe { *xs.get_unchecked(0) }
+}

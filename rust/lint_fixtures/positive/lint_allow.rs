@@ -1,0 +1,8 @@
+//! Positive fixture: a reasonless annotation — must fire the
+//! `lint-allow` meta rule. Every suppression needs a written
+//! justification to stay auditable.
+
+pub fn reasonless(xs: &[f64]) -> f64 {
+    // lint:allow(det-float-sum)
+    xs.iter().sum::<f64>()
+}

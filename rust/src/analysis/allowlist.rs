@@ -1,0 +1,153 @@
+//! Allowlist annotations for the determinism linter.
+//!
+//! A finding is suppressed by an annotation comment on the flagged line
+//! or in the contiguous comment block directly above it, written as
+//! the allow marker followed by the rule id in parentheses and a mandatory
+//! `: reason` tail. An annotation without a reason (or naming an
+//! unknown rule) is itself reported under the `lint-allow` meta rule,
+//! so the allowlist stays auditable. A concrete example:
+//!
+//! ```text
+//! // lint:allow(det-float-sum): fixed-order metric over the node slice
+//! let err: f64 = nodes.iter().map(|n| n.err()).sum();
+//! ```
+
+use super::scanner::Line;
+
+/// A parsed allow annotation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// Rule ids named inside the parentheses (comma-separated).
+    pub rules: Vec<String>,
+    /// Free-text justification after the closing `):`.
+    pub reason: String,
+}
+
+/// Outcome of scanning one comment for an annotation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Parsed {
+    /// No allow marker in this comment.
+    None,
+    /// A well-formed annotation.
+    Ok(Allow),
+    /// An allow marker that could not be parsed (the message says
+    /// what is missing).
+    Malformed(&'static str),
+}
+
+const MARKER: &str = "lint:allow";
+
+/// Scan one comment's text for an allow annotation.
+pub fn parse(comment: &str) -> Parsed {
+    let Some(at) = comment.find(MARKER) else {
+        return Parsed::None;
+    };
+    let rest = &comment[at + MARKER.len()..];
+    let Some(body) = rest.strip_prefix('(') else {
+        return Parsed::Malformed("expected '(' after lint:allow");
+    };
+    let Some(close) = body.find(')') else {
+        return Parsed::Malformed("unclosed '(' in lint:allow");
+    };
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Parsed::Malformed("lint:allow names no rule id");
+    }
+    let after = body[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        return Parsed::Malformed("lint:allow needs a ': <reason>' justification");
+    }
+    Parsed::Ok(Allow { rules, reason: reason.to_string() })
+}
+
+/// Does the comment block attached to line `idx` satisfy `pred`?
+///
+/// The block is the line's own comment plus the contiguous run of
+/// comment-only lines directly above it; attribute lines (`#[...]`)
+/// are transparent, a blank line or a code line ends the block.
+pub fn block_has<F: Fn(&str) -> bool>(lines: &[Line], idx: usize, pred: F) -> bool {
+    if pred(&lines[idx].comment) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let line = &lines[j];
+        let code = line.code.trim();
+        if !code.is_empty() && !code.starts_with("#[") {
+            return false; // a code line ends the block
+        }
+        if pred(&line.comment) {
+            return true;
+        }
+        if line.comment.is_empty() && code.is_empty() {
+            return false; // a blank line ends the block
+        }
+    }
+    false
+}
+
+/// Is `rule` allowlisted for line `idx` (annotation on the line itself
+/// or in the comment block directly above)? Malformed annotations never
+/// suppress anything — they are reported separately.
+pub fn is_allowed(lines: &[Line], idx: usize, rule: &str) -> bool {
+    block_has(lines, idx, |comment| match parse(comment) {
+        Parsed::Ok(a) => a.rules.iter().any(|r| r == rule),
+        _ => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan_str;
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn parses_rule_and_reason() {
+        let p = parse(" lint:allow(det-time): wall-clock accounting only");
+        let Parsed::Ok(a) = p else { panic!("expected Ok, got {p:?}") };
+        assert_eq!(a.rules, ["det-time"]);
+        assert_eq!(a.reason, "wall-clock accounting only");
+    }
+
+    #[test]
+    fn parses_multiple_rules() {
+        let p = parse("lint:allow(det-time, det-float-sum): bench-report helper");
+        let Parsed::Ok(a) = p else { panic!("expected Ok, got {p:?}") };
+        assert_eq!(a.rules, ["det-time", "det-float-sum"]);
+    }
+
+    #[test]
+    fn missing_reason_is_malformed() {
+        assert!(matches!(parse("lint:allow(det-time)"), Parsed::Malformed(_)));
+        assert!(matches!(parse("lint:allow(det-time):   "), Parsed::Malformed(_)));
+        assert!(matches!(parse("lint:allow det-time: x"), Parsed::Malformed(_)));
+        assert!(matches!(parse("lint:allow(): x"), Parsed::Malformed(_)));
+    }
+
+    #[test]
+    fn no_marker_is_none() {
+        assert_eq!(parse("just an ordinary comment"), Parsed::None);
+    }
+
+    #[test]
+    fn annotation_applies_to_line_and_block_above() {
+        let src = "\
+// lint:allow(det-time): same-block annotation, two lines up
+// (continuation of the note)
+let a = now();
+let b = now(); // lint:allow(det-time): inline annotation
+let c = now();";
+        let f = scan_str(Path::new("x.rs"), "x.rs", src);
+        assert!(is_allowed(&f.lines, 2, "det-time"));
+        assert!(is_allowed(&f.lines, 3, "det-time"));
+        assert!(!is_allowed(&f.lines, 4, "det-time"), "code line ends the block");
+        assert!(!is_allowed(&f.lines, 2, "det-hash-iter"), "only the named rule is allowed");
+    }
+}

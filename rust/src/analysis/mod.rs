@@ -1,0 +1,133 @@
+//! Static analysis: the determinism-contract linter behind `choco lint`.
+//!
+//! Every engine in this crate (serial, sharded static/stealing, actor,
+//! event-driven) is contractually **bit-identical** on the same seeds —
+//! the differential harness in `tests/engine_equivalence.rs` *detects*
+//! divergence after the fact, and this module *prevents* the source
+//! shapes that cause it from landing at all: unordered hash iteration,
+//! ambient clock reads, non-fixed-order float reductions, unaudited
+//! `unsafe`, and stray atomics. See [`rules::RULES`] for the catalogue
+//! and EXPERIMENTS.md §"Static analysis & sanitizers" for how the CI
+//! gate runs.
+//!
+//! The scanner is zero-dependency by design (like everything else in
+//! the crate): a heuristic lexer over the repo's own source, not a full
+//! parser. It aims for no false *negatives* on the shapes it models and
+//! uses in-place allow annotations (rule id in parentheses, then a
+//! `: reason` tail — see [`allowlist`]) for the rare exception, so
+//! `choco lint --strict` can stay a blocking gate.
+//!
+//! The linter lints itself: `src/analysis/` is inside the default scan
+//! roots, and the meta-test below keeps the repo clean at HEAD.
+
+pub mod allowlist;
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+pub use report::{Finding, Report};
+pub use rules::{RuleInfo, RULES};
+
+/// Lint a repository root. When `root` contains a `src/` directory the
+/// crate layout is assumed and `src/`, `benches/`, and `tests/` are
+/// scanned; otherwise `root` itself is scanned recursively (used for
+/// the committed lint fixtures, which live outside the scan roots so
+/// they cannot fail the repo-wide gate).
+pub fn lint_root(root: &Path) -> Result<Report, String> {
+    if !root.is_dir() {
+        return Err(format!("lint root '{}' is not a directory", root.display()));
+    }
+    let mut files = Vec::new();
+    if root.join("src").is_dir() {
+        for sub in ["src", "benches", "tests"] {
+            let dir = root.join(sub);
+            if dir.is_dir() {
+                files.extend(list(&dir)?);
+            }
+        }
+    } else {
+        files = list(root)?;
+    }
+    lint_files(root, &files)
+}
+
+/// Lint an explicit set of files; `root` anchors the relative paths in
+/// the report.
+pub fn lint_files(root: &Path, files: &[PathBuf]) -> Result<Report, String> {
+    let mut out = Report::default();
+    for p in files {
+        let file =
+            scanner::scan_file(root, p).map_err(|e| format!("lint: {}: {e}", p.display()))?;
+        out.files_scanned += 1;
+        out.findings.extend(rules::check_file(&file));
+    }
+    Ok(out)
+}
+
+fn list(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    scanner::rust_files(dir).map_err(|e| format!("lint: walking {}: {e}", dir.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> &'static Path {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+    }
+
+    /// The gate itself: the crate's own sources (src/, benches/,
+    /// tests/) carry zero findings. Any new hash iteration, clock
+    /// read, float reduction, bare `unsafe`, or stray atomic fails
+    /// `cargo test` right here — not just the CI lint job.
+    #[test]
+    fn repo_is_lint_clean_at_head() {
+        let report = lint_root(manifest_dir()).expect("scan repo");
+        assert!(report.files_scanned > 50, "expected the full crate, saw {}", report.files_scanned);
+        assert!(report.is_clean(), "\n{}", report.render());
+    }
+
+    /// Each committed positive fixture must fire the rule its file name
+    /// spells (det_time.rs -> det-time), so a regression that silences
+    /// a rule is caught even while HEAD is clean.
+    #[test]
+    fn every_positive_fixture_fires_its_rule() {
+        let dir = manifest_dir().join("lint_fixtures").join("positive");
+        let files = scanner::rust_files(&dir).expect("fixture dir");
+        assert!(files.len() >= 5, "one positive fixture per rule, found {}", files.len());
+        for f in files {
+            let expected = f
+                .file_stem()
+                .map(|s| s.to_string_lossy().replace('_', "-"))
+                .unwrap_or_default();
+            let report = lint_files(&dir, std::slice::from_ref(&f)).expect("scan fixture");
+            assert!(
+                report.findings.iter().any(|x| x.rule == expected),
+                "{} should fire {expected}, got:\n{}",
+                f.display(),
+                report.render()
+            );
+        }
+    }
+
+    /// The negative fixtures hold the nearest *legitimate* neighbor of
+    /// each banned shape (lookups, BTree iteration, allowlisted sums,
+    /// SAFETY-commented unsafe) and must stay finding-free.
+    #[test]
+    fn negative_fixtures_are_clean() {
+        let dir = manifest_dir().join("lint_fixtures").join("negative");
+        let files = scanner::rust_files(&dir).expect("fixture dir");
+        assert!(files.len() >= 5, "one negative fixture per rule, found {}", files.len());
+        for f in files {
+            let report = lint_files(&dir, std::slice::from_ref(&f)).expect("scan fixture");
+            assert!(report.is_clean(), "{} should be clean:\n{}", f.display(), report.render());
+        }
+    }
+
+    #[test]
+    fn lint_root_rejects_missing_dir() {
+        assert!(lint_root(Path::new("/no/such/dir/anywhere")).is_err());
+    }
+}

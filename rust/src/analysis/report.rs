@@ -1,0 +1,84 @@
+//! Findings and report rendering for the determinism linter.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// One rule violation at a specific line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the scan root (stable across machines; what
+    /// the report prints).
+    pub rel: String,
+    /// Path as scanned (absolute or cwd-relative; useful for editors).
+    pub path: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id from [`super::rules::RULES`].
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.rel, self.line, self.rule, self.message)
+    }
+}
+
+/// Aggregated lint results over a set of files.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn merge(&mut self, mut other: Report) {
+        self.findings.append(&mut other.findings);
+        self.files_scanned += other.files_scanned;
+    }
+
+    /// One line per finding plus a trailing summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.to_string());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "determinism lint: {} finding(s) in {} file(s) scanned\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_findings_and_summary() {
+        let f = Finding {
+            rel: "src/a.rs".into(),
+            path: "src/a.rs".into(),
+            line: 7,
+            rule: "det-time",
+            message: "ambient clock read".into(),
+        };
+        let r = Report { findings: vec![f], files_scanned: 2 };
+        let text = r.render();
+        assert!(text.contains("src/a.rs:7: [det-time] ambient clock read"));
+        assert!(text.contains("1 finding(s) in 2 file(s)"));
+        assert!(!r.is_clean());
+
+        let mut clean = Report::default();
+        clean.merge(r);
+        assert_eq!(clean.findings.len(), 1);
+        assert_eq!(clean.files_scanned, 2);
+    }
+}

@@ -1,0 +1,543 @@
+//! The determinism-contract rules.
+//!
+//! Each rule turns one clause of the prose contract in
+//! `coordinator/mod.rs` (and EXPERIMENTS.md §Static analysis) into a
+//! line-level check over the scanner's code view. The checks are
+//! deliberately heuristic — they match the handful of source shapes
+//! that actually introduce nondeterminism, and anything intentional is
+//! annotated in place via [`super::allowlist`] so every exception
+//! carries a written justification.
+//!
+//! Rule catalogue (ids are stable; EXPERIMENTS.md documents each):
+//!
+//! * `det-hash-iter` — no `HashMap`/`HashSet` *iteration* on engine
+//!   paths. Lookup is fine; anything order-producing (`iter`, `keys`,
+//!   `values`, `drain`, `retain`, `for … in`) must use `BTreeMap`/
+//!   `BTreeSet` or an explicitly sorted vector instead.
+//! * `det-time` — no `Instant::now`/`SystemTime::now` outside
+//!   `benchlib/`, `experiments/`, and bench/test drivers: ambient time
+//!   must never reach simulated state (`sim_time_s` is derived, not
+//!   measured).
+//! * `det-float-sum` — no float `.sum()`/`.fold(` reductions outside
+//!   the blessed fixed-order kernels in `linalg/vecops.rs`;
+//!   order-independent folds (`::max`/`::min`) are exempt.
+//! * `det-unsafe-safety` — every line containing `unsafe` carries a
+//!   `// SAFETY:` comment (inline or in the comment block above;
+//!   a covered line extends to directly following `unsafe` lines).
+//! * `det-atomic` — atomic types are confined to `coordinator/`, and
+//!   every `Ordering::…` argument there has a nearby comment that
+//!   mentions "ordering" (the rationale for the chosen memory order).
+//! * `lint-allow` — meta rule: an allow annotation that is malformed,
+//!   reasonless, or names an unknown rule id.
+
+use std::collections::BTreeSet;
+
+use super::allowlist::{self, Parsed};
+use super::report::Finding;
+use super::scanner::{Line, SourceFile};
+
+pub const DET_HASH_ITER: &str = "det-hash-iter";
+pub const DET_TIME: &str = "det-time";
+pub const DET_FLOAT_SUM: &str = "det-float-sum";
+pub const DET_UNSAFE_SAFETY: &str = "det-unsafe-safety";
+pub const DET_ATOMIC: &str = "det-atomic";
+pub const LINT_ALLOW: &str = "lint-allow";
+
+/// One catalogue entry: stable id + one-line summary (shown by
+/// `choco lint --rules` and mirrored in EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: DET_HASH_ITER,
+        summary: "no HashMap/HashSet iteration on engine paths (lookup ok; use BTree/sorted)",
+    },
+    RuleInfo {
+        id: DET_TIME,
+        summary: "no Instant::now/SystemTime::now outside benchlib/experiments/bench drivers",
+    },
+    RuleInfo {
+        id: DET_FLOAT_SUM,
+        summary: "no float sum()/fold() reductions outside linalg/vecops.rs fixed-order kernels",
+    },
+    RuleInfo {
+        id: DET_UNSAFE_SAFETY,
+        summary: "every unsafe line carries a SAFETY: comment (inline or in the block above)",
+    },
+    RuleInfo {
+        id: DET_ATOMIC,
+        summary: "atomics confined to coordinator/, each Ordering arg with a rationale comment",
+    },
+    RuleInfo {
+        id: LINT_ALLOW,
+        summary: "meta: malformed, reasonless, or unknown-rule lint:allow annotation",
+    },
+];
+
+/// Is `id` an allowlistable rule id? (`lint-allow` itself is not.)
+pub fn is_rule_id(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id && r.id != LINT_ALLOW)
+}
+
+/// Run every rule over one scanned file.
+pub fn check_file(f: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let exempt = in_exempt_dir(&f.rel);
+    let coordinator = has_component(&f.rel, "coordinator");
+    let vecops = f.rel.ends_with("vecops.rs");
+    let hash_vars = collect_hash_vars(&f.lines);
+
+    // det-unsafe-safety coverage extends across directly consecutive
+    // unsafe lines (one SAFETY comment heads the contiguous block).
+    let mut prev_code_covered_unsafe = false;
+
+    for idx in 0..f.lines.len() {
+        let line = &f.lines[idx];
+        let code = line.code.as_str();
+
+        // --- lint-allow meta rule: applies everywhere, comments only.
+        match allowlist::parse(&line.comment) {
+            Parsed::Malformed(why) => out.push(finding(f, idx, LINT_ALLOW, why)),
+            Parsed::Ok(a) => {
+                for r in &a.rules {
+                    if !is_rule_id(r) {
+                        out.push(finding(f, idx, LINT_ALLOW, &format!("unknown rule id '{r}'")));
+                    }
+                }
+            }
+            Parsed::None => {}
+        }
+
+        // --- det-unsafe-safety: applies everywhere, test modules too.
+        let has_unsafe = contains_word(code, "unsafe");
+        if has_unsafe {
+            let covered = prev_code_covered_unsafe
+                || allowlist::block_has(&f.lines, idx, |c| c.contains("SAFETY:"))
+                || allowlist::is_allowed(&f.lines, idx, DET_UNSAFE_SAFETY);
+            if !covered {
+                out.push(finding(f, idx, DET_UNSAFE_SAFETY, "unsafe without a SAFETY: comment"));
+            }
+            prev_code_covered_unsafe = covered;
+        } else if !code.trim().is_empty() {
+            prev_code_covered_unsafe = false;
+        }
+
+        if line.in_test_mod || exempt {
+            continue;
+        }
+
+        // --- det-time
+        if (code.contains("Instant::now") || code.contains("SystemTime::now"))
+            && !allowlist::is_allowed(&f.lines, idx, DET_TIME)
+        {
+            out.push(finding(f, idx, DET_TIME, "ambient clock read on a deterministic path"));
+        }
+
+        // --- det-float-sum
+        if !vecops
+            && float_reduction(&f.lines, idx)
+            && !allowlist::is_allowed(&f.lines, idx, DET_FLOAT_SUM)
+        {
+            out.push(finding(
+                f,
+                idx,
+                DET_FLOAT_SUM,
+                "float reduction outside the blessed vecops kernels",
+            ));
+        }
+
+        // --- det-hash-iter
+        if hash_iteration(&f.lines, idx, &hash_vars)
+            && !allowlist::is_allowed(&f.lines, idx, DET_HASH_ITER)
+        {
+            out.push(finding(f, idx, DET_HASH_ITER, "iteration over an unordered hash container"));
+        }
+
+        // --- det-atomic
+        if !coordinator {
+            let atomic = ATOMIC_TYPES.iter().any(|t| contains_word(code, t))
+                || code.contains("sync::atomic");
+            if atomic && !allowlist::is_allowed(&f.lines, idx, DET_ATOMIC) {
+                out.push(finding(f, idx, DET_ATOMIC, "atomic use outside coordinator/"));
+            }
+        } else if ATOMIC_ORDERINGS.iter().any(|o| code.contains(o))
+            && !allowlist::block_has(&f.lines, idx, |c| c.to_lowercase().contains("ordering"))
+            && !allowlist::is_allowed(&f.lines, idx, DET_ATOMIC)
+        {
+            let msg = "memory-ordering choice without a rationale comment";
+            out.push(finding(f, idx, DET_ATOMIC, msg));
+        }
+    }
+    out
+}
+
+const ATOMIC_TYPES: &[&str] = &[
+    "AtomicUsize",
+    "AtomicU64",
+    "AtomicU32",
+    "AtomicU16",
+    "AtomicU8",
+    "AtomicBool",
+    "AtomicIsize",
+    "AtomicI64",
+    "AtomicI32",
+    "AtomicPtr",
+];
+
+const ATOMIC_ORDERINGS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+fn finding(f: &SourceFile, idx: usize, rule: &'static str, message: &str) -> Finding {
+    Finding {
+        rel: f.rel.clone(),
+        path: f.path.clone(),
+        line: idx + 1,
+        rule,
+        message: message.to_string(),
+    }
+}
+
+/// Directories whose files are experiment/bench/test *drivers* — they
+/// may read the wall clock, reduce floats for reporting, and so on.
+/// The SAFETY and allow-syntax rules still apply there.
+fn in_exempt_dir(rel: &str) -> bool {
+    let comps: Vec<&str> = rel.split('/').collect();
+    let (dirs, file) = comps.split_at(comps.len().saturating_sub(1));
+    if dirs.iter().any(|d| matches!(*d, "benches" | "tests" | "experiments" | "benchlib")) {
+        return true;
+    }
+    file.first().map(|f| *f == "main.rs").unwrap_or(false)
+}
+
+fn has_component(rel: &str, name: &str) -> bool {
+    rel.split('/').any(|c| c == name)
+}
+
+/// `pat` occurs in `code` with non-identifier chars (or edges) on both
+/// sides.
+fn contains_word(code: &str, pat: &str) -> bool {
+    find_word(code, pat, 0).is_some()
+}
+
+/// First occurrence of `pat` at/after `from` with word boundaries on
+/// both sides; returns the byte offset.
+fn find_word(code: &str, pat: &str, from: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut start = from;
+    while let Some(pos) = code.get(start..).and_then(|s| s.find(pat)) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_byte(b[at - 1]);
+        let end = at + pat.len();
+        let after_ok = end >= b.len() || !is_ident_byte(b[end]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = at + 1;
+    }
+    None
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does line `idx` perform a float `.sum()` / `.fold(` reduction? The
+/// type evidence window spans this line and the two above (turbofish,
+/// `let s: f64 = …` headers, closure signatures).
+fn float_reduction(lines: &[Line], idx: usize) -> bool {
+    let code = lines[idx].code.as_str();
+    if code.contains(".sum::<f64>") || code.contains(".sum::<f32>") {
+        return true;
+    }
+    let lo = idx.saturating_sub(2);
+    let window = lines[lo..=idx].iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join(" ");
+    let float_ty = contains_word(&window, "f64") || contains_word(&window, "f32");
+    if code.contains(".sum()") && float_ty {
+        return true;
+    }
+    if code.contains(".fold(")
+        && !code.contains("::max")
+        && !code.contains("::min")
+        && (float_ty || has_float_literal(code))
+    {
+        return true;
+    }
+    false
+}
+
+/// `1.0`-style literal anywhere in the line (digit, dot, digit).
+fn has_float_literal(code: &str) -> bool {
+    let b = code.as_bytes();
+    b.windows(3).any(|w| w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit())
+}
+
+/// Identifiers bound to (or typed as containers of) `HashMap`/`HashSet`
+/// anywhere in the file: `let` bindings on the same line, and the
+/// identifier before the `:` of a field/param/binding type that
+/// mentions the hash type (`cache: HashMap<…>`, `sets: Vec<HashSet<…>>`).
+fn collect_hash_vars(lines: &[Line]) -> BTreeSet<String> {
+    let mut vars = BTreeSet::new();
+    for line in lines {
+        let code = line.code.as_str();
+        for ty in ["HashMap", "HashSet"] {
+            let mut from = 0;
+            while let Some(at) = find_word(code, ty, from) {
+                if let Some(v) = let_ident(code) {
+                    vars.insert(v);
+                }
+                if let Some(v) = ident_before_colon(code, at) {
+                    vars.insert(v);
+                }
+                from = at + ty.len();
+            }
+        }
+    }
+    vars
+}
+
+/// The identifier bound by a `let` / `let mut` on this line.
+fn let_ident(code: &str) -> Option<String> {
+    let at = find_word(code, "let", 0)?;
+    let rest = code[at + 3..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    take_ident(rest)
+}
+
+fn take_ident(s: &str) -> Option<String> {
+    let end = s.bytes().position(|c| !is_ident_byte(c)).unwrap_or(s.len());
+    if end == 0 {
+        None
+    } else {
+        Some(s[..end].to_string())
+    }
+}
+
+/// Walk back from byte `at` to the nearest *type-position* colon,
+/// skipping `::` path separators, and return the identifier before it.
+fn ident_before_colon(code: &str, at: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut i = at;
+    loop {
+        while i > 0 && b[i - 1] != b':' {
+            i -= 1;
+        }
+        if i == 0 {
+            return None;
+        }
+        if i >= 2 && b[i - 2] == b':' {
+            i -= 2; // path '::' — keep walking left
+            continue;
+        }
+        let mut j = i - 1;
+        while j > 0 && b[j - 1] == b' ' {
+            j -= 1;
+        }
+        let mut k = j;
+        while k > 0 && is_ident_byte(b[k - 1]) {
+            k -= 1;
+        }
+        return if k < j { Some(code[k..j].to_string()) } else { None };
+    }
+}
+
+const ITER_SUFFIXES: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+];
+
+/// Does line `idx` iterate one of the known hash-container variables?
+/// The previous line is joined on (trimmed) so builder chains that
+/// break before `.into_iter()` are still seen; a match must end past
+/// the join boundary to be attributed to this line (and not doubly to
+/// the previous one).
+fn hash_iteration(lines: &[Line], idx: usize, vars: &BTreeSet<String>) -> bool {
+    if vars.is_empty() {
+        return false;
+    }
+    let prev = if idx > 0 { lines[idx - 1].code.trim_end() } else { "" };
+    let joined = format!("{}{}", prev, lines[idx].code.trim_start());
+    let boundary = prev.len();
+    for v in vars {
+        for suffix in ITER_SUFFIXES {
+            let pat = format!("{v}{suffix}");
+            let mut from = 0;
+            while let Some(at) = joined.get(from..).and_then(|s| s.find(&pat)) {
+                let at = from + at;
+                let before_ok = at == 0 || !is_ident_byte(joined.as_bytes()[at - 1]);
+                if before_ok && at + pat.len() > boundary {
+                    return true;
+                }
+                from = at + 1;
+            }
+        }
+        // `for x in map` / `for x in &map` / `for x in &mut map`
+        for prefix in ["in ", "in &", "in &mut "] {
+            let pat = format!("{prefix}{v}");
+            let mut from = 0;
+            while let Some(at) = joined.get(from..).and_then(|s| s.find(&pat)) {
+                let at = from + at;
+                let b = joined.as_bytes();
+                let before_ok = at == 0 || !is_ident_byte(b[at - 1]);
+                let end = at + pat.len();
+                let after_ok = end >= b.len() || !is_ident_byte(b[end]);
+                if before_ok && after_ok && end > boundary {
+                    return true;
+                }
+                from = at + 1;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan_str;
+    use super::*;
+    use std::path::Path;
+
+    fn check(rel: &str, src: &str) -> Vec<Finding> {
+        check_file(&scan_str(Path::new(rel), rel, src))
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn hash_iteration_fires_and_lookup_does_not() {
+        let bad = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f64>) {\n    for k in m.keys() { drop(k); }\n}";
+        assert_eq!(rules_of(&check("src/consensus/x.rs", bad)), [DET_HASH_ITER]);
+        let ok = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f64>) -> Option<&f64> {\n    m.get(&1)\n}";
+        assert!(check("src/consensus/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_seen_across_a_builder_line_break() {
+        let bad = "use std::collections::HashSet;\nfn f(sets: Vec<HashSet<usize>>) {\n    let v: Vec<_> = sets\n        .into_iter()\n        .collect();\n    drop(v);\n}";
+        let fs = check("src/topology/x.rs", bad);
+        assert_eq!(rules_of(&fs), [DET_HASH_ITER]);
+        assert_eq!(fs[0].line, 4, "attributed to the .into_iter() line");
+    }
+
+    #[test]
+    fn btree_iteration_is_fine() {
+        let ok = "use std::collections::BTreeMap;\nfn f(m: &BTreeMap<u32, f64>) {\n    for k in m.keys() { drop(k); }\n}";
+        assert!(check("src/consensus/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn ambient_time_fires_outside_drivers_only() {
+        let src = "fn f() { let t = std::time::Instant::now(); drop(t); }";
+        assert_eq!(rules_of(&check("src/coordinator/x.rs", src)), [DET_TIME]);
+        assert!(check("src/benchlib/x.rs", src).is_empty());
+        assert!(check("benches/x.rs", src).is_empty());
+        assert!(check("src/experiments/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_sum_fires_and_vecops_is_blessed() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>()\n}";
+        assert_eq!(rules_of(&check("src/models/x.rs", src)), [DET_FLOAT_SUM]);
+        assert!(check("src/linalg/vecops.rs", src).is_empty());
+    }
+
+    #[test]
+    fn typed_float_sum_without_turbofish_fires() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    let s: f64 =\n        xs.iter().sum();\n    s\n}";
+        assert_eq!(rules_of(&check("src/models/x.rs", src)), [DET_FLOAT_SUM]);
+    }
+
+    #[test]
+    fn integer_sum_and_minmax_folds_are_fine() {
+        let ok = "fn f(xs: &[u64]) -> u64 { xs.iter().sum::<u64>() }\nfn g(xs: &[f64]) -> f64 { xs.iter().copied().fold(f64::MIN, f64::max) }";
+        assert!(check("src/models/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn float_fold_fires() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().fold(0.0, |a, b| a + b)\n}";
+        assert_eq!(rules_of(&check("src/models/x.rs", src)), [DET_FLOAT_SUM]);
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment_and_blocks_extend() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules_of(&check("src/runtime/x.rs", bad)), [DET_UNSAFE_SAFETY]);
+        let ok = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}";
+        assert!(check("src/runtime/x.rs", ok).is_empty());
+        let contiguous = "fn f(a: *const u8, b: *const u8) -> u8 {\n    // SAFETY: both pointers outlive the call.\n    let x = unsafe { *a };\n    let y = unsafe { *b };\n    x + y\n}";
+        assert!(check("src/runtime/x.rs", contiguous).is_empty(), "coverage extends downward");
+    }
+
+    #[test]
+    fn unsafe_applies_even_in_tests_dir() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules_of(&check("tests/x.rs", bad)), [DET_UNSAFE_SAFETY]);
+    }
+
+    #[test]
+    fn atomics_confined_to_coordinator_with_rationale() {
+        let outside = "use std::sync::atomic::AtomicUsize;\nstatic C: AtomicUsize = AtomicUsize::new(0);";
+        assert_eq!(rules_of(&check("src/compress/x.rs", outside)), [DET_ATOMIC, DET_ATOMIC]);
+        let inside_bare = "fn f(c: &std::sync::atomic::AtomicUsize) -> usize {\n    c.load(std::sync::atomic::Ordering::Relaxed)\n}";
+        assert_eq!(rules_of(&check("src/coordinator/x.rs", inside_bare)), [DET_ATOMIC]);
+        let inside_ok = "fn f(c: &std::sync::atomic::AtomicUsize) -> usize {\n    // Relaxed ordering: the counter is monotonic and never gates visibility.\n    c.load(std::sync::atomic::Ordering::Relaxed)\n}";
+        assert!(check("src/coordinator/x.rs", inside_ok).is_empty());
+    }
+
+    #[test]
+    fn cmp_ordering_is_not_an_atomic() {
+        let ok = "use std::cmp::Ordering;\nfn f(a: u32, b: u32) -> bool { a.cmp(&b) == Ordering::Equal }";
+        assert!(check("src/coordinator/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn allow_annotation_suppresses_named_rule_only() {
+        let src = "fn f(xs: &[f64]) -> f64 {\n    // lint:allow(det-float-sum): fixed-order report helper\n    xs.iter().sum::<f64>()\n}";
+        assert!(check("src/models/x.rs", src).is_empty());
+        let wrong = "fn f(xs: &[f64]) -> f64 {\n    // lint:allow(det-time): names the wrong rule\n    xs.iter().sum::<f64>()\n}";
+        assert_eq!(rules_of(&check("src/models/x.rs", wrong)), [DET_FLOAT_SUM]);
+    }
+
+    #[test]
+    fn malformed_or_unknown_allows_are_reported() {
+        let src = "fn f() {\n    // lint:allow(det-time)\n    g();\n    // lint:allow(no-such-rule): reason text\n    h();\n}";
+        assert_eq!(rules_of(&check("src/models/x.rs", src)), [LINT_ALLOW, LINT_ALLOW]);
+    }
+
+    #[test]
+    fn inline_test_modules_are_exempt_from_engine_rules() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() -> f64 {\n        let t0 = std::time::Instant::now();\n        t0.elapsed().as_secs_f64()\n    }\n}";
+        assert!(check("src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn patterns_inside_strings_and_comments_never_fire() {
+        let src = "fn f() -> &'static str {\n    // Instant::now() would be wrong here; xs.iter().sum::<f64>() too.\n    \"Instant::now() and unsafe and AtomicUsize\"\n}";
+        assert!(check("src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn rule_catalogue_is_consistent() {
+        assert_eq!(RULES.len(), 6);
+        assert!(is_rule_id(DET_HASH_ITER));
+        assert!(!is_rule_id(LINT_ALLOW), "the meta rule is not allowlistable");
+        assert!(!is_rule_id("no-such-rule"));
+    }
+}

@@ -1,0 +1,356 @@
+//! Minimal Rust-source scanner for the determinism linter.
+//!
+//! Produces, for every line of a source file, a *code view* (comments
+//! removed, string/char-literal contents blanked) and a *comment view*
+//! (the text of `//` line comments, `///`/`//!` doc comments, and
+//! `/* … */` block comments). Rules pattern-match the code view only, so
+//! a pattern mentioned in a docstring or a string literal never fires,
+//! and they read `// SAFETY:` comments and allow annotations from the
+//! comment view.
+//!
+//! This is a heuristic lexer, not a parser. It tracks exactly the
+//! constructs that would otherwise cause false findings: nested block
+//! comments, ordinary/byte/raw string literals (including multi-line
+//! ones), char literals vs. lifetimes, and `#[cfg(test)] mod` regions
+//! (inline unit-test modules are driver code, exempt from most rules).
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One scanned source line, split into its code and comment views.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Source text with comments removed and the contents of string and
+    /// char literals blanked out (delimiters are kept).
+    pub code: String,
+    /// Concatenated comment text of this line (line, doc, and block
+    /// comments), without the `//` / `/*` markers.
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)] mod … { … }`
+    /// region. Rules other than the SAFETY check skip these lines.
+    pub in_test_mod: bool,
+}
+
+/// A scanned source file: the path it was read from, its path relative
+/// to the scan root (what rule applicability is decided on), and its
+/// per-line code/comment views.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: PathBuf,
+    /// `/`-separated path relative to the scan root.
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+/// Lexer mode carried across lines (block comments and string literals
+/// may span line boundaries).
+enum Mode {
+    Code,
+    /// Inside `/* … */`, with the current nesting depth.
+    Block(u32),
+    /// Inside an ordinary (or byte) string literal.
+    Str,
+    /// Inside a raw string literal opened with this many `#`s.
+    RawStr(u32),
+}
+
+/// Scan source text into per-line code and comment views.
+pub fn scan_str(path: &Path, rel: &str, src: &str) -> SourceFile {
+    let mut mode = Mode::Code;
+    let mut lines: Vec<Line> = Vec::new();
+    for raw in src.split('\n') {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            match mode {
+                Mode::Block(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if depth > 1 { Mode::Block(depth - 1) } else { Mode::Code };
+                        i += 2;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if chars[i] == '\\' {
+                        i += 2;
+                    } else if chars[i] == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if chars[i] == '"' && closes_raw(&chars, i + 1, hashes) {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comment.push_str(&raw[byte_offset(raw, i) + 2..]);
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if let Some(hashes) = raw_string_open(&chars, i) {
+                        code.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i += raw_open_len(&chars, i);
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        i = skip_quote(&chars, i, &mut code);
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        lines.push(Line { code, comment, in_test_mod: false });
+    }
+    mark_test_mods(&mut lines);
+    SourceFile { path: path.to_path_buf(), rel: rel.replace('\\', "/"), lines }
+}
+
+/// Scan a file from disk. `root` is only used to compute the relative
+/// path; when `path` is not under `root`, the file name alone is used.
+pub fn scan_file(root: &Path, path: &Path) -> io::Result<SourceFile> {
+    let src = fs::read_to_string(path)?;
+    let rel = path
+        .strip_prefix(root)
+        .map(|p| p.to_string_lossy().into_owned())
+        .unwrap_or_else(|_| {
+            path.file_name().map(|f| f.to_string_lossy().into_owned()).unwrap_or_default()
+        });
+    Ok(scan_str(path, &rel, &src))
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by path so the
+/// report order is stable across platforms and filesystem orders.
+pub fn rust_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            let p = entry.path();
+            if p.is_dir() {
+                // `target/` holds generated code; never scan it.
+                if p.file_name().map(|f| f == "target").unwrap_or(false) {
+                    continue;
+                }
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Char index -> byte offset, for slicing the raw line.
+fn byte_offset(s: &str, char_idx: usize) -> usize {
+    s.char_indices().nth(char_idx).map(|(b, _)| b).unwrap_or(s.len())
+}
+
+/// Does `r"`/`r#"`/`br##"` open at `i`? Returns the hash count. The
+/// char before the `r`/`b` must not be an identifier char (so variable
+/// names ending in `r` don't trigger).
+fn raw_string_open(chars: &[char], i: usize) -> Option<u32> {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Length in chars of the raw-string opener at `i` (must have matched
+/// [`raw_string_open`] first).
+fn raw_open_len(chars: &[char], i: usize) -> usize {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    j += 1; // 'r'
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    j + 1 - i // closing '"'
+}
+
+/// Does a `"` at position `end-1` close a raw string with `hashes` `#`s?
+fn closes_raw(chars: &[char], mut j: usize, hashes: u32) -> bool {
+    for _ in 0..hashes {
+        if chars.get(j) != Some(&'#') {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// Handle a `'` in code position: either a char literal (skipped, a
+/// blank `''` is emitted) or a lifetime (the quote is kept and the
+/// identifier after it flows into the code view, which is harmless).
+fn skip_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: '\n', '\'', '\u{1F600}' — the char
+        // after the backslash is content; the next quote closes.
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' {
+            j += 1;
+        }
+        code.push_str("''");
+        return (j + 1).min(chars.len());
+    }
+    if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1).is_some() {
+        // Plain char literal 'x' (covers '"' and '{' so literal
+        // delimiters in scanner-style code can't derail the lexer).
+        code.push_str("''");
+        return i + 3;
+    }
+    // Lifetime ('a, '_, 'static): keep the quote, no literal to blank.
+    code.push('\'');
+    i + 1
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Mark lines inside `#[cfg(test)] mod … { … }` regions by tracking
+/// brace depth on the code view.
+fn mark_test_mods(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut test_depth: Option<i64> = None;
+    let mut pending_cfg_test = false;
+    for line in lines.iter_mut() {
+        let code = line.code.trim();
+        if test_depth.is_none() && pending_cfg_test && code.starts_with("mod ") {
+            test_depth = Some(depth);
+        }
+        if code.contains("#[cfg(test)]") {
+            pending_cfg_test = true;
+        } else if !code.is_empty() && !code.starts_with("#[") && !code.starts_with("mod ") {
+            pending_cfg_test = false;
+        }
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(td) = test_depth {
+            line.in_test_mod = true;
+            if depth <= td {
+                test_depth = None;
+                pending_cfg_test = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(src: &str) -> SourceFile {
+        scan_str(Path::new("x.rs"), "x.rs", src)
+    }
+
+    #[test]
+    fn strips_line_and_doc_comments() {
+        let f = scan("let a = 1; // trailing note\n/// doc line\nlet b = 2;");
+        assert_eq!(f.lines[0].code.trim_end(), "let a = 1;");
+        assert_eq!(f.lines[0].comment, " trailing note");
+        assert_eq!(f.lines[1].code, "");
+        assert_eq!(f.lines[1].comment, "/ doc line");
+        assert_eq!(f.lines[2].code, "let b = 2;");
+    }
+
+    #[test]
+    fn blanks_string_contents_including_multiline() {
+        let f = scan("let s = \"Instant::now() inside a string\";\nlet t = \"spans\nlines\";");
+        assert!(!f.lines[0].code.contains("Instant"));
+        assert!(f.lines[0].code.contains("\"\""));
+        // The multi-line string stays blanked until its closing quote.
+        assert!(!f.lines[2].code.contains("lines"));
+        assert!(f.lines[2].code.ends_with(';'));
+    }
+
+    #[test]
+    fn raw_strings_with_embedded_quotes() {
+        let f = scan("let s = r#\"quote \" and HashMap.iter() text\"# ;\nlet a = 1;");
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert!(f.lines[0].code.trim_end().ends_with(';'));
+        assert_eq!(f.lines[1].code, "let a = 1;");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let f = scan("a /* one /* two */ still */ b\nc /* open\nclose */ d");
+        assert_eq!(f.lines[0].code.split_whitespace().collect::<Vec<_>>(), ["a", "b"]);
+        assert_eq!(f.lines[1].code.trim(), "c");
+        assert_eq!(f.lines[2].code.trim(), "d");
+        assert!(f.lines[1].comment.contains("open"));
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        let f = scan("if c == '\"' { x('\\''); } let l: &'static str = s;");
+        let code = &f.lines[0].code;
+        assert!(code.contains("''"), "literals blanked: {code}");
+        assert!(code.contains("&'static str"), "lifetime kept: {code}");
+        assert!(code.contains("let l"), "code after literals survives: {code}");
+    }
+
+    #[test]
+    fn cfg_test_mod_regions_are_marked() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() { body(); }\n}\nfn after() {}";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test_mod);
+        assert!(f.lines[2].in_test_mod && f.lines[3].in_test_mod && f.lines[4].in_test_mod);
+        assert!(!f.lines[5].in_test_mod);
+    }
+
+    #[test]
+    fn cfg_test_on_non_mod_item_does_not_mask() {
+        let f = scan("#[cfg(test)]\nfn helper() { body(); }\nfn real() {}");
+        assert!(f.lines.iter().all(|l| !l.in_test_mod));
+    }
+}

@@ -17,6 +17,7 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+#[derive(Debug)]
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -26,6 +27,7 @@ pub struct BenchResult {
     pub throughput: Option<f64>,
 }
 
+#[derive(Debug)]
 pub struct Harness {
     pub group: String,
     pub results: Vec<BenchResult>,

@@ -20,6 +20,7 @@ use super::CodecError;
 /// Invariant: `acc` holds `nacc < 64` valid low bits; bits at and above
 /// `nacc` are zero. `bytes.len()` is always a multiple of 8 until
 /// [`BitWriter::into_bytes`] flushes the tail.
+#[derive(Debug)]
 pub struct BitWriter {
     bytes: Vec<u8>,
     acc: u64,
@@ -120,6 +121,7 @@ impl Default for BitWriter {
 ///
 /// Invariant: `acc` holds `nacc` valid low bits (bits above are zero);
 /// `pos` is the next unread byte of the backing slice.
+#[derive(Debug)]
 pub struct BitReader<'a> {
     bytes: &'a [u8],
     pos: usize,
@@ -287,6 +289,9 @@ mod tests {
     /// reference), for arbitrary unaligned field sequences — old frames on
     /// disk or in flight stay readable and golden frame tests stay green.
     #[test]
+    // ~100k single-bit ops in the reference model — slow under Miri; the
+    // other roundtrip tests cover the same code paths there.
+    #[cfg_attr(miri, ignore)]
     fn matches_bit_at_a_time_reference() {
         struct Reference {
             bytes: Vec<u8>,

@@ -25,6 +25,7 @@ fn xor_step_bits(xor: u32) -> u64 {
 
 /// Codec 1: `dim × f32`, raw little-endian. The baseline every other dense
 /// encoding must beat to be chosen.
+#[derive(Debug)]
 pub struct DenseF32;
 
 impl Codec for DenseF32 {
@@ -69,6 +70,7 @@ impl Codec for DenseF32 {
 /// bits plus the significant bits themselves. Lossless on the f32 stream;
 /// wins on smooth / repetitive vectors, loses on white noise — the
 /// registry picks whichever of raw/XOR is smaller per message.
+#[derive(Debug)]
 pub struct DenseXor;
 
 impl Codec for DenseXor {

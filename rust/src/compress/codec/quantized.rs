@@ -15,6 +15,7 @@ use crate::compress::{Compressed, Payload};
 /// level overflows it (possible when one coordinate dominates the norm:
 /// levels reach s itself), in which case the whole frame widens by one bit
 /// per coordinate rather than clipping a level.
+#[derive(Debug)]
 pub struct QuantPack;
 
 fn quantized_parts(msg: &Compressed) -> (f64, u32, &[i32]) {
@@ -96,6 +97,7 @@ impl Codec for QuantPack {
 
 /// Codec 6: `f32 scale`, then dim × 1 bit (set = negative) — the scaled
 /// sign operator's idealized d + 32 bits, exactly.
+#[derive(Debug)]
 pub struct SignBitmapCodec;
 
 impl Codec for SignBitmapCodec {

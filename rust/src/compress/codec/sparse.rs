@@ -39,6 +39,7 @@ fn check_k(k: usize, dim: usize, r: &BitReader) -> Result<(), CodecError> {
 
 /// Codec 3: `u32 k`, then k indices at ⌈log₂ d⌉ bits each, then k × f32 —
 /// the paper's idealized top_k cost, exactly.
+#[derive(Debug)]
 pub struct SparseFlat;
 
 impl Codec for SparseFlat {
@@ -98,6 +99,7 @@ impl Codec for SparseFlat {
 /// then successive differences, all ≥ 1), then k × f32. Costs
 /// 2⌊log₂ gap⌋ + 1 bits per index — cheaper than flat whenever the gaps
 /// are small relative to d.
+#[derive(Debug)]
 pub struct SparseGamma;
 
 impl Codec for SparseGamma {

@@ -318,6 +318,14 @@ pub trait Compressor: Send + Sync {
     fn clone_box(&self) -> Box<dyn Compressor>;
 }
 
+// Trait-object Debug so `Box<dyn Compressor>` holders can `#[derive(Debug)]`
+// (the crate warns on missing_debug_implementations).
+impl std::fmt::Debug for dyn Compressor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Compressor({})", self.name())
+    }
+}
+
 pub use ops::{
     parse_compressor, DropP, Identity, QsgdS, RandK, Rescaled, ScaledSign, TopK,
 };

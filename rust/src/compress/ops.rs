@@ -484,6 +484,7 @@ impl Compressor for ScaledSign {
 /// (§5.1). The rescaled operator violates Assumption 1's contraction for
 /// small k (variance blows up by d/k) — exactly the effect the paper
 /// observes when Q2-G diverges under rand_1%.
+#[derive(Debug)]
 pub struct Rescaled {
     pub inner: Box<dyn Compressor>,
     pub factor: f64,

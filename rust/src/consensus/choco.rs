@@ -59,6 +59,7 @@ thread_local! {
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
+#[derive(Debug)]
 pub struct ChocoNode {
     x: Vec<f64>,
     /// hᵢ = xᵢ − x̂ᵢ.

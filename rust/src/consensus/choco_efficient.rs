@@ -18,6 +18,7 @@ use crate::compress::{Compressed, Compressor};
 use crate::topology::LocalWeights;
 use crate::util::rng::Rng;
 
+#[derive(Debug)]
 pub struct ChocoEfficientNode {
     x: Vec<f64>,
     xhat: Vec<f64>,

@@ -23,6 +23,7 @@ use crate::compress::{Compressed, Compressor};
 use crate::topology::LocalWeights;
 use crate::util::rng::Rng;
 
+#[derive(Debug)]
 pub struct ChocoReplicaNode {
     x: Vec<f64>,
     /// Own public estimate x̂ᵢ.

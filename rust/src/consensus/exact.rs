@@ -7,6 +7,7 @@ use crate::compress::{Compressed, Payload};
 use crate::topology::LocalWeights;
 use crate::util::rng::Rng;
 
+#[derive(Debug)]
 pub struct ExactNode {
     x: Vec<f64>,
     weights: LocalWeights,

@@ -19,6 +19,7 @@ use crate::util::rng::Rng;
 /// Dense matrix-form CHOCO-Gossip state. Columns are nodes; stored as an
 /// n×d row-per-node matrix for cache friendliness (transposed relative to
 /// the paper's d×n notation).
+#[derive(Debug)]
 pub struct MatrixChoco {
     /// Row i = xᵢ.
     pub x: DenseMatrix,

@@ -17,6 +17,7 @@ use crate::topology::LocalWeights;
 use crate::util::rng::Rng;
 
 /// (Q1-G) node. γ = 1 per the paper.
+#[derive(Debug)]
 pub struct Q1Node {
     x: Vec<f64>,
     weights: LocalWeights,
@@ -73,6 +74,7 @@ impl GossipNode for Q1Node {
 }
 
 /// (Q2-G) node. γ = 1 per the paper.
+#[derive(Debug)]
 pub struct Q2Node {
     x: Vec<f64>,
     weights: LocalWeights,

@@ -50,6 +50,7 @@ pub struct Snapshot {
 /// not exercised.
 pub const DEFAULT_MAX_NODE_THREADS: usize = 1024;
 
+#[derive(Debug)]
 pub struct ActorConfig {
     pub rounds: usize,
     /// Snapshot cadence (0 = only final states).

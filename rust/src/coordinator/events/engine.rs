@@ -28,6 +28,7 @@ use std::rc::Rc;
 
 /// What the queue carries. Broadcast payloads are `Rc`-shared across the
 /// out-edges of one fire (one allocation per broadcast, not per edge).
+#[derive(Debug)]
 enum Event {
     /// Node `node` fires its next local gossip step. `epoch` lazily
     /// cancels fires scheduled before the node's last leave: a stale
@@ -47,6 +48,7 @@ enum Event {
 
 /// Deterministic discrete-event runtime over the same [`GossipNode`]
 /// population the BSP engines drive.
+#[derive(Debug)]
 pub struct EventEngine<'g> {
     pub nodes: Vec<Box<dyn GossipNode>>,
     pub graph: &'g Graph,
@@ -228,6 +230,8 @@ impl<'g> EventEngine<'g> {
     /// finalized — `sim_time_s` is the drain time, `rounds` the largest
     /// per-node step count.
     pub fn run(&mut self) {
+        // lint:allow(det-time): wall-clock feeds cpu_time_s accounting
+        // only; simulated time (`self.now`) drives every event.
         let start = std::time::Instant::now();
         while self.step_event() {}
         self.acct.sim_time_s = self.now;
@@ -251,6 +255,8 @@ impl<'g> EventEngine<'g> {
         mut metric: MetricFn<'_>,
     ) -> Trace {
         assert!(every_s > 0.0 && every_s.is_finite(), "bad checkpoint interval {every_s}");
+        // lint:allow(det-time): wall-clock feeds cpu_time_s accounting
+        // only; checkpoints key on simulated time.
         let start = std::time::Instant::now();
         let mut trace = Trace::new(name, &["time_s", "fires", "bits", "metric"]);
         let m0 = metric(&self.nodes);

@@ -80,6 +80,7 @@ impl<E> Ord for Scheduled<E> {
 }
 
 /// Deterministic event queue: earliest `(time, phase, seq)` pops first.
+#[derive(Debug)]
 pub struct EventQueue<E> {
     heap: BinaryHeap<Scheduled<E>>,
     next_seq: u64,

@@ -74,6 +74,35 @@
 //!   changes wall-clock only; `tests/engine_equivalence.rs` re-locks
 //!   bit-identity between [`sharded::Scheduler::Static`] and stealing
 //!   at shard counts {1, 2, 7, n}.
+//!
+//! **Static enforcement.** The contract above is machine-checked by the
+//! in-repo determinism linter ([`crate::analysis`], run as
+//! `choco lint --strict`, blocking in CI). The rule ids map onto the
+//! clauses of this contract:
+//!
+//! * `det-hash-iter` — no iteration over `HashMap`/`HashSet` may feed
+//!   simulation state: iteration order is randomized per process, which
+//!   would break the bit-identical equivalence guarantee. Use `BTreeMap`/
+//!   `BTreeSet` or sort before consuming.
+//! * `det-time` — wall-clock reads (`Instant::now`, `SystemTime`) must
+//!   never influence a trajectory; simulated time (`EventEngine::now`)
+//!   is the only clock the model sees. Accounting-only timers carry a
+//!   `det-time` allow annotation stating exactly that.
+//! * `det-float-sum` — float reductions are order-sensitive; every
+//!   `.sum()`/`.fold()` over floats in simulation code is annotated with
+//!   the fixed order it relies on (e.g. ascending original neighbor id,
+//!   the delivery-order clause above). Never "optimize" an annotated
+//!   reduction into a different association.
+//! * `det-atomic` — atomics inside `coordinator/` must justify their
+//!   `Ordering` in an adjacent comment (the stealing cursors' `Relaxed`
+//!   claims are the canonical example); atomics anywhere else in the
+//!   simulation layers are flagged outright.
+//! * `det-unsafe-safety` — every `unsafe` site carries a contiguous
+//!   `// SAFETY:` comment; the slot-arena aliasing argument in
+//!   [`sharded`] is the largest audited surface. Nightly CI additionally
+//!   runs Miri over the codec/RNG/event-queue tests and ThreadSanitizer
+//!   over the engine-equivalence differentials (see EXPERIMENTS.md
+//!   §Static analysis & sanitizers).
 
 pub mod actor;
 pub mod events;

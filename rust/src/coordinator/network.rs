@@ -80,6 +80,7 @@ fn fold(h: u64, v: u64) -> u64 {
 
 /// Per-link network decisions over a graph. Stateless across rounds: all
 /// randomness is derived from `(seed, round, edge)` keys.
+#[derive(Debug)]
 pub struct NetworkSim {
     pub model: LinkModel,
     seed: u64,

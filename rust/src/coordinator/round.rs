@@ -19,6 +19,7 @@ use crate::util::rng::Rng;
 /// Metric evaluated on the current iterates at log points.
 pub type MetricFn<'a> = Box<dyn FnMut(&[Box<dyn GossipNode>]) -> f64 + 'a>;
 
+#[derive(Debug)]
 pub struct RoundConfig {
     pub rounds: usize,
     /// Log every k rounds (row 0 is always logged before the first round).
@@ -35,6 +36,7 @@ impl Default for RoundConfig {
     }
 }
 
+#[derive(Debug)]
 pub struct RoundEngine<'g> {
     pub nodes: Vec<Box<dyn GossipNode>>,
     pub graph: &'g Graph,
@@ -74,6 +76,8 @@ impl<'g> RoundEngine<'g> {
     /// One BSP round: broadcast → deliver (through the link model) →
     /// update. Returns the bits shipped this round.
     pub fn step(&mut self) -> u64 {
+        // lint:allow(det-time): wall-clock feeds cpu_time_s accounting
+        // only — it never influences the trajectory.
         let start = std::time::Instant::now();
         let t = self.t;
         let msgs = phases::broadcast_all(&mut self.nodes, &mut self.rngs, t);

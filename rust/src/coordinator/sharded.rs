@@ -107,7 +107,7 @@ struct SlotBank {
     slots: Vec<UnsafeCell<Compressed>>,
 }
 
-// Safety: see the protocol above — writers are disjoint per index and
+// SAFETY: see the protocol above — writers are disjoint per index and
 // always separated from readers by a barrier.
 unsafe impl Sync for SlotBank {}
 
@@ -116,17 +116,21 @@ impl SlotBank {
         Self { slots: (0..n).map(|_| UnsafeCell::new(Compressed::empty())).collect() }
     }
 
-    /// Safety: caller must be the unique writer of slot `p` this phase,
+    /// SAFETY: caller must be the unique writer of slot `p` this phase,
     /// with no concurrent readers (readers wait at the phase barrier).
     #[allow(clippy::mut_from_ref)]
     unsafe fn slot_mut(&self, p: usize) -> &mut Compressed {
-        &mut *self.slots[p].get()
+        // SAFETY: unique writer per the contract above, so the exclusive
+        // borrow cannot alias a reader or another writer.
+        unsafe { &mut *self.slots[p].get() }
     }
 
-    /// Safety: caller must be past the barrier that retired all writers of
+    /// SAFETY: caller must be past the barrier that retired all writers of
     /// this bank, with no writer active until the next barrier.
     unsafe fn read(&self, p: usize) -> &Compressed {
-        &*self.slots[p].get()
+        // SAFETY: every writer retired at the barrier per the contract
+        // above, so the shared borrow is race-free.
+        unsafe { &*self.slots[p].get() }
     }
 }
 
@@ -199,7 +203,7 @@ struct JobCell {
     ctx: *const RunCtx,
 }
 
-// Safety: the raw ctx pointer is only dereferenced by workers between job
+// SAFETY: the raw ctx pointer is only dereferenced by workers between job
 // publication and the completion handshake, while the dispatching thread
 // keeps the pointee alive (`WorkerPool::run` blocks until every worker
 // reports done).
@@ -267,7 +271,7 @@ impl WorkerPool {
     /// Publish `ctx` to the pool and block until every worker finishes
     /// the job. Returns the first panic payload caught, if any.
     ///
-    /// Safety: everything `ctx` points to must stay valid for the whole
+    /// SAFETY: everything `ctx` points to must stay valid for the whole
     /// call, and the slot/shard protocol (disjoint writes,
     /// barrier-separated reads) must hold for its `nodes`/`banks`/`accts`
     /// pointers.
@@ -326,7 +330,7 @@ fn worker_loop(state: &PoolState, w: usize, lo: usize, hi: usize) {
             seen = job.epoch;
             job.ctx
         };
-        // Safety: the dispatching thread keeps the ctx (and everything it
+        // SAFETY: the dispatching thread keeps the ctx (and everything it
         // points to) alive until this worker bumps `finished` below.
         let ctx = unsafe { &*ctx_ptr };
         let waited = std::cell::Cell::new(0usize);
@@ -356,7 +360,7 @@ fn worker_loop(state: &PoolState, w: usize, lo: usize, hi: usize) {
 /// streams and degrees key on the original id, so neither relabeling nor
 /// the claiming worker changes the bytes produced.
 ///
-/// Safety: the caller must be the unique processor of slot `p` this
+/// SAFETY: the caller must be the unique processor of slot `p` this
 /// phase (fixed range or stealing claim), with this bank's readers held
 /// at the phase barrier and the dispatcher not touching nodes/rngs while
 /// the job is live.
@@ -370,9 +374,15 @@ unsafe fn broadcast_slot(
     ra: &mut RoundAcct,
 ) {
     let i = order[p];
-    let node = &mut *ctx.nodes.add(i);
-    let rng = &mut *ctx.rngs.add(i);
-    let slot = bank.slot_mut(p);
+    // SAFETY: slot `p` maps to vertex `i = order[p]` bijectively, and this
+    // caller is its unique processor this phase, so the node borrow is
+    // exclusive; the dispatcher keeps the array alive for the whole job.
+    let node = unsafe { &mut *ctx.nodes.add(i) };
+    // SAFETY: as above — one claimant per slot means one borrow per rng.
+    let rng = unsafe { &mut *ctx.rngs.add(i) };
+    // SAFETY: unique writer of slot `p` this phase (fn contract), readers
+    // held at the phase barrier.
+    let slot = unsafe { bank.slot_mut(p) };
     phases::broadcast_into(node.as_mut(), t, rng, slot);
     if ctx.measure_wire {
         ra.note_sender_encoded(slot, graph.degree(i));
@@ -383,7 +393,7 @@ unsafe fn broadcast_slot(
 /// *original* neighbor id — the serial accumulation order) and update
 /// vertex `order[p]`.
 ///
-/// Safety: the caller must be the unique processor of slot `p` this
+/// SAFETY: the caller must be the unique processor of slot `p` this
 /// phase, past the barrier that retired all of this bank's writers, with
 /// no writer active on it until the next barrier.
 unsafe fn deliver_update_slot(
@@ -397,9 +407,14 @@ unsafe fn deliver_update_slot(
     ra: &mut RoundAcct,
 ) {
     let i = order[p];
-    let node = &mut *ctx.nodes.add(i);
+    // SAFETY: unique processor of slot `p` this phase (fn contract), so
+    // the node borrow is exclusive; the dispatcher keeps the array alive
+    // for the whole job.
+    let node = unsafe { &mut *ctx.nodes.add(i) };
     for &(j, jslot) in view.in_edges(p) {
-        let msg = bank.read(jslot as usize);
+        // SAFETY: the phase barrier retired every writer of this bank
+        // before any read (fn contract).
+        let msg = unsafe { bank.read(jslot as usize) };
         phases::deliver_edge(node.as_mut(), net, t, j as usize, i, msg, ra);
     }
     phases::update_one(node.as_mut(), t);
@@ -429,7 +444,7 @@ fn run_shard(
     hi: usize,
     waited: &std::cell::Cell<usize>,
 ) {
-    // Safety: shared read-only state for the duration of the job.
+    // SAFETY: shared read-only state for the duration of the job.
     let graph = unsafe { &*ctx.graph };
     let net = unsafe { &*ctx.net };
     let view = unsafe { &*ctx.view };
@@ -437,7 +452,7 @@ fn run_shard(
     let order = unsafe { std::slice::from_raw_parts(ctx.order, ctx.n) };
     let cursors = match ctx.scheduler {
         Scheduler::Static => &[] as &[AtomicUsize],
-        // Safety: the dispatcher sized the cursor array to 2k and reset
+        // SAFETY: the dispatcher sized the cursor array to 2k and reset
         // it before publishing the job.
         Scheduler::Stealing => unsafe { std::slice::from_raw_parts(ctx.cursors, 2 * ctx.k) },
     };
@@ -450,28 +465,32 @@ fn run_shard(
         let mut ra = RoundAcct::default();
         match ctx.scheduler {
             Scheduler::Static => {
-                // Safety (both loops): this worker owns slots [lo, hi)
-                // exclusively for the lifetime of the pool.
                 for p in lo..hi {
+                    // SAFETY: this worker owns slots [lo, hi) exclusively
+                    // for the lifetime of the pool.
                     unsafe { broadcast_slot(ctx, bank, graph, order, t, p, &mut ra) };
                 }
                 barrier.wait();
                 waited.set(waited.get() + 1);
                 for p in lo..hi {
+                    // SAFETY: same exclusive [lo, hi) ownership, now past
+                    // the barrier that retired this bank's writers.
                     unsafe { deliver_update_slot(ctx, bank, net, view, order, t, p, &mut ra) };
                 }
             }
             Scheduler::Stealing => {
-                // Safety (both loops): fetch_add hands out disjoint,
-                // exhaustive slot ranges — each slot is processed by
-                // exactly one claimant per phase.
                 let cur = &cursors[2 * r];
                 loop {
+                    // Relaxed ordering suffices for the claim cursor: it
+                    // only partitions slots between workers; slot-data
+                    // visibility is ordered by the phase barrier.
                     let start = cur.fetch_add(ctx.claim, Ordering::Relaxed);
                     if start >= ctx.n {
                         break;
                     }
                     for p in start..(start + ctx.claim).min(ctx.n) {
+                        // SAFETY: fetch_add hands out disjoint, exhaustive
+                        // ranges — exactly one claimant per slot per phase.
                         unsafe { broadcast_slot(ctx, bank, graph, order, t, p, &mut ra) };
                     }
                 }
@@ -479,11 +498,15 @@ fn run_shard(
                 waited.set(waited.get() + 1);
                 let cur = &cursors[2 * r + 1];
                 loop {
+                    // Relaxed ordering: same claim-cursor argument as the
+                    // broadcast phase above.
                     let start = cur.fetch_add(ctx.claim, Ordering::Relaxed);
                     if start >= ctx.n {
                         break;
                     }
                     for p in start..(start + ctx.claim).min(ctx.n) {
+                        // SAFETY: disjoint stealing claims, past the
+                        // barrier that retired this bank's writers.
                         unsafe {
                             deliver_update_slot(ctx, bank, net, view, order, t, p, &mut ra)
                         };
@@ -495,7 +518,7 @@ fn run_shard(
                 waited.set(waited.get() + 1);
             }
         }
-        // Safety: this worker is the unique writer of row w of the
+        // SAFETY: this worker is the unique writer of row w of the
         // workers × k accounting grid.
         unsafe { *ctx.accts.add(w * ctx.k + r) = ra };
     }
@@ -634,6 +657,8 @@ impl<'g> ShardedEngine<'g> {
             self.acct.rounds += k;
             return;
         }
+        // lint:allow(det-time): wall-clock feeds cpu_time_s accounting
+        // only — it never influences the trajectory.
         let start = std::time::Instant::now();
         let workers = self.pool.workers();
         if self.accts.len() < workers * k {
@@ -647,6 +672,8 @@ impl<'g> ShardedEngine<'g> {
                 self.cursors.resize_with(2 * k, || AtomicUsize::new(0));
             }
             for c in &self.cursors[..2 * k] {
+                // Relaxed ordering: the job-mutex handshake publishes the
+                // zeroed cursors to the workers, not this store.
                 c.store(0, Ordering::Relaxed);
             }
         }
@@ -667,7 +694,7 @@ impl<'g> ShardedEngine<'g> {
             t0: self.t,
             measure_wire: self.measure_wire,
         };
-        // Safety: `ctx` and everything it points to outlive the call (the
+        // SAFETY: `ctx` and everything it points to outlive the call (the
         // pool blocks until all workers post done), and the worker loop
         // upholds the slot/shard aliasing protocol.
         let panicked = unsafe { self.pool.run(&ctx) };
@@ -709,6 +736,17 @@ impl<'g> ShardedEngine<'g> {
     /// executing on the persistent pool.
     pub fn run(&mut self, name: &str, cfg: &RoundConfig, metric: MetricFn<'_>) -> Trace {
         phases::run_traced(self, name, cfg, metric)
+    }
+}
+
+impl std::fmt::Debug for ShardedEngine<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedEngine")
+            .field("n", &self.nodes.len())
+            .field("t", &self.t)
+            .field("scheduler", &self.scheduler)
+            .field("workers", &self.pool.workers())
+            .finish_non_exhaustive()
     }
 }
 

@@ -22,6 +22,7 @@ pub struct Dataset {
 }
 
 /// Borrowed view of a single sample.
+#[derive(Debug)]
 pub enum Sample<'a> {
     Dense(&'a [f64]),
     Sparse(SparseRow<'a>),

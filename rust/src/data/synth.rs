@@ -147,7 +147,9 @@ pub fn rcv1_like(cfg: &SparseSynthConfig) -> Dataset {
         if rng.bernoulli(cfg.label_noise) {
             y = -y;
         }
-        // L2-normalize the row (rcv1 rows are unit-normalized)
+        // L2-normalize the row (rcv1 rows are unit-normalized).
+        // lint:allow(det-float-sum): sum runs in the row's fixed
+        // ascending-feature order, identical on every rebuild.
         let norm: f64 = entries.iter().map(|(_, v)| v * v).sum::<f64>().sqrt();
         for e in entries.iter_mut() {
             e.1 /= norm;

@@ -16,6 +16,7 @@ use crate::linalg::vecops;
 use crate::topology::{uniform_local_weights, Graph, SparseMixing};
 
 /// Paper configuration: ring n=25, d=2000, x⁽⁰⁾ = first n epsilon vectors.
+#[derive(Debug)]
 pub struct ConsensusSetup {
     pub graph: Graph,
     pub weights: Vec<crate::topology::LocalWeights>,

@@ -18,6 +18,7 @@ use crate::optim::{make_optim_nodes, NativeGrad, OptimScheme, Schedule};
 use crate::topology::{uniform_local_weights, Graph};
 
 /// A prepared decentralized logreg problem.
+#[derive(Debug)]
 pub struct SgdProblem {
     pub graph: Graph,
     pub weights: Vec<crate::topology::LocalWeights>,

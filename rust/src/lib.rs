@@ -23,6 +23,15 @@
 //! Quickstart: see `examples/quickstart.rs`, or run
 //! `cargo run --release -- repro fig2`.
 
+// Determinism-contract hardening (see `analysis` and EXPERIMENTS.md
+// §Static analysis & sanitizers): every unsafe operation inside an
+// `unsafe fn` must sit in its own `unsafe {}` block with its own
+// SAFETY: comment, and public types expose Debug so engine state is
+// inspectable in differential-test failures.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_debug_implementations)]
+
+pub mod analysis;
 pub mod benchlib;
 pub mod compress;
 pub mod consensus;

@@ -136,12 +136,16 @@ impl DenseMatrix {
         }
         let n = self.rows;
         for r in 0..n {
+            // lint:allow(det-float-sum): validation-only row sum in fixed
+            // index order (result is a tolerance check, not state).
             let s: f64 = self.row(r).iter().sum();
             if (s - 1.0).abs() > tol {
                 return false;
             }
         }
         for c in 0..n {
+            // lint:allow(det-float-sum): validation-only column sum in
+            // fixed index order.
             let s: f64 = (0..n).map(|r| self.get(r, c)).sum();
             if (s - 1.0).abs() > tol {
                 return false;

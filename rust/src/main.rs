@@ -10,6 +10,7 @@
 //!       [--topology ring] [--nodes 9] [--rounds 1000] [--gamma 0.04]
 //! choco e2e       [--artifact transformer_step_tiny] [--nodes 4] [--steps 60]
 //! choco artifacts
+//! choco lint      [--strict] [--root rust] [--rules] [file.rs ...]
 //! ```
 
 use choco::compress::parse_compressor;
@@ -38,6 +39,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("artifacts") => cmd_artifacts(),
+        Some("lint") => cmd_lint(&args),
         Some(other) => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
         None => {
             println!("{USAGE}");
@@ -50,7 +52,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: choco <repro|spectrum|consensus|train|e2e|artifacts> [flags]
+const USAGE: &str = "usage: choco <repro|spectrum|consensus|train|e2e|artifacts|lint> [flags]
   repro <id|all>   reproduce a paper figure/table (fig2..fig9, table1..table4, speedup),
                    'scale' — sharded vs serial CHOCO-GOSSIP at n=1024..16384,
                    or 'async' — event-driven CHOCO under latency/stragglers/loss/churn
@@ -58,7 +60,10 @@ const USAGE: &str = "usage: choco <repro|spectrum|consensus|train|e2e|artifacts>
   consensus        run one consensus experiment
   train            run one decentralized training experiment
   e2e              decentralized transformer training through PJRT artifacts
-  artifacts        list AOT artifacts";
+  artifacts        list AOT artifacts
+  lint             determinism-contract lint over src/, benches/, tests/
+                   (--strict exits nonzero on findings; --rules lists the
+                   rule catalogue; explicit .rs paths lint just those files)";
 
 fn opts_from(args: &Args) -> Result<ExpOptions, String> {
     Ok(ExpOptions {
@@ -251,6 +256,39 @@ fn cmd_e2e(args: &Args) -> Result<(), String> {
     let kpct = args.f64_or("k-pct", 10.0)?;
     let out: std::path::PathBuf = args.get_or("out", "results").into();
     choco::experiments::e2e::run_transformer_e2e(artifact, n, steps, gamma, lr, kpct, &out)
+}
+
+/// `choco lint` — run the determinism-contract linter (src/analysis/).
+///
+/// Default scan roots are `src/`, `benches/`, `tests/` under `--root`
+/// (which defaults to the current directory, i.e. `rust/` in CI).
+/// Explicit positional `.rs` paths lint just those files — that is how
+/// CI asserts the committed positive fixtures still fail the gate.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    use choco::analysis;
+    if args.flag("rules") {
+        for r in analysis::RULES {
+            println!("{:<18} {}", r.id, r.summary);
+        }
+        return Ok(());
+    }
+    let root: std::path::PathBuf = args.get_or("root", ".").into();
+    let explicit: Vec<std::path::PathBuf> =
+        args.positional_from(1).iter().map(std::path::PathBuf::from).collect();
+    let report = if explicit.is_empty() {
+        analysis::lint_root(&root)?
+    } else {
+        analysis::lint_files(&root, &explicit)?
+    };
+    print!("{}", report.render());
+    if report.is_clean() {
+        Ok(())
+    } else if args.flag("strict") {
+        Err(format!("determinism lint failed with {} finding(s)", report.findings.len()))
+    } else {
+        eprintln!("(advisory mode: pass --strict to fail on findings)");
+        Ok(())
+    }
 }
 
 fn cmd_artifacts() -> Result<(), String> {

@@ -9,7 +9,7 @@ use super::Objective;
 use crate::data::Dataset;
 use crate::util::rng::Rng;
 
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct LogisticRegression {
     pub data: Dataset,
     /// L2 regularization coefficient λ.

@@ -36,9 +36,18 @@ pub trait Objective: Send + Sync {
     fn smoothness(&self) -> f64;
 }
 
+// Trait-object Debug so `Box<dyn Objective>` holders can `#[derive(Debug)]`.
+impl std::fmt::Debug for dyn Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Objective(dim={})", self.dim())
+    }
+}
+
 /// Average loss across workers evaluated at a common point:
 /// `f(x) = (1/n) Σᵢ fᵢ(x)` of problem (1).
 pub fn global_loss(objectives: &[Box<dyn Objective>], x: &[f64]) -> f64 {
+    // lint:allow(det-float-sum): sequential sum in fixed worker order —
+    // the slice order is the reduction order.
     objectives.iter().map(|o| o.loss(x)).sum::<f64>() / objectives.len() as f64
 }
 

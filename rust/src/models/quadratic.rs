@@ -8,7 +8,7 @@
 use super::Objective;
 use crate::util::rng::Rng;
 
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct QuadraticConsensus {
     pub center: Vec<f64>,
     /// Additive gaussian gradient noise σ (models stochastic gradients).
@@ -32,6 +32,8 @@ impl QuadraticConsensus {
         let fstar = workers
             .iter()
             .map(|w| 0.5 * crate::linalg::vecops::dist_sq(&xstar, &w.center))
+            // lint:allow(det-float-sum): closed-form reference value,
+            // summed in fixed worker order.
             .sum::<f64>()
             / n;
         (xstar, fstar)

@@ -8,6 +8,7 @@
 
 use super::{global_gradient, global_loss, Objective};
 
+#[derive(Debug)]
 pub struct FstarResult {
     pub x_star: Vec<f64>,
     pub f_star: f64,

@@ -9,6 +9,7 @@
 use super::{GradientSource, Schedule};
 use crate::util::rng::Rng;
 
+#[derive(Debug)]
 pub struct MiniBatchSgd {
     pub x: Vec<f64>,
     sources: Vec<Box<dyn GradientSource>>,
@@ -59,6 +60,8 @@ impl MiniBatchSgd {
     }
 
     pub fn loss(&self) -> f64 {
+        // lint:allow(det-float-sum): sequential sum over the fixed worker
+        // list — the reduction order is the list order itself.
         self.sources.iter().map(|s| s.loss(&self.x)).sum::<f64>() / self.sources.len() as f64
     }
 }

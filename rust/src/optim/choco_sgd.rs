@@ -20,6 +20,7 @@ use crate::consensus::GossipNode;
 use crate::topology::LocalWeights;
 use crate::util::rng::Rng;
 
+#[derive(Debug)]
 pub struct ChocoSgdNode {
     x: Vec<f64>,
     half: Vec<f64>,

@@ -23,6 +23,7 @@ use crate::consensus::GossipNode;
 use crate::topology::LocalWeights;
 use crate::util::rng::Rng;
 
+#[derive(Debug)]
 pub struct EcdNode {
     x: Vec<f64>,
     xhat: Vec<f64>,

@@ -44,7 +44,16 @@ pub trait GradientSource: Send {
     fn loss(&self, x: &[f64]) -> f64;
 }
 
+// Trait-object Debug so `Box<dyn GradientSource>` holders can
+// `#[derive(Debug)]`.
+impl std::fmt::Debug for dyn GradientSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GradientSource(dim={})", self.dim())
+    }
+}
+
 /// Native gradient source: any objective.
+#[derive(Debug)]
 pub struct NativeGrad {
     pub objective: Box<dyn Objective>,
 }
@@ -64,6 +73,7 @@ impl GradientSource for NativeGrad {
 }
 
 /// Optimizer selector used by drivers and the CLI.
+#[derive(Debug)]
 pub enum OptimScheme {
     /// Algorithm 3 (exact communication).
     Plain { schedule: Schedule },

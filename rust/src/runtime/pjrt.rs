@@ -10,6 +10,7 @@ use super::artifacts::{ArtifactInfo, DType, Manifest};
 use std::collections::HashMap;
 
 /// Input tensor for an execution (host-side, row-major).
+#[derive(Debug)]
 pub enum Tensor {
     F32(Vec<f32>),
     I32(Vec<i32>),
@@ -43,7 +44,19 @@ pub struct PjrtEngine {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+// SAFETY: see the Send rationale in the struct docs above — each engine
+// exclusively owns its client (and cache); nothing is shared between
+// threads, so moving the whole engine is sound.
 unsafe impl Send for PjrtEngine {}
+
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtEngine")
+            .field("artifacts_dir", &self.manifest.dir)
+            .field("cached_executables", &self.cache.len())
+            .finish_non_exhaustive()
+    }
+}
 
 impl PjrtEngine {
     /// Create an engine over the given artifacts directory.

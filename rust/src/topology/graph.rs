@@ -6,7 +6,7 @@
 //! own deployment shapes.
 
 use crate::util::rng::Rng;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// Undirected communication graph on nodes `0..n`. Self-loops are implicit
 /// (every gossip scheme includes `{i} ∈ E`) and not stored.
@@ -26,7 +26,11 @@ impl Graph {
     /// Build from an edge list (undirected; duplicates and self-loops are
     /// ignored).
     pub fn from_edges(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
-        let mut sets: Vec<HashSet<usize>> = vec![HashSet::new(); n];
+        // BTreeSet, not HashSet: deduplication in a structure whose
+        // iteration order is the sorted-adjacency invariant itself, so the
+        // build never depends on hash-seed or insertion order
+        // (determinism-contract rule det-hash-iter).
+        let mut sets: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
         for &(a, b) in edges {
             assert!(a < n && b < n, "edge ({a},{b}) out of range for n={n}");
             if a != b {
@@ -34,14 +38,8 @@ impl Graph {
                 sets[b].insert(a);
             }
         }
-        let mut adj: Vec<Vec<usize>> = sets
-            .into_iter()
-            .map(|s| {
-                let mut v: Vec<usize> = s.into_iter().collect();
-                v.sort_unstable();
-                v
-            })
-            .collect();
+        let mut adj: Vec<Vec<usize>> =
+            sets.into_iter().map(|s| s.into_iter().collect()).collect();
         adj.iter_mut().for_each(|v| v.shrink_to_fit());
         Self { n, adj, name: name.to_string(), grid_dims: None }
     }
@@ -406,6 +404,29 @@ mod tests {
         assert_eq!(Graph::grid2d(2, 7).grid_dims(), Some((2, 7)));
         assert_eq!(Graph::ring(8).grid_dims(), None);
         assert_eq!(Graph::hypercube(3).grid_dims(), None);
+    }
+
+    #[test]
+    fn adjacency_is_insertion_order_independent() {
+        // Determinism-contract regression: the same edge set presented in
+        // two different (seeded-shuffle) orders, with duplicates, must
+        // produce byte-identical adjacency — the build may not leak any
+        // container iteration order into the graph.
+        let base = Graph::erdos_renyi(30, 0.2, &mut Rng::new(7)).edges();
+        let mut doubled: Vec<(usize, usize)> = base.clone();
+        doubled.extend(base.iter().map(|&(a, b)| (b, a)));
+        let mut other = doubled.clone();
+        // Fisher–Yates with a differently-seeded RNG.
+        let mut rng = Rng::new(99);
+        for i in (1..other.len()).rev() {
+            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+            other.swap(i, j);
+        }
+        let g1 = Graph::from_edges(30, &doubled, "a");
+        let g2 = Graph::from_edges(30, &other, "b");
+        for i in 0..30 {
+            assert_eq!(g1.neighbors(i), g2.neighbors(i), "adjacency of node {i} diverged");
+        }
     }
 
     #[test]

@@ -61,6 +61,8 @@ pub fn mixing_matrix(graph: &Graph, rule: MixingRule) -> DenseMatrix {
                 }
             }
             for i in 0..n {
+                // lint:allow(det-float-sum): ascending-column row sum —
+                // the order the bit-identical O(|E|) path mirrors.
                 let row_sum: f64 = w.row(i).iter().sum();
                 w.set(i, i, 1.0 - row_sum);
             }
@@ -73,6 +75,8 @@ pub fn mixing_matrix(graph: &Graph, rule: MixingRule) -> DenseMatrix {
                 }
             }
             for i in 0..n {
+                // lint:allow(det-float-sum): same fixed ascending-column
+                // order as the Uniform arm above.
                 let row_sum: f64 = w.row(i).iter().sum();
                 w.set(i, i, 1.0 - row_sum);
             }
@@ -115,6 +119,8 @@ pub fn uniform_local_weights(graph: &Graph) -> Vec<LocalWeights> {
             // Mirror the dense construction exactly: w_ii = 1 − Σ_j w_ij
             // with the same (ascending-neighbor) summation order, so the
             // two paths agree bit-for-bit, zeros contributing nothing.
+            // lint:allow(det-float-sum): that fixed ascending-neighbor
+            // order is itself the determinism guarantee.
             let row_sum: f64 = neighbors.iter().map(|&(_, w)| w).sum();
             LocalWeights { self_weight: 1.0 - row_sum, neighbors }
         })
@@ -136,6 +142,8 @@ pub fn metropolis_local_weights(graph: &Graph) -> Vec<LocalWeights> {
                 .collect();
             // Same ascending-neighbor summation order as the dense path
             // (zeros contribute exact +0.0), so the rows agree bitwise.
+            // lint:allow(det-float-sum): fixed ascending-neighbor order,
+            // property-tested against the dense construction.
             let row_sum: f64 = neighbors.iter().map(|&(_, w)| w).sum();
             LocalWeights { self_weight: 1.0 - row_sum, neighbors }
         })

@@ -146,6 +146,7 @@ pub fn schedule_order(g: &Graph, chunk: usize) -> Vec<usize> {
 /// performs in its deliver phase, laid out as one contiguous CSR so
 /// delivery walks a flat array instead of chasing `order`/`pos` lookups
 /// per edge.
+#[derive(Debug)]
 pub struct ShardView {
     offsets: Vec<usize>,
     pairs: Vec<(u32, u32)>,

@@ -150,6 +150,8 @@ impl SparseMixing {
         let n = self.n();
         for i in 0..n {
             let row = self.csr.row(i);
+            // lint:allow(det-float-sum): validation-only row sum in the
+            // CSR row's fixed ascending-index order.
             let sum: f64 = row.values.iter().sum();
             if (sum - 1.0).abs() > tol {
                 return Err(format!("row {i} of W sums to {sum}, not 1 (tol {tol})"));

@@ -101,6 +101,14 @@ impl Args {
         }
     }
 
+    /// Positional arguments after the first `n` — e.g. trailing file
+    /// paths after the subcommand word (`choco lint a.rs b.rs`). Note
+    /// that a positional following a bare boolean flag is consumed as
+    /// that flag's value, so trailing paths go *before* any flags.
+    pub fn positional_from(&self, n: usize) -> &[String] {
+        self.positional.get(n..).unwrap_or(&[])
+    }
+
     /// Keys the caller never consumed — useful for typo detection.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.options.keys().map(|s| s.as_str())
@@ -172,6 +180,15 @@ mod tests {
         // silent misparsing.
         let c = parse(&["--nodes", "--9"]);
         assert!(c.usize_or("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_positionals() {
+        let a = parse(&["lint", "a.rs", "b.rs", "--strict"]);
+        assert_eq!(a.subcommand(), Some("lint"));
+        assert_eq!(a.positional_from(1), ["a.rs", "b.rs"]);
+        assert!(a.flag("strict"));
+        assert!(a.positional_from(9).is_empty());
     }
 
     #[test]

@@ -7,6 +7,7 @@ use std::io::{BufWriter, Write};
 use std::path::Path;
 
 /// Streaming CSV writer with a fixed header.
+#[derive(Debug)]
 pub struct CsvWriter {
     out: BufWriter<File>,
     ncols: usize,

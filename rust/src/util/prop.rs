@@ -11,6 +11,7 @@ use crate::util::rng::Rng;
 
 /// Input generator handed to properties: an RNG plus a size hint that the
 /// shrinker lowers on failure.
+#[derive(Debug)]
 pub struct Gen {
     pub rng: Rng,
     /// Soft upper bound on the "size" of generated structures (vector

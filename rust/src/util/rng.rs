@@ -214,6 +214,8 @@ mod tests {
     }
 
     #[test]
+    // 70k draws: statistical, not memory-model, coverage — skip under Miri.
+    #[cfg_attr(miri, ignore)]
     fn next_below_unbiased_range() {
         let mut r = Rng::new(5);
         let mut counts = [0usize; 7];
@@ -227,6 +229,8 @@ mod tests {
     }
 
     #[test]
+    // 200k draws: statistical, not memory-model, coverage — skip under Miri.
+    #[cfg_attr(miri, ignore)]
     fn gaussian_moments() {
         let mut r = Rng::new(11);
         let n = 200_000;

@@ -49,7 +49,12 @@ static ALLOCS: AtomicU64 = AtomicU64::new(0);
 /// Serializes armed windows across tests (the counter is process-global).
 static GATE: Mutex<()> = Mutex::new(());
 
+// SAFETY: pure pass-through to the system allocator — every method
+// forwards its exact arguments to `System`, which upholds the
+// `GlobalAlloc` contract; the counter bump has no side effect on layout
+// or pointers.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds the `GlobalAlloc` contract; forwarded as-is.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if ARMED.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
@@ -57,10 +62,12 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.alloc(layout)
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc` contract; forwarded as-is.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc` contract; forwarded as-is.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if ARMED.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
@@ -68,6 +75,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller upholds the `GlobalAlloc` contract; forwarded as-is.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         if ARMED.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
